@@ -1,0 +1,79 @@
+"""Shared benchmark utilities: ledgers, short synthetic training runs."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import TBNPolicy, bwnn_policy, fp32_policy, tbn_policy
+from repro.models.paper import build_paper_model
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def ledger_for(name: str, policy: TBNPolicy, **kw):
+    ctx = ModelContext(policy=policy, compute_dtype=jnp.float32)
+    build_paper_model(name, ctx, **kw)
+    return ctx.ledger.report()
+
+
+def policies(p: int, lam: int = 64_000, alpha_source="A", alpha_mode="tile"):
+    return {
+        "fp32": fp32_policy(),
+        "bwnn": bwnn_policy(),
+        f"tbn{p}": tbn_policy(p=p, min_size=lam, alpha_source=alpha_source,
+                              alpha_mode=alpha_mode),
+    }
+
+
+def train_classifier(
+    model, params, data_fn, *, steps=150, lr=1e-3, eval_batches=8,
+    log=False,
+) -> float:
+    """Short AdamW run on synthetic labeled data; returns eval accuracy."""
+    from repro.optim import adamw, constant
+    from repro.train.step import build_train_step, init_state
+
+    opt = adamw(constant(lr))
+
+    def loss_fn(p, batch):
+        logits = model(p, batch["x"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold), {}
+
+    step = jax.jit(build_train_step(loss_fn, opt))
+    state = init_state(params, opt)
+    for i in range(steps):
+        state, metrics = step(state, data_fn(i))
+        if log and i % 50 == 0:
+            print(f"    step {i} loss {float(metrics['loss']):.3f}")
+    correct = total = 0
+    for i in range(eval_batches):
+        b = data_fn(10_000 + i)
+        pred = jnp.argmax(model(state.params, b["x"]), axis=-1)
+        correct += int(jnp.sum(pred == b["y"]))
+        total += b["y"].shape[0]
+    return correct / total
+
+
+def save_rows(name: str, rows: List[dict]):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+
+
+def fmt_table(rows: List[dict], cols: List[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    out = ["  ".join(c.ljust(widths[c]) for c in cols)]
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(out)

@@ -1,0 +1,71 @@
+"""Figure 6 — effect of layer size: ConvMixer vs MLPMixer across
+compression rates. Two halves:
+
+  1. exact bits/param + parameter counts at PAPER scale per p in
+     {4, 8, 16, 32} (ConvMixer's biggest layer is 65k -> lambda leaves
+     most of it untiled; MLPMixer's 131k layers keep compressing), and
+  2. reduced-scale synthetic accuracy per p (the degradation ORDERING:
+     ConvMixer falls off faster past p=4 because its layers are small).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (fmt_table, ledger_for, save_rows,
+                               train_classifier)
+from repro.core.policy import fp32_policy, tbn_policy
+from repro.models.paper import build_paper_model
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+
+
+def reduced_accuracy(name, policy, steps):
+    from repro.data.synthetic import image_like
+
+    ctx = ModelContext(policy=policy, compute_dtype=jnp.float32)
+    if name == "convmixer":
+        model = build_paper_model(name, ctx, dim=32, depth=4, kernel=4,
+                                  patch=2, img=16, classes=8)
+    else:
+        model = build_paper_model(name, ctx, dim=64, depth=3, patch=4,
+                                  img=16, classes=8, token_hidden=32,
+                                  chan_hidden=32)
+    params = mod.init_params(model.specs(), jax.random.PRNGKey(0))
+
+    def data(step):
+        x, y = image_like(0, step, 32, 16, 8)
+        return {"x": x, "y": y}
+
+    return train_classifier(model, params, data, steps=steps)
+
+
+def run(quick: bool = False):
+    rows = []
+    for name in ("convmixer", "mlpmixer"):
+        for p in (4, 8, 16, 32):
+            pol = tbn_policy(p=p, min_size=64_000, alpha_source="A")
+            rep = ledger_for(name, pol)
+            rows.append(dict(model=name, p=p,
+                             bits=round(rep.bits_per_param(), 3),
+                             mbit=round(rep.mbit(), 3),
+                             savings=f"{rep.savings_vs_binary():.1f}x"))
+    steps = 40 if quick else 120
+    for name in ("convmixer", "mlpmixer"):
+        base = reduced_accuracy(name, fp32_policy(), steps)
+        accs = {"fp32": round(base, 3)}
+        for p in (4, 16):
+            accs[f"tbn{p}"] = round(
+                reduced_accuracy(
+                    name, tbn_policy(p=p, min_size=256, alpha_source="A"),
+                    steps),
+                3)
+        rows.append(dict(model=f"{name}-reduced-acc", **accs))
+    save_rows("fig6_layer_size", rows)
+    print(fmt_table(rows, ["model", "p", "bits", "mbit", "savings",
+                           "fp32", "tbn4", "tbn16"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Figures 7/8 — hyperparameter ablation on a reduced MLPMixer:
+
+  1. global tiling (lambda=0) vs minimum-layer-size lambda,
+  2. alpha from W vs from the separate tensor A,
+  3. single alpha per layer vs one per tile.
+
+The paper's finding: lambda matters a lot (global tiling clearly worst);
+W+A and multi-alpha give small gains."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, save_rows, train_classifier
+from repro.core.policy import tbn_policy
+from repro.models.paper import build_paper_model
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+
+
+def accuracy(policy, steps):
+    from repro.data.synthetic import image_like
+
+    ctx = ModelContext(policy=policy, compute_dtype=jnp.float32)
+    model = build_paper_model("mlpmixer", ctx, dim=64, depth=3, patch=4,
+                              img=16, classes=8, token_hidden=64,
+                              chan_hidden=64)
+    params = mod.init_params(model.specs(), jax.random.PRNGKey(0))
+
+    def data(step):
+        x, y = image_like(0, step, 32, 16, 8)
+        return {"x": x, "y": y}
+
+    return train_classifier(model, params, data, steps=steps)
+
+
+CONFIGS = {
+    # name -> (min_size, alpha_source, alpha_mode)
+    "lambda+A+multi": (1024, "A", "tile"),      # paper default/best
+    "lambda+W+multi": (1024, "W", "tile"),
+    "lambda+A+single": (1024, "A", "layer"),
+    "global+A+multi": (0, "A", "tile"),         # global tiling (worst)
+}
+
+
+def run(quick: bool = False):
+    steps = 40 if quick else 150
+    rows = []
+    for name, (lam, src, mode) in CONFIGS.items():
+        pol = tbn_policy(p=4, min_size=lam, alpha_source=src,
+                         alpha_mode=mode)
+        acc = accuracy(pol, steps)
+        rows.append(dict(config=name, min_size=lam, alpha_source=src,
+                         alpha_mode=mode, accuracy=round(acc, 3)))
+    save_rows("fig7_hparams", rows)
+    print(fmt_table(rows, ["config", "min_size", "alpha_source",
+                           "alpha_mode", "accuracy"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1_cnn]
+
+Prints ``name,seconds,rows`` CSV lines plus each benchmark's table;
+row-level JSON lands under results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = [
+    "table1_cnn",
+    "table2_bitops",
+    "table3_pointnet",
+    "table4_vit",
+    "table5_timeseries",
+    "table6_mcu",
+    "table7_inference_memory",
+    "fig6_layer_size",
+    "fig7_hparams",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short training runs (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else BENCHES
+    summary = []
+    failures = 0
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=args.quick)
+            dt = time.time() - t0
+            summary.append((name, dt, len(rows)))
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            summary.append((name, time.time() - t0, -1))
+    print("\nname,seconds,rows")
+    for name, dt, n in summary:
+        print(f"{name},{dt:.1f},{n}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Table 1 — CNN compression: bit-width, #Params (M-bit), savings.
+
+Exact accounting from the layer ledger at FULL model size (instantiation
+only; no training). The paper's own numbers are carried alongside for
+comparison. Accuracy at full CIFAR/ImageNet scale is out of scope on this
+host — the trainability *ordering* claim is validated on synthetic data in
+fig6/fig7 and the quickstart example.
+"""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, ledger_for, save_rows
+from repro.core.policy import bwnn_policy, tbn_policy
+
+# (model, kwargs, paper rows {method: (bitwidth, mbit, acc)})
+PAPER = {
+    "resnet18": {
+        "bwnn": (1.0, 10.99, 92.9), "tbn4": (0.256, 2.85, 93.1),
+        "tbn8": (0.131, 1.46, 92.4), "tbn16": (0.069, 0.77, 91.2)},
+    "resnet50": {
+        "bwnn": (1.0, 23.45, 93.2), "tbn4": (0.259, 6.10, 94.9),
+        "tbn8": (0.136, 3.21, 94.3), "tbn16": (0.075, 1.76, 93.5)},
+    "vgg-small": {
+        "bwnn": (1.0, 4.656, 91.3), "tbn4": (0.288, 1.340, 92.6),
+        "tbn8": (0.131, 0.722, 91.5), "tbn16": (0.117, 0.520, 90.2)},
+    "resnet34-imagenet": {
+        "bwnn": (1.0, 21.09, 70.4), "tbn2": (0.53, 11.13, 68.9)},
+}
+
+
+def run(quick: bool = False):
+    rows = []
+    for model, kw, ps, lam in [
+        ("resnet18", {}, (4, 8, 16), 64_000),
+        ("resnet50", {}, (4, 8, 16), 64_000),
+        ("vgg-small", {}, (4, 8, 16), 64_000),
+        ("resnet34", dict(imagenet=True, classes=1000), (2,), 150_000),
+    ]:
+        key = "resnet34-imagenet" if kw.get("imagenet") else model
+        rep = ledger_for(model, bwnn_policy(), **kw)
+        paper_b = PAPER[key]["bwnn"]
+        rows.append(dict(
+            model=key, method="bwnn", bits_per_param=1.0,
+            mbit=round(rep.universe_params / 1e6, 3),
+            paper_mbit=paper_b[1], paper_acc=paper_b[2]))
+        for p in ps:
+            pol = tbn_policy(p=p, min_size=lam, alpha_source="A",
+                             alpha_mode="tile")
+            rep = ledger_for(model, pol, **kw)
+            ref = PAPER[key].get(f"tbn{p}", (None, None, None))
+            rows.append(dict(
+                model=key, method=f"tbn{p}",
+                bits_per_param=round(rep.bits_per_param(), 3),
+                mbit=round(rep.mbit(), 3),
+                savings=f"{rep.savings_vs_binary():.1f}x",
+                paper_bits=ref[0], paper_mbit=ref[1], paper_acc=ref[2]))
+    save_rows("table1_cnn", rows)
+    print(fmt_table(rows, ["model", "method", "bits_per_param", "mbit",
+                           "savings", "paper_bits", "paper_mbit"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Table 2 — Bit-ops of ResNets: full-precision vs binary vs TBN.
+
+MACs per conv = weight params x output spatial positions (resolution
+walked analytically per family); binary ops = MACs of binarized layers;
+TBN executes one tile replica and replicates output channels, so tiled
+layers cost MACs / p (the paper's Section 4.1 observation). Units: G-ops.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_rows
+from repro.core.policy import tbn_policy
+from repro.models.paper import ResNet
+from repro.nn.context import ModelContext
+import jax.numpy as jnp
+
+PAPER = {  # (fp G-flops x32^2 scale aside, binary G-ops, tbn G-ops, saving)
+    ("resnet18", 4): (35.03, 0.547, 0.082),
+    ("resnet50", 4): (78.12, 1.22, 0.155),
+    ("resnet34", 2): (225.66, 3.526, 0.58),
+}
+
+
+def conv_macs(model: ResNet, imagenet: bool):
+    """[(name, params, out_hw, tiled_p)] resolution walk."""
+    res = 56 if imagenet else 32    # post stem (+pool for imagenet)
+    out = []
+    ledger = {r.name: r for r in model.ctx.ledger.records}
+    stem = ledger["stem"]
+    stem_hw = (112 if imagenet else 32) ** 2
+    out.append(("stem", stem.n, stem_hw, stem.spec.p if stem.spec else 1))
+    for name, c_mid, stride, c_out in model.block_names:
+        res = res // stride
+        for suffix in ([".c1", ".c2"] if model.kind == "basic"
+                       else [".c1", ".c2", ".c3"]) + [".down"]:
+            rec = ledger.get(name + suffix)
+            if rec is None:
+                continue
+            out.append((name + suffix, rec.n, res * res,
+                        rec.spec.p if rec.spec else 1))
+    head = ledger["head"]
+    out.append(("head", head.n, 1, head.spec.p if head.spec else 1))
+    return out
+
+
+def run(quick: bool = False):
+    rows = []
+    for depth, p, imagenet, lam in [(18, 4, False, 64_000),
+                                    (50, 4, False, 64_000),
+                                    (34, 2, True, 150_000)]:
+        pol = tbn_policy(p=p, min_size=lam, alpha_source="A")
+        ctx = ModelContext(policy=pol, compute_dtype=jnp.float32)
+        kw = dict(imagenet=imagenet, classes=1000 if imagenet else 10)
+        model = ResNet(depth, ctx, **kw)
+        macs = conv_macs(model, imagenet)
+        total = sum(n * hw for _, n, hw, _ in macs)
+        binary_ops = total                       # 1 bit-op per MAC
+        tbn_ops = sum(n * hw / pp for _, n, hw, pp in macs)
+        key = (f"resnet{depth}", p)
+        paper = PAPER[key]
+        rows.append(dict(
+            model=f"resnet{depth}" + ("-imagenet" if imagenet else ""),
+            p=p,
+            fp_gflops=round(32 * 32 * total / 1e9, 2),
+            binary_gops=round(binary_ops / 1e9, 3),
+            tbn_gops=round(tbn_ops / 1e9, 3),
+            saving=f"{binary_ops / tbn_ops:.1f}x",
+            paper_binary=paper[1], paper_tbn=paper[2],
+            paper_saving=f"{paper[1] / paper[2]:.1f}x",
+        ))
+    save_rows("table2_bitops", rows)
+    print(fmt_table(rows, ["model", "p", "binary_gops", "tbn_gops", "saving",
+                           "paper_binary", "paper_tbn", "paper_saving"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Table 3 — PointNet bits accounting (cls / part / sem) + a short
+synthetic point-cloud training check (clustered point clouds; validates
+the TBN_4 ~ BWNN ordering at reduced scale)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, ledger_for, save_rows, train_classifier
+from repro.core.policy import bwnn_policy, fp32_policy, tbn_policy
+from repro.models.paper import build_paper_model
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+
+PAPER = {
+    ("cls", "bwnn"): (1.0, 3.48, 89.20), ("cls", "tbn4"): (0.259, 0.90, 88.67),
+    ("cls", "tbn8"): (0.136, 0.47, 87.20),
+    ("part", "bwnn"): (1.0, 8.34, 76.1), ("part", "tbn4"): (0.340, 2.68, 76.3),
+    ("part", "tbn8"): (0.207, 1.73, 75.1),
+    ("sem", "bwnn"): (1.0, 3.53, 69.50), ("sem", "tbn4"): (0.431, 1.52, 67.55),
+    ("sem", "tbn8"): (0.337, 1.19, 65.70),
+}
+
+TASKS = {
+    "cls": dict(task="cls", classes=40, widths=(64, 64, 64, 128, 1024)),
+    "part": dict(task="part", classes=50, widths=(64, 128, 128, 512, 2048)),
+    "sem": dict(task="sem", classes=13, widths=(64, 64, 64, 128, 1024)),
+}
+
+
+def synthetic_cls_accuracy(policy, steps=120):
+    """Tiny PointNet on clustered synthetic clouds."""
+    from repro.data.synthetic import point_cloud
+
+    ctx = ModelContext(policy=policy, compute_dtype=jnp.float32)
+    model = build_paper_model(
+        "pointnet", ctx, task="cls", classes=8,
+        widths=(16, 16, 16, 32, 64))
+    params = mod.init_params(model.specs(), jax.random.PRNGKey(0))
+
+    def data(step):
+        pts, labels = point_cloud(0, step, 32, 64, 8)
+        return {"x": pts, "y": labels}
+
+    return train_classifier(model, params, data, steps=steps)
+
+
+def run(quick: bool = False):
+    rows = []
+    for task, kw in TASKS.items():
+        rep = ledger_for("pointnet", bwnn_policy(), **kw)
+        rows.append(dict(task=task, method="bwnn", bits=1.0,
+                         mbit=round(rep.universe_params / 1e6, 3),
+                         paper_mbit=PAPER[(task, "bwnn")][1]))
+        for p in (4, 8):
+            pol = tbn_policy(p=p, min_size=64_000, alpha_source="A")
+            rep = ledger_for("pointnet", pol, **kw)
+            ref = PAPER[(task, f"tbn{p}")]
+            rows.append(dict(task=task, method=f"tbn{p}",
+                             bits=round(rep.bits_per_param(), 3),
+                             mbit=round(rep.mbit(), 3),
+                             savings=f"{rep.savings_vs_binary():.1f}x",
+                             paper_bits=ref[0], paper_mbit=ref[1]))
+    steps = 40 if quick else 120
+    accs = {}
+    for mode, pol in [("fp32", fp32_policy()), ("bwnn", bwnn_policy()),
+                      ("tbn4", tbn_policy(p=4, min_size=2048, alpha_source="A"))]:
+        accs[mode] = synthetic_cls_accuracy(pol, steps)
+    rows.append(dict(task="synthetic-cls(reduced)", method="acc-ordering",
+                     **{f"acc_{k}": round(v, 3) for k, v in accs.items()}))
+    save_rows("table3_pointnet", rows)
+    print(fmt_table(rows[:-1], ["task", "method", "bits", "mbit", "savings",
+                                "paper_bits", "paper_mbit"]))
+    print("synthetic reduced-scale accuracy:", rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

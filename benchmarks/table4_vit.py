@@ -1,0 +1,69 @@
+"""Table 4 — Vision Transformers (ViT, Swin-lite): bits accounting +
+reduced-scale synthetic image-classification ordering check."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, ledger_for, save_rows, train_classifier
+from repro.core.policy import bwnn_policy, fp32_policy, tbn_policy
+from repro.models.paper import build_paper_model
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+
+PAPER = {
+    ("vit", "bwnn"): (1.0, 9.50, 82.2), ("vit", "tbn4"): (0.253, 2.40, 82.7),
+    ("vit", "tbn8"): (0.129, 1.22, 82.1),
+    ("swin-lite", "bwnn"): (1.0, 26.60, 85.8),
+    ("swin-lite", "tbn4"): (0.259, 6.88, 85.8),
+    ("swin-lite", "tbn8"): (0.135, 3.61, 84.6),
+}
+
+
+def synthetic_vit_accuracy(policy, steps=120):
+    from repro.data.synthetic import image_like
+
+    ctx = ModelContext(policy=policy, compute_dtype=jnp.float32)
+    model = build_paper_model("vit", ctx, dim=64, depth=2, heads=4,
+                              mlp_dim=64, patch=4, img=16, classes=8)
+    params = mod.init_params(model.specs(), jax.random.PRNGKey(0))
+
+    def data(step):
+        x, y = image_like(0, step, 32, 16, 8)
+        return {"x": x, "y": y}
+
+    return train_classifier(model, params, data, steps=steps)
+
+
+def run(quick: bool = False):
+    rows = []
+    for name in ("vit", "swin-lite"):
+        rep = ledger_for(name, bwnn_policy())
+        rows.append(dict(model=name, method="bwnn", bits=1.0,
+                         mbit=round(rep.universe_params / 1e6, 3),
+                         paper_mbit=PAPER[(name, "bwnn")][1]))
+        for p in (4, 8):
+            pol = tbn_policy(p=p, min_size=64_000, alpha_source="A")
+            rep = ledger_for(name, pol)
+            ref = PAPER[(name, f"tbn{p}")]
+            rows.append(dict(model=name, method=f"tbn{p}",
+                             bits=round(rep.bits_per_param(), 3),
+                             mbit=round(rep.mbit(), 3),
+                             savings=f"{rep.savings_vs_binary():.1f}x",
+                             paper_bits=ref[0], paper_mbit=ref[1]))
+    steps = 40 if quick else 120
+    accs = {}
+    for mode, pol in [("fp32", fp32_policy()), ("bwnn", bwnn_policy()),
+                      ("tbn4", tbn_policy(p=4, min_size=2048, alpha_source="A"))]:
+        accs[mode] = synthetic_vit_accuracy(pol, steps)
+    rows.append(dict(model="synthetic-vit(reduced)", method="acc-ordering",
+                     **{f"acc_{k}": round(v, 3) for k, v in accs.items()}))
+    save_rows("table4_vit", rows)
+    print(fmt_table(rows[:-1], ["model", "method", "bits", "mbit", "savings",
+                                "paper_bits", "paper_mbit"]))
+    print("synthetic reduced-scale accuracy:", rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

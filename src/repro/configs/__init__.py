@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell, cell_applicable
+
+_MODULES: Dict[str, str] = {
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2p7b",
+    "granite-8b": "repro.configs.granite_8b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "qwen1.5-32b": "repro.configs.qwen1p5_32b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    key = name.replace("_", "-")
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[key]).CONFIG
+
+
+def build_model(cfg: ArchConfig, ctx=None):
+    """Instantiate the right model family for a config."""
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecModel
+
+        return EncDecModel(cfg, ctx)
+    from repro.models.lm import DecoderLM
+
+    return DecoderLM(cfg, ctx)
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeCell",
+    "build_model",
+    "cell_applicable",
+    "get_config",
+]

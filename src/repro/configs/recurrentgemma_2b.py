@@ -1,0 +1,29 @@
+"""recurrentgemma-2b — Griffin hybrid: RG-LRU + local attention, 1:2.
+
+[arXiv:2402.19427] 26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000,
+sliding window 2048, block cycle (rec, rec, attn). Sub-quadratic:
+runs long_500k (RG-LRU state + bounded window cache).
+"""
+from repro.configs.base import ArchConfig
+from repro.core.policy import tbn_policy
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv=1,
+    d_ff=7680,
+    vocab=256_000,
+    pattern=("rec", "rec", "attn"),
+    # 10 heads do not divide the 16-way model axis -> sequence-sharded
+    # attention activations (EXPERIMENTS.md §Dry-run memory sweeps).
+    attn_act="seq",
+    window=2048,
+    activation="gelu",
+    gated_mlp=True,
+    norm="rmsnorm",
+    subquadratic=True,
+    tbn=tbn_policy(p=8, min_size=150_000, alpha_source="W", alpha_mode="tile"),
+)

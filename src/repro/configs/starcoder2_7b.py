@@ -1,0 +1,28 @@
+"""starcoder2-7b — GQA + RoPE code model, GELU MLP, LayerNorm.
+
+[arXiv:2402.19173] 32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152.
+"""
+from repro.configs.base import ArchConfig
+from repro.core.policy import tbn_policy
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv=4,
+    d_ff=18_432,
+    vocab=49_152,
+    activation="gelu",
+    gated_mlp=False,
+    norm="layernorm",
+    qkv_bias=True,
+    # 36 heads do not divide the 16-way model axis -> sequence-sharded
+    # attention + ZeRO-3 weight gathering; microbatch x2
+    # (EXPERIMENTS.md §Dry-run memory sweeps).
+    attn_act="seq",
+    fsdp_weights=True,
+    grad_accum=2,
+    tbn=tbn_policy(p=8, min_size=150_000, alpha_source="W", alpha_mode="tile"),
+)

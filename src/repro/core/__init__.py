@@ -1,0 +1,44 @@
+"""TBN core: the paper's primary contribution as composable JAX modules."""
+from repro.core.bits import BitsReport, LayerLedger, LayerRecord
+from repro.core.collapse import collapsed_chain_reference, fold_consumer_weight
+from repro.core.packing import (
+    pack_bits,
+    pack_bits_np,
+    packed_len,
+    storage_bytes,
+    unpack_bits,
+)
+from repro.core.policy import (
+    BWNN,
+    FP32,
+    TBN,
+    TBNPolicy,
+    bwnn_policy,
+    fp32_policy,
+    tbn_policy,
+)
+from repro.core.tiling import (
+    TileSpec,
+    aggregate,
+    compute_alpha,
+    construct_binary,
+    expand_alpha,
+    export_tile,
+    fold_inputs_reference,
+    plan_tiling,
+    reconstruct_from_tile,
+    tile_as_matrix,
+    tile_vector,
+    tiled_matmul_reference,
+    tiled_weight,
+)
+
+__all__ = [
+    "BitsReport", "LayerLedger", "LayerRecord",
+    "collapsed_chain_reference", "fold_consumer_weight",
+    "pack_bits", "pack_bits_np", "packed_len", "storage_bytes", "unpack_bits",
+    "BWNN", "FP32", "TBN", "TBNPolicy", "bwnn_policy", "fp32_policy", "tbn_policy",
+    "TileSpec", "aggregate", "compute_alpha", "construct_binary", "expand_alpha",
+    "export_tile", "fold_inputs_reference", "plan_tiling", "reconstruct_from_tile",
+    "tile_as_matrix", "tile_vector", "tiled_matmul_reference", "tiled_weight",
+]

@@ -1,0 +1,139 @@
+"""Bit-width / parameter / bit-ops accounting (paper Tables 1-5).
+
+Accounting policy (matches the paper's):
+  * universe = binarizable parameters only (conv + fully-connected weights;
+    biases, norm scales and embeddings are excluded — "We do not consider
+    bias parameters").
+  * full-precision row: 32 bits per parameter in the universe.
+  * BWNN row: 1 bit per parameter (+ 32 per alpha scalar).
+  * TBN_p row: q bits + 32 * n_alpha per tiled layer; un-tiled binarizable
+    layers (below lambda) contribute 1 bit per parameter.
+  * "savings" column = bits(BWNN) / bits(TBN) — the blue numbers of Table 1.
+
+Bit-ops (Table 2): one MAC against a binary weight = 1 bit-op. Tiled layers
+with aligned tiles execute only 1/p of their MACs (replicated output
+channels / rows are computed once and broadcast).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policy import BWNN, FP32, TBN, TBNPolicy
+from repro.core.tiling import TileSpec
+
+
+@dataclasses.dataclass
+class LayerRecord:
+    """One quantizable layer's accounting entry."""
+
+    name: str
+    kind: str                      # dense | conv | embedding | norm | head
+    shape: Tuple[int, ...]
+    spec: Optional[TileSpec]       # None => not tiled
+    binarized: bool                # BWNN'd when not tiled
+    macs: int = 0                  # multiply-accumulates per forward pass
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape))
+
+    def stored_bits(self) -> int:
+        if self.spec is not None:
+            return self.spec.stored_bits
+        if self.binarized:
+            return self.n + 32  # + one XNOR-style layer alpha
+        return 32 * self.n
+
+    def bitops(self) -> float:
+        if self.spec is not None and self.spec.aligned_rows:
+            return self.macs / self.spec.p
+        return float(self.macs)
+
+
+@dataclasses.dataclass
+class BitsReport:
+    layers: List[LayerRecord]
+
+    @property
+    def universe_params(self) -> int:
+        """Binarizable parameter count (the paper's #Params denominator)."""
+        return sum(r.n for r in self.layers if r.kind in ("dense", "conv", "head"))
+
+    def total_bits(self) -> int:
+        return sum(r.stored_bits() for r in self.layers if r.kind in ("dense", "conv", "head"))
+
+    def mbit(self) -> float:
+        return self.total_bits() / 1e6
+
+    def bits_per_param(self) -> float:
+        u = self.universe_params
+        return self.total_bits() / u if u else 0.0
+
+    def savings_vs_binary(self) -> float:
+        """The paper's blue 'savings' factor: 1-bit model bits / our bits."""
+        u = self.universe_params
+        return u / self.total_bits() if self.total_bits() else 0.0
+
+    def total_bitops(self) -> float:
+        return sum(r.bitops() for r in self.layers if r.kind in ("dense", "conv", "head"))
+
+    def rows(self) -> List[dict]:
+        return [
+            dict(
+                name=r.name,
+                kind=r.kind,
+                shape=list(r.shape),
+                params=r.n,
+                tiled=r.spec is not None,
+                p=(r.spec.p if r.spec else 1),
+                q=(r.spec.q if r.spec else None),
+                stored_bits=r.stored_bits(),
+                macs=r.macs,
+                bitops=r.bitops(),
+            )
+            for r in self.layers
+        ]
+
+    def summary(self, name: str = "") -> dict:
+        return dict(
+            model=name,
+            universe_params=self.universe_params,
+            mbit=round(self.mbit(), 3),
+            bits_per_param=round(self.bits_per_param(), 4),
+            savings_vs_binary=round(self.savings_vs_binary(), 2),
+            gbitops=round(self.total_bitops() / 1e9, 4),
+        )
+
+
+class LayerLedger:
+    """Collected while a model instantiates its layers under a TBNPolicy."""
+
+    def __init__(self, policy: TBNPolicy):
+        self.policy = policy
+        self.records: List[LayerRecord] = []
+
+    def note(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        *,
+        kind: str = "dense",
+        spec: Optional[TileSpec] = None,
+        macs: int = 0,
+    ) -> None:
+        self.records.append(
+            LayerRecord(
+                name=name,
+                kind=kind,
+                shape=tuple(int(d) for d in shape),
+                spec=spec,
+                binarized=self.policy.binarize(kind) and spec is None,
+                macs=int(macs),
+            )
+        )
+
+    def report(self) -> BitsReport:
+        return BitsReport(list(self.records))

@@ -1,0 +1,63 @@
+"""Beyond-paper: algebraic collapse of tile replication through ReLU MLPs.
+
+alpha scalars are L1 means, hence non-negative, so for any positive-
+homogeneous activation phi (ReLU, leaky-ReLU, identity):
+
+    phi(kron(alpha, u)) = kron(alpha, phi(u))
+
+and a subsequent (dense, possibly tiled) layer W2 absorbs the replication
+through its contraction:
+
+    W2 @ kron(alpha, u) = (sum_i alpha_i * W2[:, i*r:(i+1)*r]) @ u
+
+So a chain  x -> TiledDense(W1) -> relu -> Dense/TiledDense(W2) -> ...
+never needs the p-replicated activations: each layer passes the *unique*
+r-dim activation forward and the consumer pre-folds alpha into its own
+weight columns once at load time. End-to-end this removes the p× FLOP and
+activation-memory overhead that the paper's kernel only removes for weight
+*storage*. (See DESIGN.md §2.)
+
+Only the last tiled layer before a non-homogeneous op (softmax head, norm,
+GELU) must materialize the replication.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import TileSpec
+
+
+def fold_consumer_weight(
+    w2: jax.Array, alpha: jax.Array, producer_spec: TileSpec
+) -> jax.Array:
+    """Pre-fold a consumer weight (n_out2, n_out1) across the producer's tiles.
+
+    Returns (n_out2, r) where r = n_out1 / p:   w2_folded = sum_i alpha_i * W2[:, blk_i].
+    Works for alpha_mode "layer" (scalar broadcast) and "tile".
+    """
+    p = producer_spec.p
+    r = producer_spec.rows_per_tile
+    n_out2 = w2.shape[0]
+    blocks = w2.reshape(n_out2, p, r)
+    if producer_spec.alpha_mode == "layer":
+        return alpha.reshape(()) * blocks.sum(axis=1)
+    return jnp.einsum("opr,p->or", blocks, alpha)
+
+
+def collapsed_chain_reference(
+    x: jax.Array,
+    t1: jax.Array,
+    alpha1: jax.Array,
+    spec1: TileSpec,
+    w2: jax.Array,
+) -> jax.Array:
+    """Oracle: relu(x @ W1_hat^T) @ W2^T computed without replication."""
+    n_in = spec1.n // spec1.shape[0]
+    r = spec1.rows_per_tile
+    tm = t1.reshape(r, n_in)
+    u = jax.nn.relu(jnp.einsum("...k,rk->...r", x, tm))  # unique activations
+    w2f = fold_consumer_weight(w2, alpha1, spec1)         # (n_out2, r)
+    return jnp.einsum("...r,or->...o", u, w2f)

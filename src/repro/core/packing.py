@@ -1,0 +1,76 @@
+"""Bit packing for tile vectors.
+
+Tiles are ±1 vectors of length q; on disk / in HBM they live as int32 lanes
+(TPU's native 32-bit word — int32 loads vectorize cleanly into VREGs, and
+the Pallas kernel unpacks 32 bits per lane with shift/and on the VPU).
+
+Bit order: bit j of word i encodes element ``i*32 + j`` (little-endian
+within the word). +1 -> bit 1, -1 -> bit 0. q is padded to a multiple of 32
+with zero bits (consumers slice back to q).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE_BITS = 32
+
+
+def packed_len(q: int) -> int:
+    return (q + LANE_BITS - 1) // LANE_BITS
+
+
+def pack_bits(t: jax.Array) -> jax.Array:
+    """±1 (or {0,1}) vector (q,) -> int32 (ceil(q/32),)."""
+    q = t.shape[-1]
+    bits = (t > 0).astype(jnp.uint32)
+    pad = packed_len(q) * LANE_BITS - q
+    if pad:
+        bits = jnp.concatenate([bits, jnp.zeros(t.shape[:-1] + (pad,), jnp.uint32)], axis=-1)
+    words = bits.reshape(*t.shape[:-1], packed_len(q), LANE_BITS)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    packed = (words << shifts).sum(axis=-1, dtype=jnp.uint32)
+    return packed.astype(jnp.int32)
+
+
+def unpack_bits(packed: jax.Array, q: int, dtype=jnp.float32) -> jax.Array:
+    """int32 (ceil(q/32),) -> ±1 vector (q,) of ``dtype``."""
+    w = packed.astype(jnp.uint32)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (w[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*packed.shape[:-1], packed.shape[-1] * LANE_BITS)[..., :q]
+    return (flat.astype(jnp.int8) * 2 - 1).astype(dtype)
+
+
+def pack_tile_matrix(tm: jax.Array) -> jax.Array:
+    """(r, n) ±1 tile matrix -> (r, ceil(n/32)) int32, packed per row.
+
+    Row-wise packing keeps each weight row's bits contiguous so the matmul
+    kernel can unpack a (block_r, block_k) weight block from
+    (block_r, block_k/32) lanes without crossing rows.
+    """
+    return pack_bits(tm)
+
+
+def unpack_tile_matrix(packed: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    return unpack_bits(packed, n, dtype)
+
+
+def storage_bytes(q: int, n_alpha: int) -> int:
+    """Exact shipped bytes for one tiled layer (tile lanes + fp32 alphas)."""
+    return packed_len(q) * 4 + 4 * n_alpha
+
+
+def pack_bits_np(t: np.ndarray) -> np.ndarray:
+    """NumPy twin of pack_bits (checkpoint export path, no device needed)."""
+    q = t.shape[-1]
+    bits = (t > 0).astype(np.uint32)
+    pad = packed_len(q) * LANE_BITS - q
+    if pad:
+        bits = np.concatenate([bits, np.zeros(t.shape[:-1] + (pad,), np.uint32)], axis=-1)
+    words = bits.reshape(*t.shape[:-1], packed_len(q), LANE_BITS)
+    shifts = np.arange(LANE_BITS, dtype=np.uint32)
+    return (words << shifts).sum(axis=-1, dtype=np.uint32).astype(np.int32)

@@ -1,0 +1,84 @@
+"""TBN application policy — which layers get tiled, and how.
+
+Mirrors the paper's three hyperparameters (Section 3):
+  1. lambda  — minimum layer size N for tiling (default 64k; 150k for
+               ImageNet-scale models; 32k for the time-series models).
+  2. alpha source — W (shared with the tile master) or a separate tensor A.
+  3. alpha mode — one scalar per layer (Eq. 7) or one per tile (Eq. 9).
+
+The policy is carried in every model config so the same architecture can be
+instantiated full-precision (p=1), BWNN (binary per-weight) or TBN_p.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.tiling import AlphaMode, AlphaSource, SteMode, TileSpec, plan_tiling
+
+# Quantization regimes for a whole model.
+FP32 = "fp32"      # standard full-precision layers
+BWNN = "bwnn"      # binary weight per parameter (1 bit) + alpha, XNOR-style
+TBN = "tbn"        # tiled binary (sub-bit)
+
+
+@dataclasses.dataclass(frozen=True)
+class TBNPolicy:
+    """Model-wide TBN hyperparameters."""
+
+    mode: str = TBN                      # fp32 | bwnn | tbn
+    p: int = 4                           # tile compression factor
+    min_size: int = 64_000               # lambda
+    alpha_mode: AlphaMode = "tile"       # "layer" | "tile"
+    alpha_source: AlphaSource = "A"      # "W" | "A"
+    ste: SteMode = "identity"
+    require_aligned: bool = True         # TPU fast-path alignment (DESIGN §7.1)
+    # Layers the paper never quantizes regardless of size:
+    skip_embeddings: bool = True
+    skip_norms: bool = True
+    skip_final_head: bool = False        # LM head is FC — tiled when >= lambda
+
+    def spec_for(
+        self, shape: Sequence[int], *, kind: str = "dense"
+    ) -> Optional[TileSpec]:
+        """TileSpec for a weight, or None if the layer stays per-weight.
+
+        kind in {"dense", "conv", "embedding", "norm", "head"}.
+        """
+        if self.mode != TBN:
+            return None
+        if kind == "embedding" and self.skip_embeddings:
+            return None
+        if kind == "norm" and self.skip_norms:
+            return None
+        if kind == "head" and self.skip_final_head:
+            return None
+        return plan_tiling(
+            shape,
+            p=self.p,
+            min_size=self.min_size,
+            alpha_mode=self.alpha_mode,
+            alpha_source=self.alpha_source,
+            ste=self.ste,
+            require_aligned=self.require_aligned,
+        )
+
+    def binarize(self, kind: str = "dense") -> bool:
+        """Whether a non-tiled layer is binarized (BWNN baseline)."""
+        if self.mode == FP32:
+            return False
+        if kind in ("embedding", "norm"):
+            return False
+        return True
+
+
+def fp32_policy() -> TBNPolicy:
+    return TBNPolicy(mode=FP32, p=1)
+
+
+def bwnn_policy(alpha_mode: AlphaMode = "layer") -> TBNPolicy:
+    return TBNPolicy(mode=BWNN, p=1, alpha_mode=alpha_mode)
+
+
+def tbn_policy(p: int = 4, **kw) -> TBNPolicy:
+    return TBNPolicy(mode=TBN, p=p, **kw)

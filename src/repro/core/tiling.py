@@ -1,0 +1,410 @@
+"""Core Tiled Bit Network (TBN) transform — Gorbett et al., CIKM 2024.
+
+A layer weight tensor ``W`` with ``N`` elements is compressed by a factor
+``p`` (``N = p * q``):
+
+  1. reshape  ``W -> W* in R^{p x q}``            (Eq. 1)
+  2. aggregate ``s = sum_i W*[i, :]  in R^q``      (Eq. 2)
+  3. binarize ``t = sign(s) in {-1,+1}^q``         (Eq. 3, straight-through)
+  4. tile     ``b = 1_p (x) t``, reshape to the original layer shape (Eq. 4-5)
+  5. scale by ``alpha`` — one per layer (Eq. 7) or one per tile (Eq. 9),
+     computed from ``|W|_1`` or from an auxiliary trained tensor ``A``.
+
+After training only ``t`` (q bits) and the alpha scalars are stored.
+
+Everything in this module is pure JAX and differentiable (via the STE);
+the Pallas kernels in ``repro.kernels`` implement the same math for the
+TPU fast path and are validated against these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Literal, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AlphaMode = Literal["layer", "tile"]
+AlphaSource = Literal["W", "A"]
+SteMode = Literal["identity", "autodiff"]
+
+
+# --------------------------------------------------------------------------
+# Tile planning
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """Static description of how one weight tensor is tiled.
+
+    Attributes:
+      shape:      original weight tensor shape (row-major flattening order).
+      p:          number of tile replicas (compression factor).
+      q:          tile length in elements (``N = p * q``).
+      aligned_rows: if the leading dim is divisible by ``p`` the tile covers
+                  ``shape[0] // p`` complete leading rows/filters — the
+                  structured case the TPU kernels exploit.
+      alpha_mode: "layer" (Eq. 7) or "tile" (Eq. 9).
+      alpha_source: "W" (reuse the master weight) or "A" (separate tensor).
+      ste:        "identity" (paper Eq. 6: dL/dW := dL/dB elementwise) or
+                  "autodiff" (STE on sign only; aggregation/tiling are
+                  differentiated exactly).
+    """
+
+    shape: Tuple[int, ...]
+    p: int
+    q: int
+    aligned_rows: bool
+    alpha_mode: AlphaMode = "tile"
+    alpha_source: AlphaSource = "A"
+    ste: SteMode = "identity"
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def rows_per_tile(self) -> int:
+        """Leading rows covered by one tile (aligned case only)."""
+        if not self.aligned_rows:
+            raise ValueError("rows_per_tile is only defined for aligned tiling")
+        return self.shape[0] // self.p
+
+    @property
+    def n_alpha(self) -> int:
+        return self.p if self.alpha_mode == "tile" else 1
+
+    @property
+    def stored_bits(self) -> int:
+        """Bits stored at inference: q tile bits + fp32 alpha scalars."""
+        return self.q + 32 * self.n_alpha
+
+    @property
+    def bits_per_param(self) -> float:
+        return self.stored_bits / self.n
+
+
+def plan_tiling(
+    shape: Sequence[int],
+    *,
+    p: int,
+    min_size: int = 64_000,
+    alpha_mode: AlphaMode = "tile",
+    alpha_source: AlphaSource = "A",
+    ste: SteMode = "identity",
+    require_aligned: bool = False,
+) -> Optional[TileSpec]:
+    """Decide whether/how to tile a weight of ``shape``.
+
+    Returns ``None`` when the layer stays binary-per-weight (BWNN): too small
+    (the paper's lambda policy), ``p <= 1``, or ``p`` does not divide ``N``.
+
+    When ``p`` does not divide the leading dim but does divide ``N`` the
+    tiling is still legal (paper only requires ``p | N``) but unaligned —
+    the fast TPU kernel refuses it unless ``require_aligned=False``.
+    """
+    shape = tuple(int(d) for d in shape)
+    n = int(np.prod(shape))
+    if p <= 1 or n < min_size:
+        return None
+    if n % p != 0:
+        # Fall back to the largest divisor of N that is <= p (keeps the
+        # config usable instead of silently skipping the layer).
+        cand = [d for d in range(p, 1, -1) if n % d == 0]
+        if not cand:
+            return None
+        p = cand[0]
+    aligned = shape[0] % p == 0
+    if require_aligned and not aligned:
+        return None
+    return TileSpec(
+        shape=shape,
+        p=p,
+        q=n // p,
+        aligned_rows=aligned,
+        alpha_mode=alpha_mode,
+        alpha_source=alpha_source,
+        ste=ste,
+    )
+
+
+# --------------------------------------------------------------------------
+# Straight-through binarization
+# --------------------------------------------------------------------------
+def _sign_pm1(x: jax.Array) -> jax.Array:
+    """Paper Eq. 3: +1 where x > 0 else -1 (zero maps to -1)."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(x.dtype)
+
+
+@jax.custom_vjp
+def _ste_sign(x: jax.Array) -> jax.Array:
+    return _sign_pm1(x)
+
+
+def _ste_sign_fwd(x):
+    return _sign_pm1(x), None
+
+
+def _ste_sign_bwd(_, g):
+    return (g,)
+
+
+_ste_sign.defvjp(_ste_sign_fwd, _ste_sign_bwd)
+
+
+def aggregate(w: jax.Array, spec: TileSpec) -> jax.Array:
+    """Eq. 1-2: reshape to (p, q) and sum over the replica axis -> s (q,)."""
+    return w.reshape(spec.p, spec.q).sum(axis=0)
+
+
+def tile_vector(w: jax.Array, spec: TileSpec) -> jax.Array:
+    """Eq. 3: the learnable binary tile t in {-1,+1}^q (no gradient path)."""
+    return _sign_pm1(aggregate(w, spec))
+
+
+def _construct_binary_impl(w: jax.Array, spec: TileSpec) -> jax.Array:
+    s = aggregate(w, spec)
+    t = _ste_sign(s)
+    # Eq. 4-5: b = 1_p (x) t, reshaped back to the tensor shape.
+    return jnp.broadcast_to(t[None, :], (spec.p, spec.q)).reshape(spec.shape)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _construct_binary_identity(w: jax.Array, spec: TileSpec) -> jax.Array:
+    return _construct_binary_impl(w, spec)
+
+
+def _cbi_fwd_full(w, spec):
+    # No residuals needed: the backward pass is an elementwise identity.
+    return _construct_binary_impl(w, spec), None
+
+
+def _cbi_bwd(spec, _, g):
+    # Paper Eq. 6: dy/dW ~= dy/dB — the gradient is passed through the
+    # whole threshold/tile/reshape pipeline unchanged, elementwise.
+    return (g.reshape(spec.shape),)
+
+
+_construct_binary_identity.defvjp(_cbi_fwd_full, _cbi_bwd)
+
+
+def construct_binary(w: jax.Array, spec: TileSpec) -> jax.Array:
+    """Full-shape binary tensor B (±1) from master weight W, with STE.
+
+    ``spec.ste == "identity"`` reproduces the paper's customized autograd
+    module (backward passes gradients through unchanged). ``"autodiff"``
+    applies the STE to the sign only and differentiates the aggregation and
+    tiling exactly (each master element then receives the *summed* gradient
+    of all replicas of its tile slot).
+    """
+    if w.shape != spec.shape:
+        raise ValueError(f"weight shape {w.shape} != spec shape {spec.shape}")
+    if spec.ste == "identity":
+        return _construct_binary_identity(w, spec)
+    return _construct_binary_impl(w, spec)
+
+
+# --------------------------------------------------------------------------
+# Alpha scalars
+# --------------------------------------------------------------------------
+def compute_alpha(src: jax.Array, spec: TileSpec) -> jax.Array:
+    """Optimal XNOR-style scaling (Eq. 7 / Eq. 9).
+
+    Eq. 9's ``(q x p)`` reshape is a typo in the paper — Figure 4 and
+    Algorithm 1 make clear each alpha_i belongs to the i-th *contiguous*
+    tile of the flattened tensor, so we reduce the (p, q) reshape along q.
+
+    Returns shape (1,) for mode "layer" or (p,) for mode "tile".
+    Differentiable (the |.|_1 mean); gradients flow to the source tensor.
+    """
+    if spec.alpha_mode == "layer":
+        return jnp.mean(jnp.abs(src)).reshape(1)
+    return jnp.mean(jnp.abs(src.reshape(spec.p, spec.q)), axis=1)
+
+
+def expand_alpha(alpha: jax.Array, spec: TileSpec) -> jax.Array:
+    """Broadcast alpha scalars over the full tensor shape."""
+    if spec.alpha_mode == "layer":
+        col = alpha.reshape(1, 1)
+    else:
+        col = alpha[:, None]
+    return jnp.broadcast_to(col, (spec.p, spec.q)).reshape(spec.shape)
+
+
+def tiled_weight(
+    w: jax.Array,
+    spec: TileSpec,
+    a: Optional[jax.Array] = None,
+    dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """The effective training-time weight  B_hat = alpha ⊙ B  (full shape).
+
+    ``a`` must be given when ``spec.alpha_source == "A"``.
+    This is the paper-faithful forward; the fused Pallas construction kernel
+    (`repro.kernels.tile_construct`) computes the same (t, alpha) without
+    materializing B_hat in HBM.
+    """
+    b = construct_binary(w, spec)
+    src = a if spec.alpha_source == "A" else w
+    if src is None:
+        raise ValueError("alpha_source='A' requires the auxiliary tensor A")
+    alpha = compute_alpha(src, spec)
+    bhat = b * expand_alpha(alpha, spec)
+    if dtype is not None:
+        bhat = bhat.astype(dtype)
+    return bhat
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _construct_rows_identity(w: jax.Array, p: int) -> jax.Array:
+    """Row-aligned binary construction by AXIS sums (no flat reshape).
+
+    For aligned tiling (p | n_out) this is bit-identical to
+    ``construct_binary`` but expressed as a sum over a real tensor axis —
+    under GSPMD the aggregation becomes a cheap partial-sum all-reduce of
+    the (p-fold smaller) tile instead of an all-gather of the full weight.
+    The tile is the ONLY thing that crosses the network: a beyond-paper
+    "communicate tiles, not weights" optimization (EXPERIMENTS.md §Perf).
+    Supports leading batch dims (expert banks: (E, n_out, n_in))."""
+    *lead, R, D = w.shape
+    r = R // p
+    s = w.reshape(*lead, p, r, D).sum(axis=-3)
+    t = _sign_pm1(s)
+    b = jnp.broadcast_to(
+        t[..., None, :, :], (*lead, p, r, D)
+    )
+    return b.reshape(*lead, R, D)
+
+
+def _cri_fwd(w, p):
+    return _construct_rows_identity(w, p), None
+
+
+def _cri_bwd(p, _, g):
+    return (g,)    # paper Eq. 6: identity straight-through
+
+
+_construct_rows_identity.defvjp(_cri_fwd, _cri_bwd)
+
+
+def tiled_weight_rows(
+    w: jax.Array,
+    spec: TileSpec,
+    a: Optional[jax.Array] = None,
+    dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """``tiled_weight`` for row-aligned specs via axis ops only (see
+    ``_construct_rows_identity``). Handles leading batch dims; exact-match
+    oracle: tests/test_property.py::test_rows_equals_flat."""
+    if not spec.aligned_rows:
+        raise ValueError("tiled_weight_rows needs row-aligned tiling")
+    *lead, R, D = w.shape
+    p, r = spec.p, spec.rows_per_tile
+    b = _construct_rows_identity(w, p)
+    src = a if (spec.alpha_source == "A" and a is not None) else w
+    if spec.alpha_mode == "layer":
+        alpha = jnp.mean(jnp.abs(src), axis=(-1, -2), keepdims=True)
+        bhat = b * alpha
+    else:
+        alpha = jnp.mean(
+            jnp.abs(src.reshape(*lead, p, r, D)), axis=(-1, -2)
+        )  # (*lead, p)
+        bhat = (
+            b.reshape(*lead, p, r, D) * alpha[..., None, None]
+        ).reshape(*lead, R, D)
+    if dtype is not None:
+        bhat = bhat.astype(dtype)
+    return bhat
+
+
+# --------------------------------------------------------------------------
+# Inference-form parameters (what actually ships)
+# --------------------------------------------------------------------------
+def export_tile(
+    w: jax.Array, spec: TileSpec, a: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """(tile t ∈ ±1 (q,), alpha (n_alpha,)) — the stored representation."""
+    t = tile_vector(w, spec)
+    src = a if spec.alpha_source == "A" else w
+    alpha = compute_alpha(jax.lax.stop_gradient(src), spec)
+    return jax.lax.stop_gradient(t), alpha
+
+
+def reconstruct_from_tile(
+    t: jax.Array, alpha: jax.Array, spec: TileSpec, dtype=jnp.float32
+) -> jax.Array:
+    """Rebuild the dense effective weight from (t, alpha) — reference path."""
+    b = jnp.broadcast_to(t[None, :], (spec.p, spec.q)).reshape(spec.shape)
+    return (b * expand_alpha(alpha, spec)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Structured (aligned) fast-math helpers — the TPU-native formulation
+# --------------------------------------------------------------------------
+def tile_as_matrix(t: jax.Array, spec: TileSpec) -> jax.Array:
+    """View the q-bit tile as an (r, trailing) matrix of ±1 (aligned case).
+
+    For a dense weight stored (n_out, n_in) with p | n_out, the effective
+    weight is the block-row replication of this matrix with per-block alpha:
+        W_hat = kron(alpha, T)   (alpha as a (p,1) column when mode="tile")
+    """
+    if len(spec.shape) < 2:
+        raise ValueError("tile_as_matrix needs a >=2-D weight")
+    if not spec.aligned_rows:
+        raise ValueError("unaligned tiling cannot be viewed as a row block")
+    r = spec.rows_per_tile
+    trailing = spec.n // spec.shape[0]
+    return t.reshape(r, trailing)
+
+
+def tiled_matmul_reference(
+    x: jax.Array, t: jax.Array, alpha: jax.Array, spec: TileSpec
+) -> jax.Array:
+    """y = x @ W_hat^T computed the tile-reuse way (aligned dense layers).
+
+    x: (..., n_in); weight logical shape (n_out, n_in); tile covers
+    r = n_out/p rows. Computes u = x @ T^T once (p-fold fewer FLOPs) and
+    broadcasts with per-tile alpha:  y[..., i*r:(i+1)*r] = alpha_i * u.
+
+    This is the oracle for ``repro.kernels.tiled_matmul``.
+    """
+    n_out, n_in = spec.shape[0], spec.n // spec.shape[0]
+    if x.shape[-1] != n_in:
+        raise ValueError(f"x trailing dim {x.shape[-1]} != n_in {n_in}")
+    r = spec.rows_per_tile
+    tm = t.reshape(r, n_in)  # one tile, as r complete weight rows
+    u = jnp.einsum("...k,rk->...r", x, tm)  # (..., r)
+    if spec.alpha_mode == "layer":
+        y = jnp.broadcast_to(
+            u[..., None, :], (*u.shape[:-1], spec.p, r)
+        ) * alpha.reshape(1)
+    else:
+        y = u[..., None, :] * alpha.reshape(
+            (1,) * (u.ndim - 1) + (spec.p, 1)
+        )
+        y = jnp.broadcast_to(y, (*u.shape[:-1], spec.p, r))
+    return y.reshape(*x.shape[:-1], n_out)
+
+
+def fold_inputs_reference(
+    x: jax.Array, t: jax.Array, alpha: jax.Array, spec: TileSpec
+) -> jax.Array:
+    """y = x @ W_hat for weights stored (n_in, n_out) with p | n_in.
+
+    The replication then lies along the *contraction* dim, so the p blocks
+    of x can be pre-combined:  y = (sum_i alpha_i * x[..., i*r:(i+1)*r]) @ T.
+    p-fold fewer matmul FLOPs with NO output replication — used by the
+    beyond-paper "input-folded" serving variant.
+    """
+    n_in = spec.shape[0]
+    r = spec.rows_per_tile
+    n_out = spec.n // n_in
+    xb = x.reshape(*x.shape[:-1], spec.p, r)
+    if spec.alpha_mode == "layer":
+        folded = alpha.reshape(1) * xb.sum(axis=-2)
+    else:
+        folded = jnp.einsum("...pr,p->...r", xb, alpha)
+    tm = t.reshape(r, n_out)
+    return jnp.einsum("...r,rn->...n", folded, tm)

@@ -1,0 +1,58 @@
+"""Shard-aware host data pipeline with background prefetch.
+
+Deterministic: iterator state is just (seed, step); a restart at step N
+regenerates the identical stream (used by ft.recovery)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        gen: Callable[[int], Dict],
+        start_step: int = 0,
+        prefetch: int = 2,
+    ):
+        self._gen = gen
+        self._step = start_step
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, prefetch))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._gen(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self._step = step + 1
+        return batch
+
+    @property
+    def step(self) -> int:
+        return self._step
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

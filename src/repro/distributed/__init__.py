@@ -1,0 +1,13 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    axis_rules,
+    logical_constraint,
+    param_shardings,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "axis_rules",
+    "logical_constraint",
+    "param_shardings",
+]

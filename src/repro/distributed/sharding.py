@@ -1,0 +1,200 @@
+"""Logical-axis sharding: one place that maps layer semantics to the mesh.
+
+Layers annotate weights with *logical* axis names ("heads", "embed", ...)
+and wrap hot activations in ``logical_constraint``. The launcher activates a
+rule set for the current mesh; outside a rule context everything is a no-op
+(single-device tests/benchmarks never touch device APIs).
+
+Default rules (DESIGN.md §5):
+
+  weights   heads/mlp/vocab/experts -> "model"   (tensor/expert parallel)
+            embed                   -> "data"    (FSDP/ZeRO-3 master shard)
+  acts      act_batch -> ("pod","data")          (data parallel)
+            act_heads/act_mlp/act_vocab -> "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    # weight axes
+    "heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "embed": "data",
+    "kv": None,
+    "conv_spatial": None,
+    "layers": None,
+    "stage": None,
+    # activation axes
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    # residual-stream sequence axis: sharded over "model" BETWEEN blocks
+    # (Megatron-style sequence parallelism). GSPMD all-gathers at the QKV /
+    # FFN entry and reduce-scatters after the output projection; the scan
+    # carry saved for backward is 1/TP the size, which is what lets the
+    # 4k-seq train cells fit HBM (EXPERIMENTS.md §Dry-run).
+    "act_res_seq": "model",
+    # MoE dispatch-group axes. "act_tok": the dispatch/combine domain —
+    # groups shard over EVERY mesh axis (all index ops are group-local).
+    # "act_cap": the expert-einsum domain — groups keep only the DP axes
+    # so "act_experts" can take the model axis. The act_tok <-> act_cap
+    # resharding GSPMD inserts is exactly the EP all-to-all.
+    "act_tok": ("pod", "data", "model"),
+    "act_cap": ("pod", "data"),
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+}
+
+
+class _Active(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Dict[str, AxisVal]] = None
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[Dict[str, AxisVal]] = None):
+    """Activate logical->mesh rules (and the mesh) for a region."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    # Drop axes the mesh does not have (e.g. "pod" on the single-pod mesh).
+    names = set(mesh.axis_names)
+
+    def _filter(v: AxisVal) -> AxisVal:
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in names else None
+        kept = tuple(a for a in v if a in names)
+        return kept if kept else None
+
+    filtered = {k: _filter(v) for k, v in rules.items()}
+    prev = (_ACTIVE.mesh, _ACTIVE.rules)
+    _ACTIVE.mesh, _ACTIVE.rules = mesh, filtered
+    try:
+        with mesh:
+            yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE.mesh
+
+
+def spec_from_logical(logical: Sequence[Optional[str]]) -> P:
+    rules = _ACTIVE.rules or {}
+    return P(*(rules.get(name) if name else None for name in logical))
+
+
+def _mesh_extent(mesh: Mesh, axes: AxisVal) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _divisible_spec(mesh: Mesh, shape, spec_axes) -> P:
+    """Sanitize a spec: drop non-dividing axes and duplicate mesh axes.
+
+    * Ragged dims (e.g. vocab=50280 over model=16) stay replicated instead
+      of failing the pjit divisibility check.
+    * A mesh axis may shard at most one positional dim; the FIRST logical
+      dim that claims it wins (stacked MoE banks map both "experts" and
+      "mlp" to "model"; square (d,d) weights map "embed" twice).
+    """
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        parts = (ax,) if isinstance(ax, str) else tuple(ax)
+        parts = tuple(a for a in parts if a not in used)
+        # longest prefix of the axis tuple that evenly divides the dim —
+        # a (pod, data, model) batch rule degrades to (pod, data) for a
+        # 32-sample prefill instead of replicating outright
+        chosen: AxisVal = None
+        for k in range(len(parts), 0, -1):
+            cand = parts[:k]
+            if dim % _mesh_extent(mesh, cand) == 0:
+                chosen = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+def logical_constraint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the active rules; no-op outside."""
+    if _ACTIVE.mesh is None or _ACTIVE.rules is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"{len(logical)} axes for rank-{x.ndim} array")
+    spec = spec_from_logical(logical)
+    spec = _divisible_spec(_ACTIVE.mesh, x.shape, tuple(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE.mesh, spec)
+    )
+
+
+def named_sharding(mesh: Mesh, *axes: AxisVal) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))
+
+
+def param_shardings(mesh: Mesh, logical_tree, rules=None, abstract_tree=None):
+    """Map a tree of logical-axis tuples to NamedShardings for jit.
+
+    When ``abstract_tree`` (matching ShapeDtypeStructs) is given, mesh axes
+    that do not evenly divide their dimension are dropped (replicated) so
+    ragged dims — 50280-row vocab over a 16-way model axis — never fail the
+    pjit divisibility check.
+    """
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    names = set(mesh.axis_names)
+
+    def _resolve(logical):
+        spec = []
+        for name in logical:
+            v = rules.get(name) if name else None
+            if isinstance(v, str) and v not in names:
+                v = None
+            if isinstance(v, tuple):
+                v = tuple(a for a in v if a in names) or None
+            spec.append(v)
+        return spec
+
+    is_leaf = lambda x: isinstance(x, tuple)
+    if abstract_tree is None:
+        return jax.tree.map(
+            lambda lg: NamedSharding(mesh, P(*_resolve(lg))),
+            logical_tree,
+            is_leaf=is_leaf,
+        )
+    return jax.tree.map(
+        lambda lg, ab: NamedSharding(
+            mesh, _divisible_spec(mesh, ab.shape, _resolve(lg))
+        ),
+        logical_tree,
+        abstract_tree,
+        is_leaf=is_leaf,
+    )

@@ -1,0 +1,19 @@
+from repro.ft.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.ft.recovery import RecoveryManager, elastic_restore
+from repro.ft.watchdog import HeartbeatTable, StepWatchdog
+
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "RecoveryManager",
+    "elastic_restore",
+    "StepWatchdog",
+    "HeartbeatTable",
+]

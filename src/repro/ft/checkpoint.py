@@ -1,0 +1,254 @@
+"""Sharded npz+json checkpoints with async save and elastic restore.
+
+Layout (one directory per step, atomic via tmp-dir rename):
+
+    <root>/step_00000420/
+        manifest.json      tree structure, per-leaf shape/dtype, metadata
+        arrays.npz         one entry per leaf, keyed by "/"-joined path
+
+Restore is *mesh-agnostic*: leaves come back as host numpy and are placed
+with ``place(tree, shardings)`` onto whatever mesh the restarted job has —
+the elastic path (fewer/more chips than the writer) is just a different
+shardings tree. A leaf whose stored shape matches is device_put with the
+new sharding; GSPMD handles the re-slice.
+
+Async save copies to host synchronously (cheap; off-device transfer is the
+only step that must see consistent values) and does the serialization +
+fsync on a background thread so the train loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+_SEP = "/"
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat dict-of-arrays
+# ---------------------------------------------------------------------------
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        out.append((_SEP.join(keys), leaf))
+    return out
+
+
+def _tree_def(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def tree_from_flat(treedef, flat: Dict[str, np.ndarray]):
+    """Rebuild a pytree given its treedef and the path->array dict."""
+    paths = [k for k, _ in _flatten_with_paths(jax.tree_util.tree_unflatten(
+        treedef, list(range(treedef.num_leaves))))]
+    # map leaf order -> path names by flattening an index tree
+    leaves = [flat[p] for p in paths]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# save / restore
+# ---------------------------------------------------------------------------
+def save_checkpoint(
+    root: os.PathLike,
+    step: int,
+    tree,
+    *,
+    metadata: Optional[Dict[str, Any]] = None,
+) -> pathlib.Path:
+    """Synchronous atomic save. Returns the final checkpoint directory."""
+    root = pathlib.Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    host = [(k, np.asarray(jax.device_get(v))) for k, v in flat]
+    return _write(root, step, host, metadata or {})
+
+
+def _write(root: pathlib.Path, step: int, host, metadata) -> pathlib.Path:
+    final = root / f"step_{step:08d}"
+    tmp = pathlib.Path(
+        tempfile.mkdtemp(prefix=f".tmp_step_{step:08d}_", dir=root)
+    )
+    try:
+        manifest = {
+            "step": int(step),
+            "format": 1,
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in host
+            },
+            "metadata": metadata,
+        }
+        np.savez(tmp / "arrays.npz", **{k: v for k, v in host})
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def available_steps(root: os.PathLike) -> List[int]:
+    root = pathlib.Path(root)
+    if not root.exists():
+        return []
+    out = []
+    for d in root.iterdir():
+        m = _STEP_RE.match(d.name)
+        if m and (d / "manifest.json").exists():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(root: os.PathLike) -> Optional[int]:
+    steps = available_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    root: os.PathLike, step: Optional[int] = None
+) -> Tuple[int, Dict[str, np.ndarray], Dict[str, Any]]:
+    """-> (step, path->array dict, metadata). Raises if nothing to restore."""
+    root = pathlib.Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = root / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        flat = {k: z[k] for k in z.files}
+    for k, info in manifest["leaves"].items():
+        got = flat[k]
+        if list(got.shape) != info["shape"]:
+            raise ValueError(
+                f"leaf {k}: stored shape {list(got.shape)} != manifest {info['shape']}"
+            )
+    return int(manifest["step"]), flat, manifest.get("metadata", {})
+
+
+def restore_into(template, root: os.PathLike, step: Optional[int] = None):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step, flat, _ = restore_checkpoint(root, step)
+    paths = [k for k, _ in _flatten_with_paths(template)]
+    missing = [p for p in paths if p not in flat]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+    leaves = [flat[p] for p in paths]
+    treedef = _tree_def(template)
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def place(tree, shardings):
+    """device_put every leaf with its (possibly new-mesh) sharding."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), tree, shardings
+    )
+
+
+# ---------------------------------------------------------------------------
+# manager: async save, retention, restore-latest
+# ---------------------------------------------------------------------------
+class CheckpointManager:
+    """Save-every-N with bounded retention and an async writer thread.
+
+    The device->host copy happens on the caller's thread (values must be
+    consistent with the step being saved); npz serialization and directory
+    swap happen on the writer thread. ``wait()`` drains pending writes —
+    call it before reading ``latest_step`` in tests and at shutdown.
+    """
+
+    def __init__(
+        self,
+        root: os.PathLike,
+        *,
+        save_every: int = 100,
+        max_to_keep: int = 3,
+        async_save: bool = True,
+    ):
+        self.root = pathlib.Path(root)
+        self.save_every = save_every
+        self.max_to_keep = max_to_keep
+        self.async_save = async_save
+        self._pending: List[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._errors: List[BaseException] = []
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_every == 0
+
+    def save(self, step: int, tree, *, metadata=None, force: bool = False):
+        if not force and not self.should_save(step):
+            return None
+        self.root.mkdir(parents=True, exist_ok=True)
+        host = [
+            (k, np.asarray(jax.device_get(v)))
+            for k, v in _flatten_with_paths(tree)
+        ]
+        meta = dict(metadata or {})
+        if not self.async_save:
+            _write(self.root, step, host, meta)
+            self._gc()
+            return step
+
+        def _job():
+            try:
+                _write(self.root, step, host, meta)
+                self._gc()
+            except BaseException as e:  # surfaced by wait()
+                with self._lock:
+                    self._errors.append(e)
+
+        t = threading.Thread(target=_job, daemon=True)
+        with self._lock:
+            self._pending = [p for p in self._pending if p.is_alive()]
+            self._pending.append(t)
+        t.start()
+        return step
+
+    def wait(self):
+        with self._lock:
+            pending = list(self._pending)
+        for t in pending:
+            t.join()
+        with self._lock:
+            self._pending.clear()
+            if self._errors:
+                err = self._errors[0]
+                self._errors.clear()
+                raise err
+
+    def _gc(self):
+        steps = available_steps(self.root)
+        for s in steps[: -self.max_to_keep]:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.root)
+
+    def restore_into(self, template, step: Optional[int] = None):
+        return restore_into(template, self.root, step)

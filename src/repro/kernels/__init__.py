@@ -1,0 +1,12 @@
+"""TBN Pallas TPU kernels (validated in interpret mode on CPU)."""
+from repro.kernels.ops import tbn_dense_train, tile_construct, tiled_dense_infer
+from repro.kernels.tile_construct import tile_construct_pallas
+from repro.kernels.tiled_matmul import tiled_matmul_unique
+
+__all__ = [
+    "tbn_dense_train",
+    "tile_construct",
+    "tiled_dense_infer",
+    "tile_construct_pallas",
+    "tiled_matmul_unique",
+]

@@ -1,0 +1,166 @@
+"""Jit-ready wrappers around the TBN Pallas kernels.
+
+Public entry points:
+  * ``tiled_dense_infer``  — serving-time FC layer from (packed tile, alpha)
+    without materializing the dense weight. Pallas on TPU; pure-JAX
+    structured math elsewhere (identical FLOPs — used by the SPMD dry-run).
+  * ``tile_construct``     — (W[,A]) -> (packed tile, alpha) fused on TPU.
+  * ``tbn_dense_train``    — training forward y = x @ B_hat^T that composes
+    the two kernels (B_hat never hits HBM) with a custom VJP whose backward
+    is the *paper-faithful* gradient (vjp of the pure-JAX reference), so the
+    fused path is a drop-in for the reference during training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_bits, unpack_bits
+from repro.core.tiling import (
+    TileSpec,
+    compute_alpha,
+    tile_vector,
+    tiled_matmul_reference,
+    tiled_weight,
+)
+from repro.kernels.tile_construct import tile_construct_pallas
+from repro.kernels.tiled_matmul import tiled_matmul_unique
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# --------------------------------------------------------------------------
+# Inference matmul
+# --------------------------------------------------------------------------
+def tiled_dense_infer(
+    x: jax.Array,
+    packed: jax.Array,
+    alpha: jax.Array,
+    spec: TileSpec,
+    *,
+    use_pallas: Optional[bool] = None,
+    block_m: int = 128,
+    block_r: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """y = x @ W_hat^T from the shipped representation.
+
+    x: (..., n_in); packed: int32 (ceil(q/32),); alpha: (n_alpha,).
+    Weight logical shape spec.shape == (n_out, n_in), aligned tiling.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    n_out, n_in = spec.shape[0], spec.n // spec.shape[0]
+    r = spec.rows_per_tile
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, n_in)
+    m = xm.shape[0]
+
+    if not use_pallas:
+        t = unpack_bits(packed, spec.q, dtype=x.dtype)
+        y = tiled_matmul_reference(xm, t, alpha, spec)
+        return y.reshape(*lead, n_out).astype(x.dtype)
+
+    # Pallas path: row-pack the tile as (r, n_in/32) and pad to blocks.
+    tm_packed = packed.reshape(r, n_in // 32)
+    xm_p = _pad_to(_pad_to(xm, 0, block_m), 1, block_k)
+    tm_p = _pad_to(_pad_to(tm_packed, 0, block_r), 1, block_k // 32)
+    u = tiled_matmul_unique(
+        xm_p,
+        tm_p,
+        r=tm_p.shape[0],
+        block_m=block_m,
+        block_r=block_r,
+        block_k=block_k,
+    )[:m, :r]
+    if spec.alpha_mode == "layer":
+        y = jnp.broadcast_to(u[:, None, :], (m, spec.p, r)) * alpha.reshape(1)
+    else:
+        y = jnp.broadcast_to(
+            u[:, None, :] * alpha[None, :, None], (m, spec.p, r)
+        )
+    return y.reshape(*lead, n_out).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Construction
+# --------------------------------------------------------------------------
+def tile_construct(
+    w: jax.Array,
+    spec: TileSpec,
+    a: Optional[jax.Array] = None,
+    *,
+    use_pallas: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Master weight(s) -> (packed tile int32, alpha (n_alpha,))."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    src = a if spec.alpha_source == "A" else None
+    if not use_pallas:
+        t = tile_vector(w, spec)
+        alpha = compute_alpha(w if src is None else src, spec)
+        return pack_bits(t), alpha.astype(jnp.float32)
+
+    w2d = _pad_to(w.reshape(spec.p, spec.q), 1, 32)
+    a2d = None if src is None else _pad_to(src.reshape(spec.p, spec.q), 1, 32)
+    q_pad = w2d.shape[1]
+    # pick a block that divides the padded q
+    block_q = min(4096, q_pad)
+    while q_pad % block_q:
+        block_q -= 32
+    packed, alpha_t = tile_construct_pallas(w2d, a2d, block_q=block_q)
+    alpha_t = alpha_t * (q_pad / spec.q)  # kernel divides by padded q
+    n_words = (spec.q + 31) // 32
+    packed = packed[:n_words]
+    if spec.alpha_mode == "layer":
+        alpha = jnp.mean(alpha_t, keepdims=True)
+    else:
+        alpha = alpha_t
+    return packed, alpha.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Fused training forward (custom VJP)
+# --------------------------------------------------------------------------
+def _train_ref_forward(x, w, a, spec: TileSpec):
+    """Paper-faithful reference: materialize B_hat, dense matmul."""
+    bhat = tiled_weight(w, spec, a=a, dtype=x.dtype)
+    n_out, n_in = spec.shape[0], spec.n // spec.shape[0]
+    return jnp.einsum("...k,ok->...o", x, bhat.reshape(n_out, n_in))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def tbn_dense_train(x, w, a, spec: TileSpec):
+    """Training forward via the fused kernels; gradient == reference VJP.
+
+    ``a`` may equal ``w`` (alpha_source == "W"); pass the same array.
+    """
+    packed, alpha = tile_construct(w, spec, a=a)
+    return tiled_dense_infer(x, packed, alpha, spec).astype(x.dtype)
+
+
+def _tbn_dense_train_fwd(x, w, a, spec):
+    y = tbn_dense_train(x, w, a, spec)
+    return y, (x, w, a)
+
+
+def _tbn_dense_train_bwd(spec, res, g):
+    x, w, a = res
+    # Backward is the exact VJP of the paper-faithful reference forward —
+    # recomputes B_hat once (remat) instead of storing it.
+    _, vjp = jax.vjp(lambda x, w, a: _train_ref_forward(x, w, a, spec), x, w, a)
+    return vjp(g)
+
+
+tbn_dense_train.defvjp(_tbn_dense_train_fwd, _tbn_dense_train_bwd)

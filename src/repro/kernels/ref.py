@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the TBN Pallas kernels.
+
+These are the ground truth the kernels are validated against (allclose over
+shape/dtype sweeps in tests/test_kernels_*.py) and the math the SPMD dry-run
+lowers (the dry-run targets the host platform where Pallas TPU kernels
+cannot compile — identical FLOPs/bytes, see DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_bits, unpack_bits
+from repro.core.tiling import TileSpec, compute_alpha, tile_vector
+
+
+def tile_construct_ref(
+    w2d: jax.Array, a2d: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """(p, q) master weight -> (packed tile int32 (ceil(q/32),), alpha (p,)).
+
+    alpha here is always per-tile (Eq. 9); Eq. 7's layer alpha is its mean —
+    the wrapper reduces when alpha_mode == "layer".
+    """
+    p, q = w2d.shape
+    s = w2d.sum(axis=0)
+    t = jnp.where(s > 0, 1.0, -1.0)
+    src = w2d if a2d is None else a2d
+    alpha = jnp.mean(jnp.abs(src), axis=1)
+    return pack_bits(t), alpha.astype(jnp.float32)
+
+
+def tiled_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    alpha: jax.Array,
+    *,
+    n_out: int,
+    p: int,
+) -> jax.Array:
+    """Dense ground truth: y = x @ W_hat^T with W_hat fully materialized.
+
+    x: (M, K); packed: int32 (ceil(q/32),) with q = n_out*K/p; alpha: (p,) or
+    (1,). Returns (M, n_out) in float32.
+    """
+    m, k = x.shape
+    q = n_out * k // p
+    t = unpack_bits(packed, q, dtype=jnp.float32)
+    b = jnp.broadcast_to(t[None, :], (p, q)).reshape(n_out, k)
+    if alpha.shape[0] == 1:
+        a_col = jnp.broadcast_to(alpha.reshape(1, 1), (p, q))
+    else:
+        a_col = jnp.broadcast_to(alpha[:, None], (p, q))
+    bhat = b * a_col.reshape(n_out, k)
+    return (x.astype(jnp.float32) @ bhat.T).astype(jnp.float32)
+
+
+def tiled_matmul_unique_ref(
+    x: jax.Array, packed: jax.Array, *, r: int
+) -> jax.Array:
+    """Oracle of the kernel's inner product only: u = x @ T^T (M, r)."""
+    m, k = x.shape
+    t = unpack_bits(packed, r * k, dtype=jnp.float32).reshape(r, k)
+    return x.astype(jnp.float32) @ t.T
+
+
+def replicate_scale_ref(u: jax.Array, alpha: jax.Array, p: int) -> jax.Array:
+    """y[:, i*r:(i+1)*r] = alpha_i * u — the broadcast stage."""
+    m, r = u.shape
+    if alpha.shape[0] == 1:
+        y = jnp.broadcast_to(u[:, None, :], (m, p, r)) * alpha.reshape(1, 1, 1)
+    else:
+        y = u[:, None, :] * alpha[None, :, None]
+        y = jnp.broadcast_to(y, (m, p, r))
+    return y.reshape(m, p * r).astype(u.dtype)

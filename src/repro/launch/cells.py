@@ -1,0 +1,372 @@
+"""Build (function, abstract args, shardings) for every dry-run cell.
+
+A cell = (architecture x input shape x mesh). Three kinds:
+  train   — jit(train_step)   : (TrainState, batch) -> (TrainState, metrics)
+  prefill — jit(prefill_fn)   : (params, batch)     -> (logits, caches, lengths)
+  decode  — jit(decode_fn)    : (params, tokens, caches, lengths) -> (...)
+
+Cost-model notes (see EXPERIMENTS.md §Roofline): XLA's cost_analysis visits
+each while-loop body ONCE, so scan-over-layers FLOPs must be corrected by
+trip count. Cells can therefore be built with a `depth` override and with
+chunked attention disabled (`exact_flops=True`) — the roofline driver
+compiles {full+chunked, d1+exact, d2+exact} and extrapolates:
+    total = cost(d1) + (trips_full - 1) * (cost(d2) - cost(d1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import build_model, get_config
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell, cell_applicable
+from repro.distributed.sharding import DEFAULT_RULES, param_shardings
+from repro.nn import module as mod
+from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.optim import adamw, cosine_with_warmup
+from repro.train.step import TrainState, build_train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+def arch_rules(cfg: ArchConfig) -> Dict[str, Any]:
+    return dict(DEFAULT_RULES, **dict(cfg.rules_override))
+
+
+def batch_axes(mesh: Mesh, cfg: Optional[ArchConfig] = None) -> Tuple[str, ...]:
+    want = ("pod", "data")
+    if cfg is not None:
+        v = arch_rules(cfg).get("act_batch") or ()
+        want = (v,) if isinstance(v, str) else tuple(v)
+    return tuple(a for a in want if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def fit_spec(mesh: Mesh, shape, *axes) -> NamedSharding:
+    """PartitionSpec that degrades each axis (tuple: longest dividing
+    prefix) and drops what cannot divide (e.g. batch=1)."""
+    spec = []
+    for dim, ax in zip(shape, axes):
+        chosen = None
+        if ax is not None:
+            parts = (ax,) if isinstance(ax, str) else tuple(ax)
+            for k in range(len(parts), 0, -1):
+                if dim % _axis_size(mesh, parts[:k]) == 0:
+                    chosen = parts[:k] if k > 1 else parts[0]
+                    break
+        spec.append(chosen)
+    return NamedSharding(mesh, P(*spec))
+
+
+def depth_cfg(cfg: ArchConfig, depth: Optional[int]) -> ArchConfig:
+    """Reduce depth (keeping per-layer dims exact) for cost extrapolation.
+
+    Depth variants are UNROLLED (no lax.scan): XLA's cost_analysis visits a
+    while body once regardless of trip count, so scanned depth-1 and
+    depth-2 modules would report identical costs and the per-layer delta
+    would vanish (verified empirically — see EXPERIMENTS.md §Roofline).
+    """
+    if depth is None:
+        return cfg
+    kw: Dict[str, Any] = {"n_layers": depth, "force_unroll": True}
+    if cfg.family == "encdec":
+        kw.update(enc_layers=depth, dec_layers=depth, n_layers=2 * depth)
+    if cfg.family == "moe" and cfg.moe.first_dense:
+        kw["n_layers"] = depth + 1     # dense0 + `depth` scanned MoE layers
+    if cfg.family == "hybrid":
+        kw["n_layers"] = depth * len(cfg.pattern)  # whole super-blocks
+    return dataclasses.replace(cfg, **kw)
+
+
+def scan_trips(cfg: ArchConfig) -> int:
+    """Iterations of the (dominant) layer scan at full depth."""
+    if cfg.family == "encdec":
+        assert cfg.enc_layers == cfg.dec_layers
+        return cfg.enc_layers
+    if cfg.family == "moe" and cfg.moe.first_dense:
+        return cfg.n_layers - 1
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.pattern)
+    return cfg.n_layers
+
+
+def exact_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Disable chunked attention so every FLOP appears once in the HLO."""
+    return dataclasses.replace(cfg, attn_chunk=1_000_000_000)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+def train_batch_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    b, s = cell.global_batch, cell.seq_len
+    ba = batch_axes(mesh, cfg)
+    toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        sd = max(2, s // cfg.dec_ratio)
+        batch = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, sd), jnp.int32),
+        }
+        sh = {
+            "frames": fit_spec(mesh, (b, s, cfg.d_model), ba, None, None),
+            "tokens": fit_spec(mesh, (b, sd), ba, None),
+        }
+    elif cfg.modality == "vlm":
+        batch = {
+            "tokens": toks,
+            "image_mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+            "image_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+        }
+        sh = {
+            "tokens": fit_spec(mesh, (b, s), ba, None),
+            "image_mask": fit_spec(mesh, (b, s), ba, None),
+            "image_embeds": fit_spec(mesh, (b, s, cfg.d_model), ba, None, None),
+        }
+    else:
+        batch = {"tokens": toks}
+        sh = {"tokens": fit_spec(mesh, (b, s), ba, None)}
+    return batch, sh
+
+
+def cache_shardings(mesh: Mesh, caches_abs, batch_size: int):
+    """Map cache leaves to shardings by key name + rank (see module doc)."""
+    ba = batch_axes(mesh)
+
+    def map_leaf(path, leaf):
+        key = None
+        for pth in reversed(path):
+            name = getattr(pth, "key", getattr(pth, "name", None))
+            if isinstance(name, str):
+                key = name
+                break
+        r = len(leaf.shape)
+        if key in ("k", "v", "ck", "cv"):
+            # (B, T, K, hd) or (L, B, T, K, hd): shard time over model
+            spec = ([None] * (r - 4)) + [ba, "model", None, None]
+        elif key in ("ks", "vs"):
+            # int8-KV scales (B, T, K) / (L, B, T, K): same layout sans hd
+            spec = ([None] * (r - 3)) + [ba, "model", None]
+        elif key == "h":
+            # recurrent state: shard batch + the widest state dim over model
+            if r == 2:      # rglru (B, W)
+                spec = [ba, "model"]
+            elif r == 3:    # (L, B, W)
+                spec = [None, ba, "model"]
+            elif r == 4:    # mamba (B, H, P, N)
+                spec = [ba, "model", None, None]
+            else:           # (L, B, H, P, N)
+                spec = [None, ba, "model", None, None]
+        elif key == "conv":
+            spec = ([None] * (r - 3)) + [ba, None, "model"]
+        else:
+            spec = [None] * r
+        return fit_spec(mesh, leaf.shape, *spec)
+
+    return jax.tree_util.tree_map_with_path(map_leaf, caches_abs)
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+def build_train_cell(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    ctx = ModelContext(policy=cfg.tbn, mode=TRAIN, use_pallas=False,
+                       fsdp_weights=cfg.fsdp_weights)
+    model = build_model(cfg, ctx)
+    specs = model.specs()
+    params_abs = mod.abstract_params(specs)
+    logical = mod.logical_axes(specs)
+    p_sh = param_shardings(mesh, logical, rules=dict(cfg.rules_override),
+                           abstract_tree=params_abs)
+
+    opt = adamw(cosine_with_warmup(3e-4, 100, 10_000), weight_decay=0.1)
+    step_fn = build_train_step(
+        model.train_forward, opt, grad_accum=cfg.grad_accum
+    )
+
+    f32like = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t
+    )
+    # AdamWState(step, mu, nu) — moments mirror the params in fp32
+    from repro.optim.adamw import AdamWState
+
+    state_abs = TrainState(
+        params=params_abs,
+        opt_state=AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=f32like(params_abs),
+            nu=f32like(params_abs),
+        ),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    rep = NamedSharding(mesh, P())
+    state_sh = TrainState(
+        params=p_sh,
+        opt_state=AdamWState(step=rep, mu=p_sh, nu=p_sh),
+        step=rep,
+    )
+    batch_abs, batch_sh = train_batch_specs(cfg, cell, mesh)
+
+    metrics_abs = jax.eval_shape(step_fn, state_abs, batch_abs)[1]
+    metrics_sh = jax.tree.map(lambda _: rep, metrics_abs)
+    return dict(
+        fn=step_fn,
+        args=(state_abs, batch_abs),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        # new state aliases old state (fp32 masters + both moments) —
+        # without donation the update holds two copies of all of it
+        donate_argnums=(0,),
+    )
+
+
+def _serve_model(cfg: ArchConfig):
+    ctx = ModelContext(
+        policy=cfg.tbn, mode=SERVE, use_pallas=False,
+        param_dtype=jnp.bfloat16, fsdp_weights=cfg.fsdp_weights,
+    )
+    return build_model(cfg, ctx)
+
+
+def build_prefill_cell(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    model = _serve_model(cfg)
+    specs = model.specs()
+    params_abs = mod.abstract_params(specs)
+    p_sh = param_shardings(
+        mesh, mod.logical_axes(specs), rules=dict(cfg.rules_override),
+        abstract_tree=params_abs,
+    )
+    b, s = cell.global_batch, cell.seq_len
+    ba = batch_axes(mesh, cfg)
+    max_len = s  # serve cache sized to the cell's seq_len
+
+    if cfg.family == "encdec":
+        sd = max(2, s // cfg.dec_ratio)
+        batch_abs = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, sd), jnp.int32),
+        }
+        batch_sh = {
+            "frames": fit_spec(mesh, (b, s, cfg.d_model), ba, None, None),
+            "tokens": fit_spec(mesh, (b, sd), ba, None),
+        }
+        max_len = sd
+    elif cfg.modality == "vlm":
+        batch_abs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "image_mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+            "image_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+        }
+        batch_sh = {
+            "tokens": fit_spec(mesh, (b, s), ba, None),
+            "image_mask": fit_spec(mesh, (b, s), ba, None),
+            "image_embeds": fit_spec(mesh, (b, s, cfg.d_model), ba, None, None),
+        }
+    else:
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        batch_sh = {"tokens": fit_spec(mesh, (b, s), ba, None)}
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    out_abs = jax.eval_shape(prefill_fn, params_abs, batch_abs)
+    logits_sh = fit_spec(mesh, out_abs[0].shape, ba, "model")
+    caches_sh = cache_shardings(mesh, out_abs[1], b)
+    len_sh = fit_spec(mesh, (b,), ba)
+    return dict(
+        fn=prefill_fn,
+        args=(params_abs, batch_abs),
+        in_shardings=(p_sh, batch_sh),
+        out_shardings=(logits_sh, caches_sh, len_sh),
+    )
+
+
+def build_decode_cell(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    model = _serve_model(cfg)
+    specs = model.specs()
+    params_abs = mod.abstract_params(specs)
+    p_sh = param_shardings(
+        mesh, mod.logical_axes(specs), rules=dict(cfg.rules_override),
+        abstract_tree=params_abs,
+    )
+    b, s = cell.global_batch, cell.seq_len
+    ba = batch_axes(mesh, cfg)
+
+    if cfg.family == "encdec":
+        caches_abs = jax.eval_shape(
+            lambda: _encdec_caches(model, cfg, b, s),
+        )
+    else:
+        caches_abs = jax.eval_shape(
+            lambda: model.init_caches(b, s, jnp.bfloat16)
+        )
+    caches_sh = cache_shardings(mesh, caches_abs, b)
+    toks_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    len_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+    toks_sh = fit_spec(mesh, (b, 1), ba, None)
+    len_sh = fit_spec(mesh, (b,), ba)
+
+    def decode_fn(params, tokens, caches, lengths):
+        return model.decode_step(params, tokens, caches, lengths)
+
+    out_abs = jax.eval_shape(decode_fn, params_abs, toks_abs, caches_abs, len_abs)
+    logits_sh = fit_spec(mesh, out_abs[0].shape, ba, "model")
+    return dict(
+        fn=decode_fn,
+        args=(params_abs, toks_abs, caches_abs, len_abs),
+        in_shardings=(p_sh, toks_sh, caches_sh, len_sh),
+        out_shardings=(logits_sh, caches_sh, len_sh),
+        # the KV cache updates in place — without donation the step holds
+        # input AND output cache copies (2x the dominant decode buffer)
+        donate_argnums=(2,),
+    )
+
+
+def _encdec_caches(model, cfg: ArchConfig, b: int, s: int):
+    """Decoder self-cache (len s) + cross K/V over an encoder memory of len s."""
+    hd = model.dec_block.self_attn.hd
+    kv = cfg.n_kv
+    L = cfg.dec_layers
+    z = lambda *sh: jnp.zeros(sh, jnp.bfloat16)
+    return {
+        "k": z(L, b, s, kv, hd),
+        "v": z(L, b, s, kv, hd),
+        "ck": z(L, b, s, kv, hd),
+        "cv": z(L, b, s, kv, hd),
+    }
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh: Mesh,
+    *,
+    depth: Optional[int] = None,
+    exact_flops: bool = False,
+):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ok, reason = cell_applicable(cfg, cell)
+    if not ok:
+        raise ValueError(f"{arch} x {shape}: {reason}")
+    cfg = depth_cfg(cfg, depth)
+    if exact_flops:
+        cfg = exact_cfg(cfg)
+    builder = {
+        "train": build_train_cell,
+        "prefill": build_prefill_cell,
+        "decode": build_decode_cell,
+    }[cell.kind]
+    return builder(cfg, cell, mesh)

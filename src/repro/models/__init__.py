@@ -1,0 +1,5 @@
+from repro.models.encdec import EncDecModel
+from repro.models.lm import DecoderLM
+from repro.models.paper import build_paper_model
+
+__all__ = ["DecoderLM", "EncDecModel", "build_paper_model"]

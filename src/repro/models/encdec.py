@@ -1,0 +1,307 @@
+"""Encoder-decoder backbone (seamless-m4t family).
+
+Encoder consumes precomputed frame embeddings (speech frontend is a stub
+per the assignment); decoder is causal with cross-attention to the encoder
+memory. Both stacks are lax.scan'd segments with TBN-tileable projections.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import logical_constraint
+from repro.nn import module as mod
+from repro.nn.attention import Attention
+from repro.nn.context import ModelContext
+from repro.nn.embeddings import Embedding
+from repro.nn.ffn import MLP
+from repro.nn.linear import Dense
+from repro.nn.norms import LayerNorm, RMSNorm
+
+
+def _norm(cfg, ctx, name):
+    cls = RMSNorm if cfg.norm == "rmsnorm" else LayerNorm
+    return cls(cfg.d_model, ctx, name=name)
+
+
+@dataclasses.dataclass
+class EncBlock:
+    cfg: ArchConfig
+    ctx: ModelContext
+    name: str = "enc"
+
+    def __post_init__(self):
+        cfg, c, d = self.cfg, self.ctx, self.cfg.d_model
+        self.norm1 = _norm(cfg, c, f"{self.name}.norm1")
+        self.attn = Attention(d, cfg.n_heads, cfg.n_kv, c, head_dim=cfg.head_dim,
+                              name=f"{self.name}.attn", causal=False,
+                              rope=cfg.rope_theta > 0, q_chunk=cfg.attn_chunk,
+                              act_mode=cfg.attn_act)
+        self.norm2 = _norm(cfg, c, f"{self.name}.norm2")
+        self.ffn = MLP(d, cfg.d_ff, c, name=f"{self.name}.mlp",
+                       gated=cfg.gated_mlp, activation=cfg.activation)
+
+    def specs(self):
+        return {"norm1": self.norm1.specs(), "attn": self.attn.specs(),
+                "norm2": self.norm2.specs(), "ffn": self.ffn.specs()}
+
+    def __call__(self, params, x):
+        x = x + self.attn(params["attn"], self.norm1(params["norm1"], x))
+        x = x + self.ffn(params["ffn"], self.norm2(params["norm2"], x))
+        return logical_constraint(x, "act_batch", "act_res_seq", "act_embed")
+
+
+@dataclasses.dataclass
+class DecBlock:
+    cfg: ArchConfig
+    ctx: ModelContext
+    name: str = "dec"
+
+    def __post_init__(self):
+        cfg, c, d = self.cfg, self.ctx, self.cfg.d_model
+        self.norm1 = _norm(cfg, c, f"{self.name}.norm1")
+        self.self_attn = Attention(d, cfg.n_heads, cfg.n_kv, c,
+                                   head_dim=cfg.head_dim,
+                                   name=f"{self.name}.self_attn", causal=True,
+                                   rope=cfg.rope_theta > 0, q_chunk=cfg.attn_chunk,
+                                   act_mode=cfg.attn_act)
+        self.norm2 = _norm(cfg, c, f"{self.name}.norm2")
+        self.cross_attn = Attention(d, cfg.n_heads, cfg.n_kv, c,
+                                    head_dim=cfg.head_dim,
+                                    name=f"{self.name}.cross_attn",
+                                    causal=False, cross=True, rope=False,
+                                    q_chunk=cfg.attn_chunk,
+                                    act_mode=cfg.attn_act)
+        self.norm3 = _norm(cfg, c, f"{self.name}.norm3")
+        self.ffn = MLP(d, cfg.d_ff, c, name=f"{self.name}.mlp",
+                       gated=cfg.gated_mlp, activation=cfg.activation)
+
+    def specs(self):
+        return {"norm1": self.norm1.specs(), "self_attn": self.self_attn.specs(),
+                "norm2": self.norm2.specs(), "cross_attn": self.cross_attn.specs(),
+                "norm3": self.norm3.specs(), "ffn": self.ffn.specs()}
+
+    def __call__(self, params, x, memory):
+        x = x + self.self_attn(params["self_attn"], self.norm1(params["norm1"], x))
+        x = x + self.cross_attn(params["cross_attn"],
+                                self.norm2(params["norm2"], x), kv_src=memory)
+        x = x + self.ffn(params["ffn"], self.norm3(params["norm3"], x))
+        return logical_constraint(x, "act_batch", "act_res_seq", "act_embed")
+
+    def init_cache(self, batch, max_len, dtype):
+        hd = self.self_attn.hd
+        return {
+            "k": jnp.zeros((batch, max_len, self.cfg.n_kv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, self.cfg.n_kv, hd), dtype),
+            # cross K/V computed once at prefill
+            "ck": None,
+            "cv": None,
+        }
+
+    def decode_step(self, params, x, cache, lengths):
+        import math as _math
+
+        from repro.nn.attention import _attend_core, make_mask
+
+        h = self.norm1(params["norm1"], x)
+        h, ck_, cv_ = self.self_attn.decode_step(
+            params["self_attn"], h, cache["k"], cache["v"], lengths)
+        x = x + h
+        # cross attention against precomputed memory K/V
+        mixer = self.cross_attn
+        b = x.shape[0]
+        h = self.norm2(params["norm2"], x)
+        q = mixer.wq(params["cross_attn"]["wq"], h).reshape(
+            b, 1, mixer.n_heads, mixer.hd)
+        mask = jnp.ones((b, 1, cache["ck"].shape[1]), bool)
+        out = _attend_core(mixer._group(q), cache["ck"], cache["cv"], mask,
+                           1.0 / _math.sqrt(mixer.hd))
+        h = mixer.wo(params["cross_attn"]["wo"],
+                     out.reshape(b, 1, mixer.n_heads * mixer.hd))
+        x = x + h
+        x = x + self.ffn(params["ffn"], self.norm3(params["norm3"], x))
+        return x, {**cache, "k": ck_, "v": cv_}
+
+
+class EncDecModel:
+    """seamless-m4t backbone: frame embeddings -> encoder -> text decoder."""
+
+    def __init__(self, cfg: ArchConfig, ctx: Optional[ModelContext] = None):
+        self.cfg = cfg
+        self.ctx = ctx or ModelContext(policy=cfg.tbn)
+        c = self.ctx
+        d = cfg.d_model
+        self.frame_proj = Dense(d, d, c, name="frame_proj",
+                                logical=("embed", "embed"))
+        self.embed = Embedding(cfg.vocab, d, c, name="dec_embed")
+        self.enc_block = EncBlock(cfg, c)
+        self.dec_block = DecBlock(cfg, c)
+        self.enc_norm = _norm(cfg, c, "enc_norm")
+        self.dec_norm = _norm(cfg, c, "dec_norm")
+        self.head = Dense(d, cfg.vocab, c, name="lm_head", kind="head",
+                          logical=("vocab", "embed"))
+
+    def specs(self) -> mod.SpecTree:
+        return {
+            "frame_proj": self.frame_proj.specs(),
+            "embed": self.embed.specs(),
+            "enc": mod.stack_specs(self.enc_block.specs(), self.cfg.enc_layers),
+            "dec": mod.stack_specs(self.dec_block.specs(), self.cfg.dec_layers),
+            "enc_norm": self.enc_norm.specs(),
+            "dec_norm": self.dec_norm.specs(),
+            "head": self.head.specs(),
+        }
+
+    def init(self, key):
+        return mod.init_params(self.specs(), key)
+
+    def abstract(self):
+        return mod.abstract_params(self.specs())
+
+    def logical(self):
+        return mod.logical_axes(self.specs())
+
+    def _remat(self, f):
+        if self.cfg.remat == "none":
+            return f
+        return jax.checkpoint(f)
+
+    def encode(self, params, frames):
+        """frames: (B, S_enc, d_model) precomputed frontend embeddings."""
+        x = self.frame_proj(params["frame_proj"], frames)
+        x = logical_constraint(x, "act_batch", "act_seq", "act_embed")
+
+        if self.cfg.force_unroll:
+            for j in range(self.cfg.enc_layers):
+                pl = jax.tree.map(lambda v: v[j], params["enc"])
+                x = self.enc_block(pl, x)
+            return self.enc_norm(params["enc_norm"], x)
+
+        def body(h, pl):
+            return self._remat(lambda h, pl: (self.enc_block(pl, h), None))(h, pl)
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return self.enc_norm(params["enc_norm"], x)
+
+    def decode(self, params, tokens, memory):
+        x = self.embed(params["embed"], tokens)
+        x = logical_constraint(x, "act_batch", "act_seq", "act_embed")
+
+        if self.cfg.force_unroll:
+            for j in range(self.cfg.dec_layers):
+                pl = jax.tree.map(lambda v: v[j], params["dec"])
+                x = self.dec_block(pl, x, memory)
+            return self.dec_norm(params["dec_norm"], x)
+
+        def body(h, pl):
+            return self._remat(
+                lambda h, pl: (self.dec_block(pl, h, memory), None)
+            )(h, pl)
+
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        return self.dec_norm(params["dec_norm"], x)
+
+    def train_forward(self, params, batch) -> Tuple[jax.Array, Dict]:
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        h = self.decode(params, tokens, memory)
+        # full-seq logits + masked roll (keeps S divisible for SP sharding);
+        # CE is batch-chunked + remat'd — the 256206-entry vocab does not
+        # shard over 16 (odd), so unchunked (B, S, V) f32 logits would
+        # replicate at 16 GB/device.
+        targets = jnp.roll(tokens, -1, axis=1)
+        valid = (jnp.arange(s) < s - 1).astype(jnp.float32)[None, :]
+        mask = jnp.broadcast_to(valid, tokens.shape)
+        b = tokens.shape[0]
+        # 32-divisible sub-batches: see DecoderLM._ce_sum
+        nb = b // 32 if (b % 32 == 0 and s * self.cfg.vocab >= 2**26) else 1
+
+        def chunk_sum(hc, tc, mc):
+            # re-pin batch sharding inside the chunk loop (see DecoderLM)
+            hc = logical_constraint(hc, "act_batch", None, None)
+            tc = logical_constraint(tc, "act_batch", None)
+            mc = logical_constraint(mc, "act_batch", None)
+            logits = self.head(params["head"], hc)
+            logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+            gold = jnp.take_along_axis(
+                logits.astype(jnp.float32), tc[..., None], axis=-1)[..., 0]
+            return jnp.sum((logz - gold) * mc)
+
+        if nb == 1:
+            nll = chunk_sum(h, targets, mask)
+        else:
+            resh = lambda z: z.reshape(nb, b // nb, *z.shape[1:])
+            body = jax.checkpoint(
+                lambda acc, inp: (acc + chunk_sum(*inp), None)
+            )
+            nll, _ = jax.lax.scan(
+                body, jnp.zeros((), jnp.float32),
+                (resh(h), resh(targets), resh(mask)),
+            )
+        ce = nll / jnp.maximum(mask.sum(), 1.0)
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    # ---------------- serving ----------------
+    def prefill(self, params, batch, max_len: int):
+        """Encode frames + run decoder prompt; build self+cross caches."""
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self.embed(params["embed"], tokens)
+
+        def body(h, pl):
+            h2 = self.dec_block(pl, h, memory)
+            # capture self-attn KV of the prompt + cross KV of the memory
+            blk = self.dec_block
+            hh = blk.norm1(pl["norm1"], h)
+            _, (k, v) = blk.self_attn.prefill(pl["self_attn"], hh)
+            t = memory.shape[1]
+            ck = blk.cross_attn.wk(pl["cross_attn"]["wk"], memory).reshape(
+                b, t, blk.cross_attn.n_kv, blk.cross_attn.hd)
+            cv = blk.cross_attn.wv(pl["cross_attn"]["wv"], memory).reshape(
+                b, t, blk.cross_attn.n_kv, blk.cross_attn.hd)
+            pad = max_len - s
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h2, {"k": k, "v": v, "ck": ck, "cv": cv}
+
+        if self.cfg.force_unroll:
+            per_layer = []
+            for j in range(self.cfg.dec_layers):
+                pl = jax.tree.map(lambda v: v[j], params["dec"])
+                x, cl = body(x, pl)      # (h2, this layer's caches)
+                per_layer.append(cl)
+            caches = jax.tree.map(lambda *ls: jnp.stack(ls), *per_layer)
+        else:
+            x, caches = jax.lax.scan(body, x, params["dec"])
+        h = self.dec_norm(params["dec_norm"], x[:, -1:])
+        logits = self.head(params["head"], h)
+        return logits[:, 0], caches, jnp.full((b,), s, jnp.int32)
+
+    def decode_step(self, params, tokens, caches, lengths):
+        x = self.embed(params["embed"], tokens)
+
+        def body(h, xs):
+            pl, cl = xs
+            cl = jax.lax.optimization_barrier(cl)   # see lm.py decode_step
+            h2, c2 = self.dec_block.decode_step(pl, h, cl, lengths)
+            return h2, c2
+
+        if self.cfg.force_unroll:
+            per_layer = []
+            for j in range(self.cfg.dec_layers):
+                pl = jax.tree.map(lambda v: v[j], params["dec"])
+                cl = jax.tree.map(lambda v: v[j], caches)
+                x, c2 = body(x, (pl, cl))
+                per_layer.append(c2)
+            caches = jax.tree.map(lambda *ls: jnp.stack(ls), *per_layer)
+        else:
+            x, caches = jax.lax.scan(body, x, (params["dec"], caches))
+        h = self.dec_norm(params["dec_norm"], x)
+        logits = self.head(params["head"], h)
+        return logits[:, 0], caches, lengths + 1

@@ -1,0 +1,603 @@
+"""The paper's own evaluation architectures, on the TBN substrate.
+
+Exact layer shapes (the bit/param accounting in Tables 1-7 depends only on
+them) + runnable forward/train paths for the synthetic-data validation at
+reduced scale. Every Conv2D/Dense consults the model's TBNPolicy, so a
+single ``policy=`` switch produces the FP32 / BWNN / TBN_p variants the
+paper compares.
+
+Families:  ResNet-18/34/50, VGG-Small     (Table 1/2)
+           PointNet (cls / part / sem)    (Table 3)
+           ViT, Swin-lite                 (Table 4)
+           TS-Transformer encoder         (Table 5)
+           MCU-MLP 784-128-10             (Table 6, Algorithm 1)
+           MLPMixer, ConvMixer            (Fig. 6/7)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+from repro.nn.linear import Conv2D, Dense
+from repro.nn.norms import LayerNorm
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChannelNorm:
+    """LayerNorm over the channel axis (BN stand-in; never quantized)."""
+
+    dim: int
+    ctx: ModelContext
+    name: str = "cnorm"
+
+    def __post_init__(self):
+        self.ln = LayerNorm(self.dim, self.ctx, name=self.name)
+
+    def specs(self):
+        return self.ln.specs()
+
+    def __call__(self, params, x):
+        return self.ln(params, x)
+
+
+class _Seq:
+    """Name->module container with dict specs/params."""
+
+    def __init__(self):
+        self._mods = {}
+
+    def add(self, name, m):
+        self._mods[name] = m
+        return m
+
+    def specs(self):
+        return {k: m.specs() for k, m in self._mods.items()}
+
+    def __getitem__(self, k):
+        return self._mods[k]
+
+    def items(self):
+        return self._mods.items()
+
+
+# ---------------------------------------------------------------------------
+# ResNet / VGG (Table 1, 2)
+# ---------------------------------------------------------------------------
+class ResNet:
+    """CIFAR-style (3x3 stem) or ImageNet-style (7x7 stem) ResNet."""
+
+    CFG = {
+        18: ("basic", (2, 2, 2, 2)),
+        34: ("basic", (3, 4, 6, 3)),
+        50: ("bottleneck", (3, 4, 6, 3)),
+    }
+
+    def __init__(self, depth: int, ctx: ModelContext, *, classes=10,
+                 imagenet=False, width=64):
+        self.ctx = ctx
+        self.classes = classes
+        self.imagenet = imagenet
+        kind, blocks = self.CFG[depth]
+        self.kind = kind
+        self.expansion = 4 if kind == "bottleneck" else 1
+        m = self.m = _Seq()
+        res = 224 if imagenet else 32
+        if imagenet:
+            m.add("stem", Conv2D(3, width, (7, 7), ctx, stride=(2, 2),
+                                 name="stem"))
+            res //= 4  # stride-2 conv + pool
+        else:
+            m.add("stem", Conv2D(3, width, (3, 3), ctx, name="stem"))
+        m.add("stem_norm", ChannelNorm(width, ctx, name="stem_norm"))
+        c_in = width
+        self.block_names: List[Tuple[str, int, int, int]] = []
+        for stage, n in enumerate(blocks):
+            c_mid = width * (2 ** stage)
+            stride = 1 if stage == 0 else 2
+            for b in range(n):
+                s = stride if b == 0 else 1
+                name = f"s{stage}b{b}"
+                self._add_block(name, c_in, c_mid, s)
+                c_in = c_mid * self.expansion
+                self.block_names.append((name, c_mid, s, c_in))
+        m.add("head", Dense(c_in, classes, ctx, name="head", kind="head",
+                            logical=(None, None)))
+
+    def _add_block(self, name, c_in, c_mid, stride):
+        ctx, m = self.ctx, self.m
+        if self.kind == "basic":
+            m.add(f"{name}.c1", Conv2D(c_in, c_mid, (3, 3), ctx,
+                                       stride=(stride, stride), name=f"{name}.c1"))
+            m.add(f"{name}.n1", ChannelNorm(c_mid, ctx))
+            m.add(f"{name}.c2", Conv2D(c_mid, c_mid, (3, 3), ctx, name=f"{name}.c2"))
+            m.add(f"{name}.n2", ChannelNorm(c_mid, ctx))
+            c_out = c_mid
+        else:
+            m.add(f"{name}.c1", Conv2D(c_in, c_mid, (1, 1), ctx, name=f"{name}.c1"))
+            m.add(f"{name}.n1", ChannelNorm(c_mid, ctx))
+            m.add(f"{name}.c2", Conv2D(c_mid, c_mid, (3, 3), ctx,
+                                       stride=(stride, stride), name=f"{name}.c2"))
+            m.add(f"{name}.n2", ChannelNorm(c_mid, ctx))
+            m.add(f"{name}.c3", Conv2D(c_mid, c_mid * 4, (1, 1), ctx, name=f"{name}.c3"))
+            m.add(f"{name}.n3", ChannelNorm(c_mid * 4, ctx))
+            c_out = c_mid * 4
+        if stride != 1 or c_in != c_out:
+            m.add(f"{name}.down", Conv2D(c_in, c_out, (1, 1), ctx,
+                                         stride=(stride, stride), name=f"{name}.down"))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        m = self.m
+        h = m["stem"](params["stem"], x)
+        if self.imagenet:
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+        h = jax.nn.relu(m["stem_norm"](params["stem_norm"], h))
+        for name, c_mid, stride, c_out in self.block_names:
+            idn = h
+            if self.kind == "basic":
+                h2 = jax.nn.relu(m[f"{name}.n1"](params[f"{name}.n1"],
+                                 m[f"{name}.c1"](params[f"{name}.c1"], h)))
+                h2 = m[f"{name}.n2"](params[f"{name}.n2"],
+                                     m[f"{name}.c2"](params[f"{name}.c2"], h2))
+            else:
+                h2 = jax.nn.relu(m[f"{name}.n1"](params[f"{name}.n1"],
+                                 m[f"{name}.c1"](params[f"{name}.c1"], h)))
+                h2 = jax.nn.relu(m[f"{name}.n2"](params[f"{name}.n2"],
+                                 m[f"{name}.c2"](params[f"{name}.c2"], h2)))
+                h2 = m[f"{name}.n3"](params[f"{name}.n3"],
+                                     m[f"{name}.c3"](params[f"{name}.c3"], h2))
+            if f"{name}.down" in params:
+                idn = m[f"{name}.down"](params[f"{name}.down"], idn)
+            h = jax.nn.relu(idn + h2)
+        h = jnp.mean(h, axis=(1, 2))
+        return self.m["head"](params["head"], h)
+
+
+class VGGSmall:
+    """The binary-nets VGG-Small: 6 convs (128..512) + classifier."""
+
+    def __init__(self, ctx: ModelContext, classes=10):
+        self.ctx = ctx
+        m = self.m = _Seq()
+        chans = [(3, 128), (128, 128), (128, 256), (256, 256),
+                 (256, 512), (512, 512)]
+        for i, (ci, co) in enumerate(chans):
+            m.add(f"c{i}", Conv2D(ci, co, (3, 3), ctx, name=f"c{i}"))
+            m.add(f"n{i}", ChannelNorm(co, ctx))
+        m.add("head", Dense(512 * 4 * 4, classes, ctx, name="head",
+                            kind="head", logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        h = x
+        for i in range(6):
+            h = self.m[f"c{i}"](params[f"c{i}"], h)
+            h = jax.nn.relu(self.m[f"n{i}"](params[f"n{i}"], h))
+            if i % 2 == 1:  # pool after every pair: 32->16->8->4
+                h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                          (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        h = h.reshape(h.shape[0], -1)
+        return self.m["head"](params["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# ViT / Swin-lite / Mixer family (Table 4, Fig. 6)
+# ---------------------------------------------------------------------------
+class ViT:
+    def __init__(self, ctx: ModelContext, *, dim=512, depth=6, heads=8,
+                 mlp_dim=512, patch=4, img=32, classes=10):
+        self.ctx, self.dim, self.depth, self.heads = ctx, dim, depth, heads
+        self.patch, self.img = patch, img
+        n_tokens = (img // patch) ** 2
+        m = self.m = _Seq()
+        m.add("embed", Dense(patch * patch * 3, dim, ctx, name="embed",
+                             logical=(None, None)))
+        self.pos = mod.ParamSpec((n_tokens, dim), jnp.float32, (None, None),
+                                 mod.normal(0.02))
+        for i in range(depth):
+            m.add(f"l{i}.qkv", Dense(dim, 3 * dim, ctx, name=f"l{i}.qkv",
+                                     logical=(None, None)))
+            m.add(f"l{i}.proj", Dense(dim, dim, ctx, name=f"l{i}.proj",
+                                      logical=(None, None)))
+            m.add(f"l{i}.n1", ChannelNorm(dim, ctx))
+            m.add(f"l{i}.fc1", Dense(dim, mlp_dim, ctx, name=f"l{i}.fc1",
+                                     logical=(None, None)))
+            m.add(f"l{i}.fc2", Dense(mlp_dim, dim, ctx, name=f"l{i}.fc2",
+                                     logical=(None, None)))
+            m.add(f"l{i}.n2", ChannelNorm(dim, ctx))
+        m.add("head", Dense(dim, classes, ctx, name="head", kind="head",
+                            logical=(None, None)))
+
+    def specs(self):
+        out = self.m.specs()
+        out["pos"] = self.pos
+        return out
+
+    def __call__(self, params, x):
+        b = x.shape[0]
+        p, img = self.patch, self.img
+        n = img // p
+        x = x.reshape(b, n, p, n, p, 3).transpose(0, 1, 3, 2, 4, 5)
+        x = x.reshape(b, n * n, p * p * 3)
+        h = self.m["embed"](params["embed"], x) + params["pos"]
+        hd = self.dim // self.heads
+        for i in range(self.depth):
+            z = self.m[f"l{i}.n1"](params[f"l{i}.n1"], h)
+            qkv = self.m[f"l{i}.qkv"](params[f"l{i}.qkv"], z)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            rs = lambda t: t.reshape(b, -1, self.heads, hd)
+            att = jnp.einsum("bqhd,bkhd->bhqk", rs(q), rs(k)) / math.sqrt(hd)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", att, rs(v)).reshape(b, -1, self.dim)
+            h = h + self.m[f"l{i}.proj"](params[f"l{i}.proj"], o)
+            z = self.m[f"l{i}.n2"](params[f"l{i}.n2"], h)
+            z = jax.nn.gelu(self.m[f"l{i}.fc1"](params[f"l{i}.fc1"], z))
+            h = h + self.m[f"l{i}.fc2"](params[f"l{i}.fc2"], z)
+        return self.m["head"](params["head"], jnp.mean(h, axis=1))
+
+
+class SwinLite:
+    """Hierarchical transformer (patch-merging stages, full attention
+    within stage) — swin-t parameter profile without window bookkeeping."""
+
+    def __init__(self, ctx: ModelContext, *, img=32, classes=10,
+                 dims=(96, 192, 384, 768), depths=(2, 2, 6, 2), patch=2):
+        self.ctx, self.img, self.patch = ctx, img, patch
+        self.dims, self.depths = dims, depths
+        m = self.m = _Seq()
+        m.add("embed", Dense(patch * patch * 3, dims[0], ctx, name="embed",
+                             logical=(None, None)))
+        for s, (d, n) in enumerate(zip(dims, depths)):
+            for b in range(n):
+                pre = f"s{s}b{b}"
+                m.add(f"{pre}.qkv", Dense(d, 3 * d, ctx, name=f"{pre}.qkv",
+                                          logical=(None, None)))
+                m.add(f"{pre}.proj", Dense(d, d, ctx, name=f"{pre}.proj",
+                                           logical=(None, None)))
+                m.add(f"{pre}.n1", ChannelNorm(d, ctx))
+                m.add(f"{pre}.fc1", Dense(d, 4 * d, ctx, name=f"{pre}.fc1",
+                                          logical=(None, None)))
+                m.add(f"{pre}.fc2", Dense(4 * d, d, ctx, name=f"{pre}.fc2",
+                                          logical=(None, None)))
+                m.add(f"{pre}.n2", ChannelNorm(d, ctx))
+            if s + 1 < len(dims):
+                m.add(f"merge{s}", Dense(4 * d, dims[s + 1], ctx,
+                                         name=f"merge{s}", logical=(None, None)))
+        m.add("head", Dense(dims[-1], classes, ctx, name="head", kind="head",
+                            logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        b = x.shape[0]
+        p = self.patch
+        n = self.img // p
+        x = x.reshape(b, n, p, n, p, 3).transpose(0, 1, 3, 2, 4, 5)
+        h = self.m["embed"](params["embed"],
+                            x.reshape(b, n * n, p * p * 3))
+        side = n
+        for s, (d, nblk) in enumerate(zip(self.dims, self.depths)):
+            heads = max(1, d // 32)
+            hd = d // heads
+            for blk in range(nblk):
+                pre = f"s{s}b{blk}"
+                z = self.m[f"{pre}.n1"](params[f"{pre}.n1"], h)
+                qkv = self.m[f"{pre}.qkv"](params[f"{pre}.qkv"], z)
+                q, k, v = jnp.split(qkv, 3, axis=-1)
+                rs = lambda t: t.reshape(b, -1, heads, hd)
+                att = jax.nn.softmax(
+                    jnp.einsum("bqhd,bkhd->bhqk", rs(q), rs(k)) / math.sqrt(hd),
+                    axis=-1)
+                o = jnp.einsum("bhqk,bkhd->bqhd", att, rs(v)).reshape(b, -1, d)
+                h = h + self.m[f"{pre}.proj"](params[f"{pre}.proj"], o)
+                z = self.m[f"{pre}.n2"](params[f"{pre}.n2"], h)
+                z = jax.nn.gelu(self.m[f"{pre}.fc1"](params[f"{pre}.fc1"], z))
+                h = h + self.m[f"{pre}.fc2"](params[f"{pre}.fc2"], z)
+            if s + 1 < len(self.dims):
+                h = h.reshape(b, side // 2, 2, side // 2, 2, d)
+                h = h.transpose(0, 1, 3, 2, 4, 5).reshape(
+                    b, (side // 2) ** 2, 4 * d)
+                h = self.m[f"merge{s}"](params[f"merge{s}"], h)
+                side //= 2
+        return self.m["head"](params["head"], jnp.mean(h, axis=1))
+
+
+class MLPMixer:
+    def __init__(self, ctx: ModelContext, *, dim=512, depth=6, patch=4,
+                 img=32, classes=10, token_hidden=256, chan_hidden=256):
+        self.ctx, self.dim, self.depth = ctx, dim, depth
+        self.patch, self.img = patch, img
+        n_tok = (img // patch) ** 2
+        self.n_tok = n_tok
+        m = self.m = _Seq()
+        m.add("embed", Dense(patch * patch * 3, dim, ctx, name="embed",
+                             logical=(None, None)))
+        for i in range(depth):
+            m.add(f"l{i}.t1", Dense(n_tok, token_hidden, ctx, name=f"l{i}.t1",
+                                    logical=(None, None)))
+            m.add(f"l{i}.t2", Dense(token_hidden, n_tok, ctx, name=f"l{i}.t2",
+                                    logical=(None, None)))
+            m.add(f"l{i}.c1", Dense(dim, chan_hidden, ctx, name=f"l{i}.c1",
+                                    logical=(None, None)))
+            m.add(f"l{i}.c2", Dense(chan_hidden, dim, ctx, name=f"l{i}.c2",
+                                    logical=(None, None)))
+            m.add(f"l{i}.n1", ChannelNorm(dim, ctx))
+            m.add(f"l{i}.n2", ChannelNorm(dim, ctx))
+        m.add("head", Dense(dim, classes, ctx, name="head", kind="head",
+                            logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        b = x.shape[0]
+        p, img = self.patch, self.img
+        n = img // p
+        x = x.reshape(b, n, p, n, p, 3).transpose(0, 1, 3, 2, 4, 5)
+        h = self.m["embed"](params["embed"], x.reshape(b, n * n, p * p * 3))
+        for i in range(self.depth):
+            z = self.m[f"l{i}.n1"](params[f"l{i}.n1"], h).swapaxes(1, 2)
+            z = jax.nn.gelu(self.m[f"l{i}.t1"](params[f"l{i}.t1"], z))
+            z = self.m[f"l{i}.t2"](params[f"l{i}.t2"], z).swapaxes(1, 2)
+            h = h + z
+            z = self.m[f"l{i}.n2"](params[f"l{i}.n2"], h)
+            z = jax.nn.gelu(self.m[f"l{i}.c1"](params[f"l{i}.c1"], z))
+            h = h + self.m[f"l{i}.c2"](params[f"l{i}.c2"], z)
+        return self.m["head"](params["head"], jnp.mean(h, axis=1))
+
+
+class ConvMixer:
+    def __init__(self, ctx: ModelContext, *, dim=256, depth=16, kernel=8,
+                 patch=1, img=32, classes=10):
+        self.ctx, self.dim, self.depth = ctx, dim, depth
+        self.kernel, self.patch, self.img = kernel, patch, img
+        m = self.m = _Seq()
+        m.add("embed", Conv2D(3, dim, (patch, patch), ctx,
+                              stride=(patch, patch), name="embed"))
+        for i in range(depth):
+            # depthwise: modeled as grouped conv = dim separate (1,k,k);
+            # stored as (dim, 1, k, k) — same param count as the paper
+            m.add(f"l{i}.dw", Conv2D(1, dim, (kernel, kernel), ctx,
+                                     name=f"l{i}.dw"))
+            m.add(f"l{i}.pw", Conv2D(dim, dim, (1, 1), ctx, name=f"l{i}.pw"))
+            m.add(f"l{i}.n1", ChannelNorm(dim, ctx))
+            m.add(f"l{i}.n2", ChannelNorm(dim, ctx))
+        m.add("head", Dense(dim, classes, ctx, name="head", kind="head",
+                            logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        h = jax.nn.gelu(self.m["embed"](params["embed"], x))
+        for i in range(self.depth):
+            w = params[f"l{i}.dw"]["w"]  # (dim,1,k,k) depthwise
+            dw = self.m[f"l{i}.dw"]
+            weff = w
+            if dw.spec is not None:
+                from repro.core.tiling import tiled_weight
+                weff = tiled_weight(w, dw.spec, a=params[f"l{i}.dw"].get("a"),
+                                    dtype=h.dtype).reshape(w.shape)
+            z = jax.lax.conv_general_dilated(
+                h, weff.astype(h.dtype), (1, 1), "SAME",
+                feature_group_count=self.dim,
+                dimension_numbers=("NHWC", "OIHW", "NHWC"))
+            h = h + jax.nn.gelu(self.m[f"l{i}.n1"](params[f"l{i}.n1"], z))
+            z = self.m[f"l{i}.pw"](params[f"l{i}.pw"], h)
+            h = jax.nn.gelu(self.m[f"l{i}.n2"](params[f"l{i}.n2"], z))
+        return self.m["head"](params["head"], jnp.mean(h, axis=(1, 2)))
+
+
+# ---------------------------------------------------------------------------
+# PointNet (Table 3)
+# ---------------------------------------------------------------------------
+class TNet:
+    """PointNet spatial/feature transform regressor (k x k matrix)."""
+
+    def __init__(self, ctx: ModelContext, k: int, name: str):
+        self.k, self.name = k, name
+        m = self.m = _Seq()
+        for i, w in enumerate((64, 128, 1024)):
+            m.add(f"mlp{i}", Dense(k if i == 0 else (64, 128)[i - 1], w, ctx,
+                                   name=f"{name}.mlp{i}", logical=(None, None)))
+            m.add(f"n{i}", ChannelNorm(w, ctx))
+        m.add("fc1", Dense(1024, 512, ctx, name=f"{name}.fc1",
+                           logical=(None, None)))
+        m.add("fc2", Dense(512, 256, ctx, name=f"{name}.fc2",
+                           logical=(None, None)))
+        m.add("out", Dense(256, k * k, ctx, name=f"{name}.out", kind="head",
+                           logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        h = x
+        for i in range(3):
+            h = self.m[f"mlp{i}"](params[f"mlp{i}"], h)
+            h = jax.nn.relu(self.m[f"n{i}"](params[f"n{i}"], h))
+        g = jnp.max(h, axis=1)
+        g = jax.nn.relu(self.m["fc1"](params["fc1"], g))
+        g = jax.nn.relu(self.m["fc2"](params["fc2"], g))
+        mat = self.m["out"](params["out"], g).reshape(-1, self.k, self.k)
+        return mat + jnp.eye(self.k)[None]
+
+
+class PointNet:
+    """Unified PointNet (with input/feature T-Nets): shared per-point MLPs
+    + global max pool.
+
+    task: "cls" (k classes), "part" (per-point part logits, global+local
+    concat), "sem" (per-point semantic logits).
+    """
+
+    def __init__(self, ctx: ModelContext, *, task="cls", classes=40,
+                 widths=(64, 64, 64, 128, 1024)):
+        self.ctx, self.task, self.classes = ctx, task, classes
+        self.widths = widths
+        m = self.m = _Seq()
+        m.add("tnet1", TNet(ctx, 3, "tnet1"))
+        m.add("tnet2", TNet(ctx, widths[1], "tnet2"))
+        c_in = 3
+        for i, w in enumerate(widths):
+            m.add(f"mlp{i}", Dense(c_in, w, ctx, name=f"mlp{i}",
+                                   logical=(None, None)))
+            m.add(f"n{i}", ChannelNorm(w, ctx))
+            c_in = w
+        g = widths[-1]
+        if task == "cls":
+            m.add("fc1", Dense(g, 512, ctx, name="fc1", logical=(None, None)))
+            m.add("fc2", Dense(512, 256, ctx, name="fc2", logical=(None, None)))
+            m.add("head", Dense(256, classes, ctx, name="head", kind="head",
+                                logical=(None, None)))
+        else:
+            # segmentation: concat(global, point feature) -> per-point MLP
+            seg_in = g + widths[2]
+            seg_w = (512, 256, 128) if task == "part" else (256, 128)
+            c = seg_in
+            self.seg_w = seg_w
+            for i, w in enumerate(seg_w):
+                m.add(f"seg{i}", Dense(c, w, ctx, name=f"seg{i}",
+                                       logical=(None, None)))
+                m.add(f"sn{i}", ChannelNorm(w, ctx))
+                c = w
+            m.add("head", Dense(c, classes, ctx, name="head", kind="head",
+                                logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, pts):
+        """pts (B, N, 3) -> logits: cls (B, k) | seg (B, N, k)."""
+        t1 = self.m["tnet1"](params["tnet1"], pts)
+        h = jnp.einsum("bnk,bkj->bnj", pts, t1)
+        feats = None
+        for i in range(len(self.widths)):
+            h = self.m[f"mlp{i}"](params[f"mlp{i}"], h)
+            h = jax.nn.relu(self.m[f"n{i}"](params[f"n{i}"], h))
+            if i == 1:  # feature transform after the 64-wide stage
+                t2 = self.m["tnet2"](params["tnet2"], h)
+                h = jnp.einsum("bnk,bkj->bnj", h, t2)
+            if i == 2:
+                feats = h
+        g = jnp.max(h, axis=1)                       # (B, g)
+        if self.task == "cls":
+            z = jax.nn.relu(self.m["fc1"](params["fc1"], g))
+            z = jax.nn.relu(self.m["fc2"](params["fc2"], z))
+            return self.m["head"](params["head"], z)
+        n = pts.shape[1]
+        z = jnp.concatenate(
+            [feats, jnp.broadcast_to(g[:, None, :], (g.shape[0], n, g.shape[1]))],
+            axis=-1)
+        for i in range(len(self.seg_w)):
+            z = self.m[f"seg{i}"](params[f"seg{i}"], z)
+            z = jax.nn.relu(self.m[f"sn{i}"](params[f"sn{i}"], z))
+        return self.m["head"](params["head"], z)
+
+
+# ---------------------------------------------------------------------------
+# Time-series Transformer encoder (Table 5)
+# ---------------------------------------------------------------------------
+class TSTransformer:
+    def __init__(self, ctx: ModelContext, *, features=321, dim=512, depth=3,
+                 heads=8, d_ff=512, horizon=1):
+        self.ctx, self.dim, self.depth, self.heads = ctx, dim, depth, heads
+        self.features, self.horizon = features, horizon
+        m = self.m = _Seq()
+        m.add("embed", Dense(features, dim, ctx, name="embed",
+                             logical=(None, None)))
+        for i in range(depth):
+            m.add(f"l{i}.qkv", Dense(dim, 3 * dim, ctx, name=f"l{i}.qkv",
+                                     logical=(None, None)))
+            m.add(f"l{i}.proj", Dense(dim, dim, ctx, name=f"l{i}.proj",
+                                      logical=(None, None)))
+            m.add(f"l{i}.fc1", Dense(dim, d_ff, ctx, name=f"l{i}.fc1",
+                                     logical=(None, None)))
+            m.add(f"l{i}.fc2", Dense(d_ff, dim, ctx, name=f"l{i}.fc2",
+                                     logical=(None, None)))
+            m.add(f"l{i}.n1", ChannelNorm(dim, ctx))
+            m.add(f"l{i}.n2", ChannelNorm(dim, ctx))
+        m.add("head", Dense(dim, features * horizon, ctx, name="head",
+                            kind="head", logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        """x (B, L, F) -> next-step forecast (B, horizon, F)."""
+        b, L, f = x.shape
+        h = self.m["embed"](params["embed"], x)
+        pos = jnp.arange(L)[None, :, None] / L
+        h = h + pos.astype(h.dtype)
+        hd = self.dim // self.heads
+        for i in range(self.depth):
+            z = self.m[f"l{i}.n1"](params[f"l{i}.n1"], h)
+            qkv = self.m[f"l{i}.qkv"](params[f"l{i}.qkv"], z)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            rs = lambda t: t.reshape(b, -1, self.heads, hd)
+            att = jax.nn.softmax(
+                jnp.einsum("bqhd,bkhd->bhqk", rs(q), rs(k)) / math.sqrt(hd),
+                axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", att, rs(v)).reshape(b, -1, self.dim)
+            h = h + self.m[f"l{i}.proj"](params[f"l{i}.proj"], o)
+            z = self.m[f"l{i}.n2"](params[f"l{i}.n2"], h)
+            z = jax.nn.gelu(self.m[f"l{i}.fc1"](params[f"l{i}.fc1"], z))
+            h = h + self.m[f"l{i}.fc2"](params[f"l{i}.fc2"], z)
+        out = self.m["head"](params["head"], h[:, -1])
+        return out.reshape(b, self.horizon, f)
+
+
+# ---------------------------------------------------------------------------
+# MCU MLP (Table 6 / Algorithm 1)
+# ---------------------------------------------------------------------------
+class MCUMLP:
+    """784-128-10 MLP, hidden layer tiled (p=4, per-tile alphas)."""
+
+    def __init__(self, ctx: ModelContext):
+        self.ctx = ctx
+        m = self.m = _Seq()
+        m.add("fc1", Dense(784, 128, ctx, name="fc1", logical=(None, None)))
+        m.add("head", Dense(128, 10, ctx, name="head", kind="head",
+                            logical=(None, None)))
+
+    def specs(self):
+        return self.m.specs()
+
+    def __call__(self, params, x):
+        h = jax.nn.relu(self.m["fc1"](params["fc1"], x))
+        return self.m["head"](params["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# registry for the benchmarks
+# ---------------------------------------------------------------------------
+def build_paper_model(name: str, ctx: ModelContext, **kw):
+    f = {
+        "resnet18": lambda: ResNet(18, ctx, **kw),
+        "resnet34": lambda: ResNet(34, ctx, **kw),
+        "resnet50": lambda: ResNet(50, ctx, **kw),
+        "vgg-small": lambda: VGGSmall(ctx, **kw),
+        "vit": lambda: ViT(ctx, **kw),
+        "swin-lite": lambda: SwinLite(ctx, **kw),
+        "mlpmixer": lambda: MLPMixer(ctx, **kw),
+        "convmixer": lambda: ConvMixer(ctx, **kw),
+        "pointnet": lambda: PointNet(ctx, **kw),
+        "ts-transformer": lambda: TSTransformer(ctx, **kw),
+        "mcu-mlp": lambda: MCUMLP(ctx),
+    }[name]
+    return f()

@@ -1,0 +1,9 @@
+"""NN substrate: functional modules with TBN-aware layers."""
+from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.nn.module import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    logical_axes,
+    param_count,
+)

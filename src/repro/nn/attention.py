@@ -1,0 +1,315 @@
+"""Multi-head attention: GQA, RoPE, causal / sliding-window / cross.
+
+Three execution paths share one softmax core:
+  * full      — train / short prefill (scores materialized per layer, remat'd)
+  * chunked   — long prefill: lax.scan over query chunks bounds the score
+                memory to (chunk, T) per step (flash-style; see §Perf for the
+                block-triangular FLOP refinement)
+  * decode    — single-token step against a KV cache
+
+All four projections are TBN-tileable Dense layers (the paper's central
+claim: sub-bit compression of fully-connected transformer weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import active_mesh, logical_constraint
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+from repro.nn.linear import Dense
+from repro.nn.norms import RMSNorm
+from repro.nn.rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (per-token, per-head symmetric scales).
+# Exact roundtrip property: requantizing an unchanged row recovers identical
+# int8 codes (max |code| is exactly 127), so incremental row updates never
+# accumulate error.
+# ---------------------------------------------------------------------------
+def quantize_kv(x: jax.Array, axis: int = -1):
+    """x (..., hd) -> (int8 codes, scale (...,) in f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(dtype) * scale[..., None].astype(dtype))
+
+
+def _attend_core(
+    q: jax.Array,          # (B, S, K, G, hd) grouped queries
+    k: jax.Array,          # (B, T, K, hd)
+    v: jax.Array,          # (B, T, K, hd)
+    mask: jax.Array,       # (B, S, T) or (S, T) boolean, True = attend
+    scale: float,
+) -> jax.Array:
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None, :, :]
+    else:
+        mask_b = mask[:, None, None, :, :]
+    scores = jnp.where(mask_b, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out
+
+
+def make_mask(
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """(S, T) or (B, S, T) attend-mask from position vectors."""
+    m = jnp.ones((*q_pos.shape, k_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m &= q_pos[..., :, None] - k_pos[..., None, :] < window
+    if k_valid is not None:
+        m &= k_valid[..., None, :]
+    return m
+
+
+@dataclasses.dataclass
+class Attention:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    ctx: ModelContext
+    head_dim: Optional[int] = None
+    name: str = "attn"
+    causal: bool = True
+    window: Optional[int] = None        # sliding-window size (recurrentgemma)
+    cross: bool = False                 # encoder-decoder cross attention
+    qkv_bias: bool = False              # qwen-style
+    qk_norm: bool = False               # chameleon-style
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    q_chunk: int = 1024                 # chunked path query block
+    act_mode: str = "heads"             # "heads" | "seq" (see configs.base)
+
+    def __post_init__(self):
+        self.hd = self.head_dim or self.d_model // self.n_heads
+        assert self.n_heads % self.n_kv == 0
+        self.groups = self.n_heads // self.n_kv
+        c, d, hd = self.ctx, self.d_model, self.hd
+        self.wq = Dense(d, self.n_heads * hd, c, name=f"{self.name}.wq",
+                        logical=("heads", "embed"), use_bias=self.qkv_bias)
+        self.wk = Dense(d, self.n_kv * hd, c, name=f"{self.name}.wk",
+                        logical=("heads", "embed"), use_bias=self.qkv_bias)
+        self.wv = Dense(d, self.n_kv * hd, c, name=f"{self.name}.wv",
+                        logical=("heads", "embed"), use_bias=self.qkv_bias)
+        self.wo = Dense(self.n_heads * hd, d, c, name=f"{self.name}.wo",
+                        logical=("embed", "heads"))
+        if self.qk_norm:
+            self.qnorm = RMSNorm(hd, c, name=f"{self.name}.qnorm")
+            self.knorm = RMSNorm(hd, c, name=f"{self.name}.knorm")
+
+    def specs(self) -> mod.SpecTree:
+        out = {
+            "wq": self.wq.specs(),
+            "wk": self.wk.specs(),
+            "wv": self.wv.specs(),
+            "wo": self.wo.specs(),
+        }
+        if self.qk_norm:
+            out["qnorm"] = self.qnorm.specs()
+            out["knorm"] = self.knorm.specs()
+        return out
+
+    # ------------------------------------------------------------------
+    def _qkv(self, params, x, kv_src, positions, kv_positions):
+        b, s, _ = x.shape
+        q = self.wq(params["wq"], x).reshape(b, s, self.n_heads, self.hd)
+        src = x if kv_src is None else kv_src
+        t = src.shape[1]
+        k = self.wk(params["wk"], src).reshape(b, t, self.n_kv, self.hd)
+        v = self.wv(params["wv"], src).reshape(b, t, self.n_kv, self.hd)
+        if self.qk_norm:
+            q = self.qnorm(params["qnorm"], q)
+            k = self.knorm(params["knorm"], k)
+        if self.rope and not self.cross:
+            q = apply_rope(q, positions, self.rope_theta)
+            k = apply_rope(k, kv_positions, self.rope_theta)
+        seq_ax = self._seq_ax()
+        q = logical_constraint(q, "act_batch", seq_ax, "act_heads", None)
+        k = logical_constraint(k, "act_batch", seq_ax, "act_kv_heads", None)
+        v = logical_constraint(v, "act_batch", seq_ax, "act_kv_heads", None)
+        return q, k, v
+
+    def _seq_ax(self):
+        """Activation layout per the arch's sharding recipe.
+
+        "heads": seq replicated inside the block; head axes shard where
+        divisible. "seq": q/k/v sequence-sharded over the model axis
+        (flash-row-parallel) — required when head counts do not divide the
+        mesh (qwen1.5: 40H, starcoder2: 36H), where head sharding would
+        replicate the whole (B, H, S, T) score tensor."""
+        return "act_seq" if self.act_mode == "heads" else "act_res_seq"
+
+    def _group(self, q):
+        b, s = q.shape[:2]
+        return q.reshape(b, s, self.n_kv, self.groups, self.hd)
+
+    def __call__(
+        self,
+        params: dict,
+        x: jax.Array,                       # (B, S, d)
+        *,
+        positions: Optional[jax.Array] = None,
+        kv_src: Optional[jax.Array] = None, # cross-attention memory
+        kv_valid: Optional[jax.Array] = None,
+        chunked: Optional[bool] = None,
+    ) -> jax.Array:
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        t = s if kv_src is None else kv_src.shape[1]
+        kv_positions = positions if kv_src is None else jnp.broadcast_to(jnp.arange(t), (b, t))
+        q, k, v = self._qkv(params, x, kv_src, positions, kv_positions)
+        scale = 1.0 / math.sqrt(self.hd)
+        if chunked is None:
+            chunked = s >= 4 * self.q_chunk
+        causal = self.causal and not self.cross
+        if not chunked:
+            mask = make_mask(
+                positions, kv_positions, causal=causal,
+                window=self.window, k_valid=kv_valid,
+            )
+            out = _attend_core(self._group(q), k, v, mask, scale)
+        else:
+            out = self._chunked(q, k, v, positions, kv_positions, kv_valid, scale)
+        out = out.reshape(b, s, self.n_heads * self.hd)
+        y = self.wo(params["wo"], out)
+        return logical_constraint(y, "act_batch", "act_seq", "act_embed")
+
+    def _chunked(self, q, k, v, q_pos, k_pos, k_valid, scale):
+        """lax.scan over query chunks; score memory = (chunk, T) per step."""
+        b, s = q.shape[:2]
+        c = min(self.q_chunk, s)
+        while s % c:
+            c -= 1
+        n = s // c
+        qg = self._group(q).reshape(b, n, c, self.n_kv, self.groups, self.hd)
+        qg = jnp.moveaxis(qg, 1, 0)                    # (n, B, c, K, G, hd)
+        qp = jnp.moveaxis(q_pos.reshape(b, n, c), 1, 0)
+
+        def step(_, inp):
+            qi, qpi = inp
+            mask = make_mask(qpi, k_pos, causal=self.causal and not self.cross,
+                             window=self.window, k_valid=k_valid)
+            return None, _attend_core(qi, k, v, mask, scale)
+
+        # Remat each chunk: without this the scan stacks every chunk's f32
+        # score matrix ((n, B, K, G, c, T) — the full S x T scores!) as
+        # backward residuals, defeating the point of chunking. With it the
+        # backward recomputes one chunk's scores at a time (flash-style).
+        step = jax.checkpoint(step)
+        _, outs = jax.lax.scan(step, None, (qg, qp))
+        return jnp.moveaxis(outs, 0, 1).reshape(b, s, self.n_kv, self.groups, self.hd)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def prefill(self, params, x, positions=None):
+        """Forward + return the KV cache content (B, S, K, hd)."""
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q, k, v = self._qkv(params, x, None, positions, positions)
+        scale = 1.0 / math.sqrt(self.hd)
+        chunked = s >= 4 * self.q_chunk
+        if chunked:
+            out = self._chunked(q, k, v, positions, positions, None, scale)
+        else:
+            mask = make_mask(positions, positions, causal=True, window=self.window)
+            out = _attend_core(self._group(q), k, v, mask, scale)
+        y = self.wo(params["wo"], out.reshape(b, s, self.n_heads * self.hd))
+        return y, (k, v)
+
+    def decode_step(
+        self,
+        params: dict,
+        x: jax.Array,              # (B, 1, d)
+        cache_k: jax.Array,        # (B, T, K, hd)
+        cache_v: jax.Array,
+        lengths: jax.Array,        # (B,) tokens already in cache
+    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        b = x.shape[0]
+        t = cache_k.shape[1]
+        positions = lengths[:, None]                    # new token position
+        q, k, v = self._qkv(params, x, None, positions, positions)
+        idx = jnp.arange(b)
+        cache_k = cache_k.at[idx, lengths].set(k[:, 0])
+        cache_v = cache_v.at[idx, lengths].set(v[:, 0])
+        k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+        mask = make_mask(
+            positions, k_pos, causal=True, window=self.window,
+            k_valid=k_pos <= lengths[:, None],
+        )
+        scale = 1.0 / math.sqrt(self.hd)
+        out = _attend_core(self._group(q), cache_k, cache_v, mask, scale)
+        y = self.wo(params["wo"], out.reshape(b, 1, self.n_heads * self.hd))
+        return y, cache_k, cache_v
+
+    def decode_step_quant(
+        self,
+        params: dict,
+        x: jax.Array,              # (B, 1, d)
+        cache: dict,               # {"k","v" int8, "ks","vs" f32}
+        lengths: jax.Array,
+    ) -> Tuple[jax.Array, dict]:
+        """Decode against an int8-quantized KV cache: quantize only the new
+        token's row, dequantize per layer as a transient for the attend."""
+        b = x.shape[0]
+        t = cache["k"].shape[1]
+        positions = lengths[:, None]
+        q, k, v = self._qkv(params, x, None, positions, positions)
+        kq, ks = quantize_kv(k[:, 0])          # (B, K, hd) int8, (B, K)
+        vq, vs = quantize_kv(v[:, 0])
+        idx = jnp.arange(b)
+        cache = {
+            "k": cache["k"].at[idx, lengths].set(kq),
+            "v": cache["v"].at[idx, lengths].set(vq),
+            "ks": cache["ks"].at[idx, lengths].set(ks),
+            "vs": cache["vs"].at[idx, lengths].set(vs),
+        }
+        cd = v.dtype
+        k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+        mask = make_mask(
+            positions, k_pos, causal=True, window=self.window,
+            k_valid=k_pos <= lengths[:, None],
+        )
+        # Scale-factored attention (§Perf iteration): the per-row scales
+        # are rank-1 along hd, so they FACTOR OUT of both dots —
+        #   scores = (q . k_q) * ks      out = (probs * vs) . v_q
+        # No (B, T, K, hd) dequantized cache is ever materialized; the
+        # scale multiplies live on the (B, K, G, 1, T)-sized tensors.
+        qg = self._group(q)                           # (B, 1, K, G, hd)
+        scores = jnp.einsum(
+            "bskgh,btkh->bkgst", qg, cache["k"].astype(cd)
+        ).astype(jnp.float32)
+        scores = scores * cache["ks"].transpose(0, 2, 1)[:, :, None, None, :]
+        scores = scores * (1.0 / math.sqrt(self.hd))
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+        pv = probs * cache["vs"].transpose(0, 2, 1)[:, :, None, None, :].astype(cd)
+        out = jnp.einsum("bkgst,btkh->bskgh", pv, cache["v"].astype(cd))
+        y = self.wo(params["wo"], out.reshape(b, 1, self.n_heads * self.hd))
+        return y, cache

@@ -1,0 +1,34 @@
+"""Build-time context shared by all layers of a model instance."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.bits import LayerLedger
+from repro.core.policy import TBNPolicy, fp32_policy
+
+TRAIN = "train"    # params are full-precision masters (W [, A])
+SERVE = "serve"    # params are shipped form (packed tile bits + alpha)
+
+
+@dataclasses.dataclass
+class ModelContext:
+    """Quantization policy + dtypes + accounting for one model build."""
+
+    policy: TBNPolicy = dataclasses.field(default_factory=fp32_policy)
+    mode: str = TRAIN
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.bfloat16
+    use_pallas: Optional[bool] = None      # None = auto (TPU only)
+    fused_train: bool = False              # use the fused construct kernel
+    fsdp_weights: bool = False             # gather effective weights at use
+    ledger: Optional[LayerLedger] = None
+
+    def __post_init__(self):
+        if self.ledger is None:
+            self.ledger = LayerLedger(self.policy)
+
+    def note(self, name, shape, *, kind, spec, macs=0):
+        self.ledger.note(name, shape, kind=kind, spec=spec, macs=macs)

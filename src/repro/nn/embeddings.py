@@ -1,0 +1,40 @@
+"""Token embeddings + logits head (untiled per paper scope)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+
+
+@dataclasses.dataclass
+class Embedding:
+    vocab: int
+    dim: int
+    ctx: ModelContext
+    name: str = "embed"
+
+    def __post_init__(self):
+        self.ctx.note(self.name, (self.vocab, self.dim), kind="embedding", spec=None)
+
+    def specs(self) -> mod.SpecTree:
+        return {
+            "table": mod.ParamSpec(
+                (self.vocab, self.dim),
+                self.ctx.param_dtype,
+                ("vocab", "embed"),
+                mod.normal(0.02),
+            )
+        }
+
+    def __call__(self, params: dict, ids: jax.Array) -> jax.Array:
+        return params["table"].astype(self.ctx.compute_dtype)[ids]
+
+    def attend(self, params: dict, x: jax.Array) -> jax.Array:
+        """Tied logits head: x @ table^T."""
+        return jnp.einsum(
+            "...d,vd->...v", x, params["table"].astype(self.ctx.compute_dtype)
+        )

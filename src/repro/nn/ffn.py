@@ -1,0 +1,64 @@
+"""Feed-forward blocks (GELU MLP and SwiGLU) — all TBN-tileable."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+from repro.nn.linear import Dense
+
+
+@dataclasses.dataclass
+class MLP:
+    """up -> act -> down; gated (SwiGLU) when ``gated=True``."""
+
+    d_model: int
+    d_ff: int
+    ctx: ModelContext
+    name: str = "mlp"
+    gated: bool = True
+    activation: str = "silu"   # silu | gelu | relu
+
+    def __post_init__(self):
+        c = self.ctx
+        self.up = Dense(self.d_model, self.d_ff, c, name=f"{self.name}.up",
+                        logical=("mlp", "embed"))
+        if self.gated:
+            self.gate = Dense(self.d_model, self.d_ff, c, name=f"{self.name}.gate",
+                              logical=("mlp", "embed"))
+        self.down = Dense(self.d_ff, self.d_model, c, name=f"{self.name}.down",
+                          logical=("embed", "mlp"))
+
+    def specs(self) -> mod.SpecTree:
+        out = {"up": self.up.specs(), "down": self.down.specs()}
+        if self.gated:
+            out["gate"] = self.gate.specs()
+        return out
+
+    def _act(self, x):
+        return dict(silu=jax.nn.silu, gelu=jax.nn.gelu, relu=jax.nn.relu,
+             relu2=lambda v: jnp.square(jax.nn.relu(v)))[
+            self.activation
+        ](x)
+
+    def __call__(
+        self, params: dict, x: jax.Array,
+        act=("act_batch", "act_seq"),
+    ) -> jax.Array:
+        """``act`` names the leading two activation axes — the MoE shared
+        expert runs this in the (group, token, d) layout with
+        act=("act_tok", None) so the hidden keeps the full-mesh token
+        sharding instead of being forced back to (batch, seq)."""
+        h = self.up(params["up"], x)
+        h = logical_constraint(h, *act, "act_mlp")
+        if self.gated:
+            h = self._act(self.gate(params["gate"], x)) * h
+        else:
+            h = self._act(h)
+        y = self.down(params["down"], h)
+        return logical_constraint(y, *act, "act_embed")

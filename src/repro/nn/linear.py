@@ -1,0 +1,250 @@
+"""Dense / Conv layers with first-class TBN quantization.
+
+Every layer consults the model's TBNPolicy:
+  * fp32  — ordinary weights.
+  * bwnn  — XNOR-style binary weights (sign STE + layer alpha), 1 bit/param.
+  * tbn   — tiled sub-bit weights when N >= lambda (else falls back to bwnn,
+            matching the paper's accounting for small layers).
+
+In SERVE mode tiled layers carry only (packed tile bits, alpha) — the
+shipped representation — and apply through the tile-reuse math
+(`repro.kernels.tiled_dense_infer`, Pallas on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import packed_len, unpack_bits
+from repro.core.tiling import (
+    TileSpec,
+    _ste_sign,
+    compute_alpha,
+    tiled_weight,
+)
+from repro.distributed.sharding import logical_constraint
+from repro.kernels.ops import tbn_dense_train, tiled_dense_infer
+from repro.nn import module as mod
+from repro.nn.context import SERVE, TRAIN, ModelContext
+
+
+def bwnn_weight(w: jax.Array, compute_dtype) -> jax.Array:
+    """XNOR-Net style binary weight: sign(W) * mean|W| with identity STE."""
+    alpha = jnp.mean(jnp.abs(w))
+    return (_ste_sign(w) * alpha).astype(compute_dtype)
+
+
+@dataclasses.dataclass
+class Dense:
+    """y = x @ W^T (+b). Weight stored (n_out, n_in) — paper layout, so the
+    row-major tile replication lands on output rows (DESIGN.md §2)."""
+
+    n_in: int
+    n_out: int
+    ctx: ModelContext
+    name: str = "dense"
+    kind: str = "dense"            # "dense" | "head"
+    use_bias: bool = False
+    logical: Tuple[Optional[str], Optional[str]] = ("mlp", "embed")  # (out, in)
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        self.spec: Optional[TileSpec] = self.ctx.policy.spec_for(
+            (self.n_out, self.n_in), kind=self.kind
+        )
+        self.ctx.note(
+            self.name,
+            (self.n_out, self.n_in),
+            kind=self.kind,
+            spec=self.spec,
+            macs=0,
+        )
+
+    # -- declarations ------------------------------------------------------
+    def specs(self) -> mod.SpecTree:
+        pd = self.ctx.param_dtype
+        if self.ctx.mode == SERVE:
+            return self._serve_specs()
+        out: dict = {
+            "w": mod.ParamSpec(
+                (self.n_out, self.n_in),
+                pd,
+                self.logical,
+                mod.kaiming(self.init_scale),
+            )
+        }
+        if self.spec is not None and self.spec.alpha_source == "A":
+            out["a"] = mod.ParamSpec(
+                (self.n_out, self.n_in), pd, self.logical, mod.kaiming(self.init_scale)
+            )
+        if self.use_bias:
+            out["b"] = mod.ParamSpec(
+                (self.n_out,), pd, (self.logical[0],), mod.zeros_init()
+            )
+        return out
+
+    def _serve_specs(self) -> mod.SpecTree:
+        out: dict = {}
+        if self.spec is not None:
+            out["tile"] = mod.ParamSpec(
+                (packed_len(self.spec.q),), jnp.int32, (None,), mod.zeros_init()
+            )
+            out["alpha"] = mod.ParamSpec(
+                (self.spec.n_alpha,), jnp.float32, (None,), mod.ones_init()
+            )
+        elif self.ctx.policy.binarize(self.kind):
+            out["wbits"] = mod.ParamSpec(
+                (self.n_out, packed_len(self.n_in)),
+                jnp.int32,
+                (self.logical[0], None),
+                mod.zeros_init(),
+            )
+            out["alpha"] = mod.ParamSpec((1,), jnp.float32, (None,), mod.ones_init())
+        else:
+            out["w"] = mod.ParamSpec(
+                (self.n_out, self.n_in),
+                self.ctx.compute_dtype,
+                self.logical,
+                mod.kaiming(self.init_scale),
+            )
+        if self.use_bias:
+            out["b"] = mod.ParamSpec(
+                (self.n_out,), jnp.float32, (self.logical[0],), mod.zeros_init()
+            )
+        return out
+
+    # -- apply -------------------------------------------------------------
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        cd = self.ctx.compute_dtype
+        if self.ctx.mode == SERVE:
+            y = self._serve_apply(params, x)
+        else:
+            w = params["w"]
+            if self.spec is not None and self.ctx.fused_train:
+                a = params.get("a", w)
+                y = tbn_dense_train(x.astype(cd), w, a, self.spec)
+            else:
+                if self.spec is not None and self.spec.aligned_rows:
+                    from repro.core.tiling import tiled_weight_rows
+
+                    # axis-sum construction (see core.tiling): the tile is
+                    # what crosses the network, not the weight
+                    weff = tiled_weight_rows(
+                        w, self.spec, a=params.get("a"), dtype=cd
+                    )
+                elif self.spec is not None:
+                    weff = tiled_weight(
+                        w, self.spec, a=params.get("a"), dtype=cd
+                    ).reshape(self.n_out, self.n_in)
+                elif self.ctx.policy.binarize(self.kind):
+                    weff = bwnn_weight(w, cd)
+                else:
+                    weff = w.astype(cd)
+                if self.ctx.fsdp_weights:
+                    # ZeRO-3 contract: masters stay 2D-sharded in HBM; the
+                    # effective weight is gathered over the data axis at
+                    # use. Stops GSPMD resolving the (2D-sharded weight) x
+                    # (seq-sharded activation) contraction by replicating
+                    # the activation batch.
+                    weff = logical_constraint(weff, self.logical[0], None)
+                y = jnp.einsum("...k,ok->...o", x.astype(cd), weff)
+        if self.use_bias:
+            y = y + params["b"].astype(y.dtype)
+        return y
+
+    def _serve_apply(self, params: dict, x: jax.Array) -> jax.Array:
+        cd = self.ctx.compute_dtype
+        x = x.astype(cd)
+        if self.spec is not None:
+            y = tiled_dense_infer(
+                x,
+                params["tile"],
+                params["alpha"],
+                self.spec,
+                use_pallas=self.ctx.use_pallas,
+            )
+        elif "wbits" in params:
+            w = unpack_bits(params["wbits"], self.n_in, dtype=cd)
+            w = w * params["alpha"].astype(cd)
+            y = jnp.einsum("...k,ok->...o", x, w)
+        else:
+            y = jnp.einsum("...k,ok->...o", x, params["w"].astype(cd))
+        return self._constrain_out(y)
+
+    def _constrain_out(self, y: jax.Array) -> jax.Array:
+        """Shard the serve-path output so GSPMD partitions the bit-unpack
+        and tile-reuse matmul over the model axis (back-propagated through
+        the broadcast/reshape by sharding propagation)."""
+        act = {
+            "mlp": "act_mlp",
+            "heads": "act_heads",
+            "vocab": "act_vocab",
+            "embed": "act_embed",
+        }.get(self.logical[0])
+        names = ("act_batch",) + (None,) * (y.ndim - 2) + (act,)
+        return logical_constraint(y, *names)
+
+
+@dataclasses.dataclass
+class Conv2D:
+    """NHWC conv with OIHW-stored weight (paper layout: tiles replicate
+    whole output-channel filters -> the Table 2 bit-ops saving)."""
+
+    c_in: int
+    c_out: int
+    kernel: Tuple[int, int]
+    ctx: ModelContext
+    stride: Tuple[int, int] = (1, 1)
+    padding: str = "SAME"
+    name: str = "conv"
+    use_bias: bool = False
+
+    def __post_init__(self):
+        kh, kw = self.kernel
+        self.wshape = (self.c_out, self.c_in, kh, kw)
+        self.spec: Optional[TileSpec] = self.ctx.policy.spec_for(
+            self.wshape, kind="conv"
+        )
+        self.ctx.note(self.name, self.wshape, kind="conv", spec=self.spec)
+
+    def specs(self) -> mod.SpecTree:
+        out = {
+            "w": mod.ParamSpec(
+                self.wshape, self.ctx.param_dtype, (None,) * 4, mod.kaiming()
+            )
+        }
+        if self.spec is not None and self.spec.alpha_source == "A":
+            out["a"] = mod.ParamSpec(
+                self.wshape, self.ctx.param_dtype, (None,) * 4, mod.kaiming()
+            )
+        if self.use_bias:
+            out["b"] = mod.ParamSpec(
+                (self.c_out,), jnp.float32, (None,), mod.zeros_init()
+            )
+        return out
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        cd = self.ctx.compute_dtype
+        w = params["w"]
+        if self.spec is not None:
+            w = tiled_weight(w, self.spec, a=params.get("a"), dtype=cd).reshape(
+                self.wshape
+            )
+        elif self.ctx.policy.binarize("conv"):
+            w = bwnn_weight(w, cd)
+        else:
+            w = w.astype(cd)
+        y = jax.lax.conv_general_dilated(
+            x.astype(cd),
+            w,
+            window_strides=self.stride,
+            padding=self.padding,
+            dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        )
+        if self.use_bias:
+            y = y + params["b"].astype(y.dtype)
+        return y

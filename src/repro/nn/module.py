@@ -1,0 +1,149 @@
+"""Minimal declarative parameter system (no flax on this box).
+
+A module is a plain dataclass exposing
+    specs()  -> nested dict of ParamSpec            (declaration)
+    __call__(params, *args)                         (pure apply)
+
+From the spec tree we derive everything the distributed runtime needs:
+    init_params(specs, key)      concrete fp32 parameters (deterministic
+                                 per-path key folding)
+    abstract_params(specs)       jax.ShapeDtypeStruct tree (dry-run, no
+                                 allocation)
+    logical_axes(specs)          PartitionSpec-of-logical-names tree, mapped
+                                 to mesh axes by repro.distributed.sharding
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def kaiming(scale: float = 1.0, fan_axis: int = -1) -> Initializer:
+    def init(key, shape, dtype):
+        fan_in = shape[fan_axis] if len(shape) else 1
+        if len(shape) > 2:  # conv OIHW: fan_in = I*kh*kw
+            fan_in = int(np.prod(shape[1:]))
+        std = scale * float(np.sqrt(2.0 / max(1, fan_in)))
+        return std * jax.random.normal(key, shape, dtype)
+
+    return init
+
+
+def normal(stddev: float = 0.02) -> Initializer:
+    return lambda key, shape, dtype: stddev * jax.random.normal(key, shape, dtype)
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def constant_init(v: float) -> Initializer:
+    return lambda key, shape, dtype: jnp.full(shape, v, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    logical: Tuple[Optional[str], ...] = ()  # logical axis name per dim
+    init: Initializer = dataclasses.field(default_factory=lambda: normal(0.02))
+
+    def __post_init__(self):
+        if self.logical and len(self.logical) != len(self.shape):
+            raise ValueError(
+                f"logical {self.logical} does not match shape {self.shape}"
+            )
+
+
+SpecTree = Union[ParamSpec, Dict[str, "SpecTree"]]
+
+
+def _walk(tree: SpecTree, path=()):  # yields (path, ParamSpec)
+    if isinstance(tree, ParamSpec):
+        yield path, tree
+    elif isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], path + (k,))
+    elif tree is None:
+        return
+    else:
+        raise TypeError(f"bad spec node at {path}: {type(tree)}")
+
+
+def _set(out: dict, path, value):
+    node = out
+    for k in path[:-1]:
+        node = node.setdefault(k, {})
+    node[path[-1]] = value
+
+
+def _path_key(key: jax.Array, path: Tuple[str, ...]) -> jax.Array:
+    digest = hashlib.md5("/".join(path).encode()).digest()
+    fold = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, fold)
+
+
+def init_params(specs: SpecTree, key: jax.Array) -> dict:
+    """Deterministic, path-keyed parameter initialization."""
+    out: dict = {}
+    for path, spec in _walk(specs):
+        k = _path_key(key, path)
+        _set(out, path, spec.init(k, spec.shape, spec.dtype))
+    return out
+
+
+def abstract_params(specs: SpecTree) -> dict:
+    out: dict = {}
+    for path, spec in _walk(specs):
+        _set(out, path, jax.ShapeDtypeStruct(spec.shape, spec.dtype))
+    return out
+
+
+def logical_axes(specs: SpecTree) -> dict:
+    """Tree of logical-axis tuples, mirroring the param tree."""
+    out: dict = {}
+    for path, spec in _walk(specs):
+        _set(out, path, tuple(spec.logical) if spec.logical else (None,) * len(spec.shape))
+    return out
+
+
+def param_count(specs: SpecTree) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _walk(specs))
+
+
+def stack_specs(specs: SpecTree, n: int, axis_name: Optional[str] = "layers") -> SpecTree:
+    """Prepend a stacking dim (for scan-over-layers parameter stacking)."""
+    out: dict = {}
+    for path, spec in _walk(specs):
+        _set(
+            out,
+            path,
+            ParamSpec(
+                shape=(n,) + spec.shape,
+                dtype=spec.dtype,
+                logical=(axis_name,) + (tuple(spec.logical) or (None,) * len(spec.shape)),
+                init=_stacked_init(spec.init, n),
+            ),
+        )
+    return out
+
+
+def _stacked_init(inner: Initializer, n: int) -> Initializer:
+    def init(key, shape, dtype):
+        keys = jax.random.split(key, n)
+        return jnp.stack([inner(k, shape[1:], dtype) for k in keys])
+
+    return init

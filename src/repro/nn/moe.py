@@ -1,0 +1,315 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, EP-shardable.
+
+Dispatch is the sort-based capacity scheme (GShard/MaxText "dropped"
+family): token->expert assignments are sorted by expert id, each expert
+takes its first C tokens into a dense (E, C, d) buffer (overflow dropped —
+zero gradient), expert FFNs run as one batched einsum over E, results
+scatter back weighted by the router gates. All shapes static; the (E, ...)
+buffers carry the "experts" logical axis so the runtime shards them over the
+model axis (expert parallelism — GSPMD inserts the all-to-alls).
+
+Beyond-paper: each expert's FFN matrices are TBN-tiled *per expert* (the
+paper never evaluates MoE; per-expert tiles keep the sub-bit storage story:
+E tiles of q bits instead of E dense expert matrices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import TileSpec, tiled_weight
+from repro.distributed.sharding import logical_constraint
+from repro.nn import module as mod
+from repro.nn.context import SERVE, ModelContext
+from repro.nn.ffn import MLP
+from repro.nn.linear import bwnn_weight
+from repro.core.packing import packed_len, unpack_bits
+
+
+def _cumsum_exclusive(x):
+    return jnp.cumsum(x) - x
+
+
+@dataclasses.dataclass
+class ExpertBank:
+    """E stacked (n_out, n_in) matrices with per-expert TBN tiles."""
+
+    n_experts: int
+    n_in: int
+    n_out: int
+    ctx: ModelContext
+    name: str = "experts"
+
+    def __post_init__(self):
+        self.spec: Optional[TileSpec] = self.ctx.policy.spec_for(
+            (self.n_out, self.n_in), kind="dense"
+        )
+        # The bank is E independent tiled layers for bit accounting.
+        for e in range(self.n_experts):
+            self.ctx.note(
+                f"{self.name}[{e}]",
+                (self.n_out, self.n_in),
+                kind="dense",
+                spec=self.spec,
+            )
+
+    def specs(self) -> mod.SpecTree:
+        pd = self.ctx.param_dtype
+        e = self.n_experts
+        if self.ctx.mode == SERVE:
+            if self.spec is not None:
+                return {
+                    "tile": mod.ParamSpec(
+                        (e, packed_len(self.spec.q)), jnp.int32,
+                        ("experts", None), mod.zeros_init(),
+                    ),
+                    "alpha": mod.ParamSpec(
+                        (e, self.spec.n_alpha), jnp.float32,
+                        ("experts", None), mod.ones_init(),
+                    ),
+                }
+            return {
+                "w": mod.ParamSpec(
+                    (e, self.n_out, self.n_in), self.ctx.compute_dtype,
+                    ("experts", "mlp", "embed"), mod.kaiming(),
+                )
+            }
+        out = {
+            "w": mod.ParamSpec(
+                (e, self.n_out, self.n_in), pd,
+                ("experts", "mlp", "embed"), mod.kaiming(),
+            )
+        }
+        if self.spec is not None and self.spec.alpha_source == "A":
+            out["a"] = mod.ParamSpec(
+                (e, self.n_out, self.n_in), pd,
+                ("experts", "mlp", "embed"), mod.kaiming(),
+            )
+        return out
+
+    def effective(self, params: dict) -> jax.Array:
+        """(E, n_out, n_in) effective weights in compute dtype."""
+        cd = self.ctx.compute_dtype
+        if self.ctx.mode == SERVE:
+            if self.spec is not None:
+                t = unpack_bits(params["tile"], self.spec.q, dtype=cd)  # (E, q)
+                def rebuild(te, ae):
+                    from repro.core.tiling import reconstruct_from_tile
+                    return reconstruct_from_tile(te, ae, self.spec, dtype=cd)
+                return jax.vmap(rebuild)(t, params["alpha"])
+            return params["w"].astype(cd)
+        w = params["w"]
+        if self.spec is not None:
+            a = params.get("a")
+            if self.spec.aligned_rows:
+                # axis-sum construction: only the p-fold smaller tile
+                # crosses the network (partial-sum AR), not the weights
+                from repro.core.tiling import tiled_weight_rows
+
+                return tiled_weight_rows(w, self.spec, a=a, dtype=cd)
+            if a is None:
+                vm = jax.vmap(lambda we: tiled_weight(we, self.spec, dtype=cd))(w)
+            else:
+                vm = jax.vmap(
+                    lambda we, ae: tiled_weight(we, self.spec, a=ae, dtype=cd)
+                )(w, a)
+            return vm.reshape(self.n_experts, self.n_out, self.n_in)
+        if self.ctx.policy.binarize("dense"):
+            return jax.vmap(lambda we: bwnn_weight(we, cd))(w)
+        return w.astype(cd)
+
+
+@dataclasses.dataclass
+class MoE:
+    """Top-k routed MoE layer with optional shared experts."""
+
+    d_model: int
+    d_ff: int                    # per-expert hidden
+    n_experts: int
+    top_k: int
+    ctx: ModelContext
+    n_shared: int = 0            # shared experts (always-on), same d_ff each
+    name: str = "moe"
+    capacity_factor: float = 1.25
+    gated: bool = True           # SwiGLU experts
+    activation: str = "silu"
+
+    def __post_init__(self):
+        c = self.ctx
+        self.router_logical = ("experts", "embed")
+        self.up = ExpertBank(self.n_experts, self.d_model, self.d_ff, c,
+                             name=f"{self.name}.up")
+        if self.gated:
+            self.gate_bank = ExpertBank(self.n_experts, self.d_model, self.d_ff, c,
+                                        name=f"{self.name}.gate")
+        self.down = ExpertBank(self.n_experts, self.d_ff, self.d_model, c,
+                               name=f"{self.name}.down")
+        if self.n_shared:
+            self.shared = MLP(self.d_model, self.d_ff * self.n_shared, c,
+                              name=f"{self.name}.shared", gated=self.gated,
+                              activation=self.activation)
+        c.note(f"{self.name}.router", (self.n_experts, self.d_model),
+               kind="norm", spec=None)  # router stays fp32 (below lambda)
+
+    def specs(self) -> mod.SpecTree:
+        out = {
+            "router": mod.ParamSpec(
+                (self.n_experts, self.d_model), jnp.float32,
+                self.router_logical, mod.normal(0.02),
+            ),
+            "up": self.up.specs(),
+            "down": self.down.specs(),
+        }
+        if self.gated:
+            out["gate"] = self.gate_bank.specs()
+        if self.n_shared:
+            out["shared"] = self.shared.specs()
+        return out
+
+    def _act(self, x):
+        return dict(silu=jax.nn.silu, gelu=jax.nn.gelu, relu=jax.nn.relu,
+             relu2=lambda v: jnp.square(jax.nn.relu(v)))[
+            self.activation
+        ](x)
+
+    def _n_groups(self, t_tokens: int) -> int:
+        """Dispatch groups: tokens are routed/sorted/scattered WITHIN a
+        group; groups shard over the whole mesh (act_tok). Keeps every
+        index op (argsort/gather/scatter) local to a shard — GSPMD
+        partitions vmapped index ops along batch dims but replicates
+        global ones (a global 1M-token argsort/scatter forced 51GB
+        all-gathers). 512 covers the 2-pod mesh; smaller meshes place
+        multiple groups per device, which is free.
+        G=1 on small hosts == the paper-faithful single-group dispatch."""
+        for g in (512, 256, 64, 32, 16, 8):
+            if t_tokens % g == 0 and t_tokens >= g * 1024:
+                return g
+        return 1
+
+    def _dispatch(self, xg, top_idx, gate_vals, cap):
+        """Per-group dense dispatch. xg (tl, d); top_idx/gate (tl, k).
+        Returns xbuf (E, cap, d) and (e_idx, pos_c, tok_of, gates) for the
+        combine step. Dropped (over-capacity) slots are expressed as
+        OUT-OF-BOUNDS scatter indices (jit default: dropped) and zeroed
+        gates — no (tl*k, d)-sized `keep` mask multiply is materialized."""
+        cd = self.ctx.compute_dtype
+        tl, d = xg.shape
+        e, k = self.n_experts, self.top_k
+        flat_e = top_idx.reshape(-1)                                # (tl*k,)
+        flat_g = gate_vals.reshape(-1).astype(cd)
+        order = jnp.argsort(flat_e)
+        tok_of = order // k
+        e_sorted = flat_e[order]
+        counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+        starts = _cumsum_exclusive(counts)
+        pos = jnp.arange(tl * k) - starts[e_sorted]
+        keep = (pos >= 0) & (pos < cap)
+        e_idx = jnp.where(keep, e_sorted, e)      # e == OOB -> scatter drops
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        gates = jnp.where(keep, flat_g[order], 0)
+        # k-chunked scatter: one (tl, d) gather+scatter per top-k slot keeps
+        # the transient at (tl, d) instead of (tl*k, d) — the index vectors
+        # are expert-sorted so any static split is a valid partition.
+        xbuf = jnp.zeros((e, cap, d), cd)
+        for j in range(k):
+            sl = slice(j * tl, (j + 1) * tl)
+            xbuf = xbuf.at[e_idx[sl], pos_c[sl]].add(
+                xg[tok_of[sl]].astype(cd)
+            )
+        return xbuf, (e_idx, pos_c, tok_of, gates)
+
+    def _combine(self, ybuf, meta, tl):
+        cd = self.ctx.compute_dtype
+        e_idx, pos_c, tok_of, gates = meta
+        k = self.top_k
+        y = jnp.zeros((tl, ybuf.shape[-1]), cd)
+        for j in range(k):
+            sl = slice(j * tl, (j + 1) * tl)
+            # OOB e_idx rows gather garbage but are zero-gated;
+            # mode="fill" makes them exact zeros.
+            yj = ybuf.at[e_idx[sl], pos_c[sl]].get(mode="fill", fill_value=0)
+            y = y.at[tok_of[sl]].add(yj * gates[sl, None])
+        return y
+
+    def __call__(self, params: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Returns (output (B,S,d), aux load-balance loss scalar)."""
+        b, s, d = x.shape
+        cd = self.ctx.compute_dtype
+        t_tokens = b * s
+        # Token-parallel MoE: dispatch groups shard over EVERY mesh axis and
+        # the whole layer (routing, dispatch, expert einsums, combine) runs
+        # group-local. Expert weights are stored sharded (experts/mlp x
+        # embed) and all-gathered at use, ZeRO-3 style — GSPMD overlap
+        # prefetches the gather inside the layer scan. This beats the
+        # expert-parallel domain switch on this mesh: the all-to-alls and
+        # the partial-sum all-reduces (which XLA promotes to f32 and sinks
+        # onto (tl*k, d) tensors) disappear entirely.
+        g = self._n_groups(t_tokens)
+        tl = t_tokens // g
+        # Pin the (B,S,d) layout at entry: the constraint's transpose pins
+        # the residual cotangent too — without it the backward of the
+        # SP <-> token-layout reshape replicates d_x on the 3-axis mesh.
+        x = logical_constraint(x, "act_batch", "act_res_seq", None)
+        xg = logical_constraint(
+            x.reshape(g, tl, d), "act_tok", None, None
+        )
+
+        # Router math stays token-sharded: the load-balance aux couples all
+        # tokens through a scalar, and without the constraint its backward
+        # broadcast marks d_logits replicated — the (T, d) f32 router
+        # cotangent then materializes UNSHARDED (8.6 GB/device at 1M tokens).
+        logits = logical_constraint(
+            jnp.einsum("gtd,ed->gte", xg.astype(jnp.float32), params["router"]),
+            "act_tok", None, None,
+        )
+        probs = logical_constraint(
+            jax.nn.softmax(logits, axis=-1), "act_tok", None, None
+        )
+        gate_vals, top_idx = jax.lax.top_k(probs, self.top_k)   # (g, tl, k)
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+        # Switch-style load balance aux (over ALL tokens).
+        density = jnp.mean(
+            jax.nn.one_hot(top_idx[..., 0], self.n_experts), axis=(0, 1)
+        )
+        aux = self.n_experts * jnp.sum(density * jnp.mean(probs, axis=(0, 1)))
+
+        e, k = self.n_experts, self.top_k
+        cap = int(math.ceil(self.capacity_factor * k * tl / e))
+        cap = max(8, -(-cap // 8) * 8)
+
+        xbuf, meta = jax.vmap(
+            lambda xi, ti, gi: self._dispatch(xi, ti, gi, cap)
+        )(xg, top_idx, gate_vals)                       # (g, E, cap, d)
+        tokp = lambda z: logical_constraint(
+            z, *(("act_tok",) + (None,) * (z.ndim - 1))
+        )
+        xbuf = tokp(xbuf)
+
+        w_up = self.up.effective(params["up"])
+        h = tokp(jnp.einsum("gecd,efd->gecf", xbuf, w_up))
+        if self.gated:
+            w_gate = self.gate_bank.effective(params["gate"])
+            h = self._act(
+                tokp(jnp.einsum("gecd,efd->gecf", xbuf, w_gate))
+            ) * h
+        else:
+            h = self._act(h)
+        w_down = self.down.effective(params["down"])
+        ybuf = tokp(jnp.einsum("gecf,edf->gecd", h, w_down))
+
+        yg = jax.vmap(lambda yb, *m: self._combine(yb, m, tl))(ybuf, *meta)
+        yg = tokp(yg)
+        if self.n_shared:
+            # shared experts run in the same token-grouped layout — feeding
+            # them the (B, S, d) view lets the backward lose the batch
+            # sharding (an 8.6 GB/device replicated f32 cotangent).
+            yg = yg + tokp(
+                self.shared(params["shared"], xg, act=("act_tok", None))
+            )
+        y = yg.reshape(b, s, d)
+        return logical_constraint(y, "act_batch", "act_seq", "act_embed"), aux

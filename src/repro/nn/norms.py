@@ -1,0 +1,57 @@
+"""Normalization layers (never quantized — paper policy)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+
+
+@dataclasses.dataclass
+class RMSNorm:
+    dim: int
+    ctx: ModelContext
+    name: str = "rmsnorm"
+    eps: float = 1e-6
+
+    def specs(self) -> mod.SpecTree:
+        return {"scale": mod.ParamSpec((self.dim,), jnp.float32, ("embed",), mod.ones_init())}
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        # Reduction in f32; elementwise math stays in the input dtype so no
+        # (B, S, d) f32 copy of the residual stream is ever materialized
+        # (XLA keeps the widest version of a fused elementwise chain alive —
+        # an f32 x here costs 2x the dominant training buffer).
+        dt = x.dtype
+        var = jnp.mean(
+            jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
+        )
+        inv = jax.lax.rsqrt(var + self.eps).astype(dt)
+        return x * inv * params["scale"].astype(dt)
+
+
+@dataclasses.dataclass
+class LayerNorm:
+    dim: int
+    ctx: ModelContext
+    name: str = "layernorm"
+    eps: float = 1e-5
+
+    def specs(self) -> mod.SpecTree:
+        return {
+            "scale": mod.ParamSpec((self.dim,), jnp.float32, ("embed",), mod.ones_init()),
+            "bias": mod.ParamSpec((self.dim,), jnp.float32, ("embed",), mod.zeros_init()),
+        }
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        dt = x.dtype
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        # f32 reductions only; elementwise apply in the input dtype (see
+        # RMSNorm note).
+        y = (x - mu.astype(dt)) * jax.lax.rsqrt(var + self.eps).astype(dt)
+        return y * params["scale"].astype(dt) + params["bias"].astype(dt)

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Training-time recurrence uses jax.lax.associative_scan (log-depth) over
+    h_t = a_t ⊙ h_{t-1} + b_t,
+decode is the O(1) single-step update (the hybrid arch's long_500k path).
+
+Input/gate projections are TBN-tileable; the per-channel recurrence params
+(Lambda, conv) are tiny -> fp32 per the lambda policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+from repro.nn.linear import Dense
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def _lru_scan(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis=1 via associative scan."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+@dataclasses.dataclass
+class RGLRUBlock:
+    d_model: int
+    ctx: ModelContext
+    d_rnn: int = 0          # defaults to d_model
+    conv_width: int = 4
+    name: str = "rglru"
+
+    def __post_init__(self):
+        c = self.ctx
+        self.width = self.d_rnn or self.d_model
+        self.in_x = Dense(self.d_model, self.width, c, name=f"{self.name}.in_x",
+                          logical=("mlp", "embed"))
+        self.in_gate = Dense(self.d_model, self.width, c, name=f"{self.name}.in_gate",
+                             logical=("mlp", "embed"))
+        self.out = Dense(self.width, self.d_model, c, name=f"{self.name}.out",
+                         logical=("embed", "mlp"))
+        # gate projections are full FC layers -> TBN-tileable (>= lambda)
+        self.w_a = Dense(self.width, self.width, c,
+                         name=f"{self.name}.w_a", logical=("mlp", "mlp"))
+        self.w_i = Dense(self.width, self.width, c,
+                         name=f"{self.name}.w_i", logical=("mlp", "mlp"))
+
+    def specs(self) -> mod.SpecTree:
+        f32 = jnp.float32
+        w = self.width
+        return {
+            "in_x": self.in_x.specs(),
+            "in_gate": self.in_gate.specs(),
+            "out": self.out.specs(),
+            "conv_w": mod.ParamSpec((self.conv_width, w), f32, (None, "mlp"),
+                                    mod.normal(0.1)),
+            "conv_b": mod.ParamSpec((w,), f32, ("mlp",), mod.zeros_init()),
+            "lam": mod.ParamSpec((w,), f32, ("mlp",), mod.constant_init(2.2)),
+            "w_a": self.w_a.specs(),
+            "w_i": self.w_i.specs(),
+        }
+
+    def _gates(self, params, xi):
+        """Recurrence and input gates (fp32 for stability)."""
+        xf = xi.astype(jnp.float32)
+        r = jax.nn.sigmoid(self.w_a(params["w_a"], xf).astype(jnp.float32))
+        i = jax.nn.sigmoid(self.w_i(params["w_i"], xf).astype(jnp.float32))
+        log_a_base = jax.nn.log_sigmoid(params["lam"])       # (w,) < 0
+        log_a = _C * r * log_a_base                           # a_t = a^(c r_t)
+        a = jnp.exp(log_a)
+        b_scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8))
+        return a, b_scale * (i * xf)
+
+    def _conv(self, params, x):
+        pad = self.conv_width - 1
+        xpad = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+        w = params["conv_w"]
+        return sum(
+            xpad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(self.conv_width)
+        ) + params["conv_b"]
+
+    def __call__(self, params: dict, u: jax.Array) -> jax.Array:
+        cd = self.ctx.compute_dtype
+        xi = self._conv(params, self.in_x(params["in_x"], u))
+        xi = logical_constraint(xi, "act_batch", "act_seq", "act_mlp")
+        a, b = self._gates(params, xi)
+        h = _lru_scan(a, b).astype(cd)
+        gate = jax.nn.gelu(self.in_gate(params["in_gate"], u))
+        y = self.out(params["out"], h * gate)
+        return logical_constraint(y, "act_batch", "act_seq", "act_embed")
+
+    # ------------------------------------------------------------------
+    def init_state(self, batch: int, dtype=jnp.float32):
+        return {
+            "h": jnp.zeros((batch, self.width), dtype),
+            "conv": jnp.zeros((batch, self.conv_width - 1, self.width), dtype),
+        }
+
+    def decode_step(self, params: dict, u: jax.Array, state: dict):
+        """u: (B, 1, d); returns (y (B,1,d), new state)."""
+        cd = self.ctx.compute_dtype
+        xin = self.in_x(params["in_x"], u)[:, 0]
+        win = jnp.concatenate([state["conv"], xin[:, None]], axis=1)
+        w = params["conv_w"]
+        xi = jnp.einsum("bwd,wd->bd", win.astype(jnp.float32), w) + params["conv_b"]
+        a, b = self._gates(params, xi)
+        h = a * state["h"] + b
+        gate = jax.nn.gelu(self.in_gate(params["in_gate"], u)[:, 0])
+        y = self.out(params["out"], (h.astype(cd) * gate)[:, None])
+        return y, {"h": h, "conv": win[:, 1:]}

@@ -1,0 +1,226 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+Faithful to arXiv:2405.21060: the sequence is split into chunks; intra-chunk
+terms are dense matmuls (MXU-friendly quadratic-in-chunk), inter-chunk state
+is a short lax.scan over chunk boundaries. Decode is the O(1) recurrent
+state update — this is why mamba2 runs the ``long_500k`` cell that pure
+full-attention archs skip.
+
+TBN applies to the in/out projections (>= lambda); the SSD-specific params
+(A, D, dt bias, conv) are tiny and stay fp32 per the lambda policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.nn import module as mod
+from repro.nn.context import ModelContext
+from repro.nn.linear import Dense
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., q) -> (..., q, q) lower-triangular segment sums:
+    out[i, j] = sum_{k=j+1..i} x[k]  (i >= j), -inf above diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+@dataclasses.dataclass
+class Mamba2Block:
+    d_model: int
+    ctx: ModelContext
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+    name: str = "mamba2"
+
+    def __post_init__(self):
+        c = self.ctx
+        self.d_inner = self.expand * self.d_model
+        assert self.d_inner % self.head_dim == 0
+        self.n_heads = self.d_inner // self.head_dim
+        self.d_conv = self.d_inner + 2 * self.n_groups * self.d_state
+        d_in_proj = 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+        self.in_proj = Dense(self.d_model, d_in_proj, c, name=f"{self.name}.in_proj",
+                             logical=("mlp", "embed"))
+        self.out_proj = Dense(self.d_inner, self.d_model, c, name=f"{self.name}.out_proj",
+                              logical=("embed", "mlp"))
+
+    def specs(self) -> mod.SpecTree:
+        f32 = jnp.float32
+        return {
+            "in_proj": self.in_proj.specs(),
+            "out_proj": self.out_proj.specs(),
+            "conv_w": mod.ParamSpec((self.conv_width, self.d_conv), f32,
+                                    (None, "mlp"), mod.normal(0.1)),
+            "conv_b": mod.ParamSpec((self.d_conv,), f32, ("mlp",), mod.zeros_init()),
+            "A_log": mod.ParamSpec((self.n_heads,), f32, (None,), mod.zeros_init()),
+            "D": mod.ParamSpec((self.n_heads,), f32, (None,), mod.ones_init()),
+            "dt_bias": mod.ParamSpec((self.n_heads,), f32, (None,), mod.zeros_init()),
+            "norm_scale": mod.ParamSpec((self.d_inner,), f32, ("mlp",), mod.ones_init()),
+        }
+
+    # ------------------------------------------------------------------
+    def _split(self, zxbcdt):
+        di, g, n, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        z, xc, dt = jnp.split(zxbcdt, [di, di + self.d_conv - 0 * di], axis=-1)
+        # xc holds (x, B, C) pre-conv; dt is (.., n_heads)
+        return z, xc, dt
+
+    def _conv(self, params, xc):
+        """Causal depthwise conv over time (width conv_width)."""
+        w = params["conv_w"]  # (cw, d_conv)
+        pad = self.conv_width - 1
+        xpad = jnp.pad(xc, ((0, 0), (pad, 0), (0, 0)))
+        out = sum(
+            xpad[:, i : i + xc.shape[1], :] * w[i][None, None, :]
+            for i in range(self.conv_width)
+        )
+        return jax.nn.silu(out + params["conv_b"])
+
+    def _ssd(self, x, dt, A, B, C):
+        """Chunked SSD scan.
+
+        x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, g, n).
+        Returns y (b, l, h, p) and final state (b, h, p, n).
+        """
+        b, l, h, p = x.shape
+        g, n = B.shape[2], B.shape[3]
+        q = min(self.chunk, l)
+        while l % q:
+            q -= 1
+        nc = l // q
+        rep = h // g
+
+        xc = x.reshape(b, nc, q, h, p)
+        dtc = dt.reshape(b, nc, q, h)
+        Bc = jnp.repeat(B.reshape(b, nc, q, g, n), rep, axis=3)
+        Cc = jnp.repeat(C.reshape(b, nc, q, g, n), rep, axis=3)
+
+        dA = dtc * A[None, None, None, :]              # (b,nc,q,h) negative
+        dA = jnp.moveaxis(dA, -1, -2)                  # (b,nc,h,q)
+        A_cum = jnp.cumsum(dA, axis=-1)                # within-chunk cumsum
+
+        # intra-chunk (diagonal block) output
+        L = jnp.exp(_segsum(dA))                       # (b,nc,h,q,q)
+        xdt = xc * dtc[..., None]                      # dt-weighted inputs
+        Ydiag = jnp.einsum("bzihn,bzjhn,bzhij,bzjhp->bzihp", Cc, Bc, L, xdt)
+
+        # per-chunk final states
+        decay_to_end = jnp.exp(A_cum[..., -1:] - A_cum)  # (b,nc,h,q)
+        states = jnp.einsum("bzjhn,bzhj,bzjhp->bzhpn", Bc, decay_to_end, xdt)
+
+        # inter-chunk recurrence (short scan over nc)
+        chunk_decay = jnp.exp(A_cum[..., -1])           # (b,nc,h)
+
+        def step(hprev, inp):
+            st, dec = inp
+            hnew = hprev * dec[..., None, None] + st
+            return hnew, hprev
+
+        init = jnp.zeros((b, h, p, n), x.dtype)
+        final, hprevs = jax.lax.scan(
+            step,
+            init,
+            (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        )
+        hprevs = jnp.moveaxis(hprevs, 0, 1)             # (b,nc,h,p,n) state entering chunk
+
+        # off-diagonal: contribution of carried-in state
+        in_decay = jnp.exp(A_cum)                       # decay from chunk start
+        Yoff = jnp.einsum("bzihn,bzhpn,bzhi->bzihp", Cc, hprevs, in_decay)
+
+        y = (Ydiag + Yoff).reshape(b, l, h, p)
+        return y, final
+
+    # ------------------------------------------------------------------
+    def __call__(self, params: dict, u: jax.Array) -> jax.Array:
+        y, _ = self.forward_with_state(params, u)
+        return y
+
+    def forward_with_state(self, params: dict, u: jax.Array):
+        b, l, _ = u.shape
+        cd = self.ctx.compute_dtype
+        di, g, n, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        zxbcdt = self.in_proj(params["in_proj"], u)
+        z = zxbcdt[..., :di]
+        xc_raw = zxbcdt[..., di : di + self.d_conv]
+        dt_raw = zxbcdt[..., di + self.d_conv :]
+        # conv tail: decode resumes with the last (w-1) pre-conv inputs
+        tail = xc_raw[:, -(self.conv_width - 1):, :].astype(jnp.float32)
+        pad = self.conv_width - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        xc = self._conv(params, xc_raw)
+        x = xc[..., :di].reshape(b, l, h, self.head_dim)
+        Bm = xc[..., di : di + g * n].reshape(b, l, g, n)
+        Cm = xc[..., di + g * n :].reshape(b, l, g, n)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+        A = -jnp.exp(params["A_log"])
+        x = logical_constraint(x, "act_batch", "act_seq", "act_mlp", None)
+        y, state = self._ssd(
+            x.astype(jnp.float32), dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+        )
+        y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+        y = y.reshape(b, l, di).astype(cd)
+        # gated RMSNorm (mamba2 uses norm before out_proj)
+        y = y * jax.nn.silu(z)
+        var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]).astype(cd)
+        out = self.out_proj(params["out_proj"], y)
+        out = logical_constraint(out, "act_batch", "act_seq", "act_embed")
+        return out, {"h": state, "conv": tail}
+
+    # ------------------------------------------------------------------
+    def init_state(self, batch: int, dtype=jnp.float32):
+        return {
+            "h": jnp.zeros((batch, self.n_heads, self.head_dim, self.d_state), dtype),
+            "conv": jnp.zeros((batch, self.conv_width - 1, self.d_conv), dtype),
+        }
+
+    def decode_step(self, params: dict, u: jax.Array, state: dict):
+        """u: (B, 1, d_model); O(1) recurrent update."""
+        b = u.shape[0]
+        cd = self.ctx.compute_dtype
+        di, g, n, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        zxbcdt = self.in_proj(params["in_proj"], u)[:, 0]
+        z = zxbcdt[..., :di]
+        xc_new = zxbcdt[..., di : di + self.d_conv]
+        dt_raw = zxbcdt[..., di + self.d_conv :]
+        # conv window update
+        win = jnp.concatenate([state["conv"], xc_new[:, None, :]], axis=1)
+        w = params["conv_w"]
+        xc = jax.nn.silu(
+            jnp.einsum("bwd,wd->bd", win.astype(jnp.float32), w) + params["conv_b"]
+        )
+        new_conv = win[:, 1:]
+        x = xc[..., :di].reshape(b, h, self.head_dim)
+        Bm = xc[..., di : di + g * n].reshape(b, g, n)
+        Cm = xc[..., di + g * n :].reshape(b, g, n)
+        rep = h // g
+        Bm = jnp.repeat(Bm, rep, axis=1)
+        Cm = jnp.repeat(Cm, rep, axis=1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,h)
+        A = -jnp.exp(params["A_log"])
+        decay = jnp.exp(dt * A)[..., None, None]         # (b,h,1,1)
+        hstate = state["h"] * decay + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt, Bm, x
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Cm, hstate)
+        y = y + params["D"][None, :, None] * x
+        y = y.reshape(b, di).astype(cd) * jax.nn.silu(z)
+        var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]).astype(cd)
+        out = self.out_proj(params["out_proj"], y[:, None, :])
+        return out, {"h": hstate, "conv": new_conv}

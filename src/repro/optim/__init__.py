@@ -1,0 +1,13 @@
+"""Optimizers + schedules (self-contained; no optax on this box)."""
+from repro.optim.adamw import adamw
+from repro.optim.sgd import sgd_momentum
+from repro.optim.schedule import constant, cosine_with_warmup
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = [
+    "adamw",
+    "sgd_momentum",
+    "constant",
+    "cosine_with_warmup",
+    "clip_by_global_norm",
+]

@@ -1,0 +1,19 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_with_warmup(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,48 @@
+"""SGD + momentum + weight decay (the paper's CNN training recipe)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: dict
+
+
+def sgd_momentum(
+    lr: Callable | float, momentum: float = 0.9, weight_decay: float = 0.0
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state: SGDState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            SGDState(step=step, momentum=treedef.unflatten([o[1] for o in out])),
+        )
+
+    return Optimizer(init=init, update=update)

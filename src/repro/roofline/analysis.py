@@ -1,0 +1,163 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / (chips x peak)      [cost_analysis is per-device
+  memory     = HLO_bytes / (chips x HBM bw)     post-SPMD, so the division by
+  collective = coll_bytes / (chips x link bw)   chips is already done]
+
+collective bytes come from parsing the optimized (partitioned) HLO text:
+we sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, with a 2x ring factor for
+all-reduce (reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind transferred bytes (per device) from partitioned HLO."""
+    out: Dict[str, float] = {}
+    done_skip = 0
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _type_bytes(m.group("type"))
+        factor = 2.0 if op == "all-reduce" else 1.0
+        out[op] = out.get(op, 0.0) + factor * nbytes
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                  # per-device
+    bytes_hbm: float              # per-device
+    bytes_coll: float             # per-device
+    coll_breakdown: Dict[str, float]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_coll / hw.ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return dict(
+            flops=self.flops,
+            bytes_hbm=self.bytes_hbm,
+            bytes_coll=self.bytes_coll,
+            t_compute=self.t_compute,
+            t_memory=self.t_memory,
+            t_collective=self.t_collective,
+            dominant=self.dominant,
+            coll_breakdown=self.coll_breakdown,
+        )
+
+
+def analyze_compiled(compiled) -> RooflineTerms:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = collective_bytes(text)
+    return RooflineTerms(
+        flops=flops,
+        bytes_hbm=nbytes,
+        bytes_coll=sum(coll.values()),
+        coll_breakdown=coll,
+    )
+
+
+def combine_extrapolated(
+    base: RooflineTerms, delta: RooflineTerms, extra_trips: int
+) -> RooflineTerms:
+    """total = base + extra_trips * delta  (scan trip-count correction)."""
+    add = lambda a, b: a + extra_trips * b
+    coll = dict(base.coll_breakdown)
+    for k, v in delta.coll_breakdown.items():
+        coll[k] = coll.get(k, 0.0) + extra_trips * v
+    return RooflineTerms(
+        flops=add(base.flops, delta.flops),
+        bytes_hbm=add(base.bytes_hbm, delta.bytes_hbm),
+        bytes_coll=add(base.bytes_coll, delta.bytes_coll),
+        coll_breakdown=coll,
+    )
+
+
+def subtract(a: RooflineTerms, b: RooflineTerms) -> RooflineTerms:
+    coll = {k: max(0.0, v - b.coll_breakdown.get(k, 0.0))
+            for k, v in a.coll_breakdown.items()}
+    return RooflineTerms(
+        flops=max(0.0, a.flops - b.flops),
+        bytes_hbm=max(0.0, a.bytes_hbm - b.bytes_hbm),
+        bytes_coll=max(0.0, a.bytes_coll - b.bytes_coll),
+        coll_breakdown=coll,
+    )
+
+
+def model_flops(cfg, cell, n_params_active: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference forward), global."""
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_params_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_params_active * tokens
+    tokens = cell.global_batch * 1
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,12 @@
+from repro.serve.engine import BatchedEngine, Request, ServeConfig
+from repro.serve.sampling import sample_logits
+from repro.serve.weights import export_serving_params, serving_bytes
+
+__all__ = [
+    "BatchedEngine",
+    "Request",
+    "ServeConfig",
+    "sample_logits",
+    "export_serving_params",
+    "serving_bytes",
+]

@@ -1,0 +1,34 @@
+"""Token sampling: greedy / temperature / top-k, pure-functional."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0       # 0 -> greedy
+    top_k: Optional[int] = None
+    max_tokens: int = 64
+    eos_id: int = -1               # -1 -> never stops on a token
+
+
+def sample_logits(
+    logits: jax.Array,
+    key: jax.Array,
+    *,
+    temperature: float = 0.0,
+    top_k: Optional[int] = None,
+) -> jax.Array:
+    """logits (B, V) -> token ids (B,). Static sampler config (jit-stable)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k is not None and top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,142 @@
+"""Convert TRAIN-mode masters into the shipped SERVE representation.
+
+TRAIN params hold full-precision masters (W [, A]); SERVE params hold what
+the paper actually stores after training (Section 3, "After training is
+complete"):
+
+    tiled layer   -> packed tile bits (q bits in int32 lanes) + alpha(s)
+    BWNN layer    -> row-packed sign bits + one alpha
+    fp32 layer    -> weights cast to the serving compute dtype
+
+The converter pairs the two spec trees of the *same* architecture built in
+TRAIN and SERVE mode and dispatches on the serve node's keys, so it works
+for Dense, stacked (scan-over-layers) Dense, and (L, E, ...) MoE expert
+banks without any per-model code.
+
+This is also the elastic-rejoin broadcast payload (DESIGN.md §5): packed
+tiles are ~32*p smaller than fp32 masters, so re-seeding a repaired node
+with serving weights costs ~1/128th the bytes at p=4.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import pack_bits, packed_len
+from repro.core.policy import TBNPolicy
+from repro.core.tiling import TileSpec, compute_alpha, plan_tiling, tile_vector
+from repro.nn import module as mod
+
+
+def _derive_spec(
+    policy: TBNPolicy, layer_shape: Tuple[int, ...], tile_packed: int,
+    n_alpha: int,
+) -> TileSpec:
+    """Re-derive the layer's TileSpec from shapes; cross-check vs serve spec."""
+    spec = plan_tiling(
+        layer_shape,
+        p=policy.p,
+        min_size=policy.min_size,
+        alpha_mode=policy.alpha_mode,
+        alpha_source=policy.alpha_source,
+        ste=policy.ste,
+        require_aligned=policy.require_aligned,
+    )
+    if spec is None:
+        raise ValueError(f"policy does not tile layer of shape {layer_shape}")
+    if packed_len(spec.q) != tile_packed or spec.n_alpha != n_alpha:
+        raise ValueError(
+            f"derived spec (q={spec.q}, n_alpha={spec.n_alpha}) does not match "
+            f"serve decl (packed={tile_packed}, n_alpha={n_alpha}) "
+            f"for shape {layer_shape}"
+        )
+    return spec
+
+
+def _export_tiled(w, a, spec: TileSpec):
+    """(packed int32 (ceil(q/32),), alpha (n_alpha,)) for one layer."""
+    t = tile_vector(w.astype(jnp.float32), spec)
+    src = a if (spec.alpha_source == "A" and a is not None) else w
+    alpha = compute_alpha(src.astype(jnp.float32), spec)
+    return pack_bits(t), alpha
+
+
+def _export_bwnn(w):
+    """Row-packed sign bits + single alpha for a (n_out, n_in) weight."""
+    alpha = jnp.mean(jnp.abs(w.astype(jnp.float32))).reshape(1)
+    bits = pack_bits(jnp.where(w > 0, 1.0, -1.0))  # packs along last axis
+    return bits, alpha
+
+
+def _vmap_n(fn, n_lead: int):
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def export_serving_params(
+    train_specs: mod.SpecTree,
+    serve_specs: mod.SpecTree,
+    train_params: Dict,
+    policy: TBNPolicy,
+) -> Dict:
+    """Walk the two spec trees; emit the SERVE param tree from masters."""
+
+    def convert(tr_spec, sv_spec, tr_par):
+        if not isinstance(sv_spec, dict):
+            raise TypeError(f"unexpected serve spec node {type(sv_spec)}")
+        keys = set(sv_spec)
+        if "tile" in keys:  # TBN layer (possibly stacked / expert bank)
+            tile_decl: mod.ParamSpec = sv_spec["tile"]
+            alpha_decl: mod.ParamSpec = sv_spec["alpha"]
+            w = tr_par["w"]
+            a = tr_par.get("a")
+            n_lead = len(tile_decl.shape) - 1
+            layer_shape = tuple(w.shape[n_lead:])
+            spec = _derive_spec(
+                policy, layer_shape, tile_decl.shape[-1], alpha_decl.shape[-1]
+            )
+            fn = _vmap_n(lambda we, ae: _export_tiled(we, ae, spec), n_lead)
+            tile, alpha = fn(w, w if a is None else a)
+            out = {"tile": tile, "alpha": alpha}
+            if "b" in keys:
+                out["b"] = tr_par["b"].astype(sv_spec["b"].dtype)
+            return out
+        if "wbits" in keys:  # BWNN layer
+            wb_decl: mod.ParamSpec = sv_spec["wbits"]
+            w = tr_par["w"]
+            n_lead = len(wb_decl.shape) - 2
+            fn = _vmap_n(_export_bwnn, n_lead)
+            bits, alpha = fn(w)
+            out = {"wbits": bits, "alpha": alpha.reshape(alpha.shape[:n_lead] + (1,))
+                   if n_lead else alpha}
+            if "b" in keys:
+                out["b"] = tr_par["b"].astype(sv_spec["b"].dtype)
+            return out
+        if isinstance(sv_spec.get("w"), mod.ParamSpec) or any(
+            isinstance(v, mod.ParamSpec) for v in sv_spec.values()
+        ):
+            # leaf layer kept dense (fp32/below-lambda) or norm/embed node
+            out = {}
+            for k, decl in sv_spec.items():
+                if isinstance(decl, mod.ParamSpec):
+                    out[k] = tr_par[k].astype(decl.dtype)
+                else:
+                    out[k] = convert(tr_spec[k], decl, tr_par[k])
+            return out
+        return {
+            k: convert(tr_spec[k], sv_spec[k], tr_par[k]) for k in sv_spec
+        }
+
+    return convert(train_specs, serve_specs, train_params)
+
+
+def serving_bytes(params) -> int:
+    """Exact bytes of a (serve-form) param tree."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(params)
+    )

@@ -1,0 +1,84 @@
+"""Train-step builder: loss -> grads -> clip -> (optional compressed DP
+all-reduce) -> optimizer, with microbatch gradient accumulation.
+
+The returned step is a pure function (TrainState, batch) -> (TrainState,
+metrics) ready for jax.jit with sharded in/out. Remat and scan-over-layers
+live inside the model; this layer adds accumulation and the update rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import clip_by_global_norm
+from repro.optim.adamw import Optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def build_train_step(
+    loss_fn: Callable[[Any, Dict], Tuple[jax.Array, Dict]],
+    optimizer: Optimizer,
+    *,
+    grad_accum: int = 1,
+    clip_norm: Optional[float] = 1.0,
+    grad_transform: Optional[Callable] = None,   # e.g. compressed DP allreduce
+):
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def microbatched_grads(params, batch):
+        if grad_accum <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, aux), grads = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), aux
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (gsum, loss_sum), aux = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro
+        )
+        grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        aux = jax.tree.map(lambda a: a[-1], aux)
+        return loss_sum / grad_accum, aux, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, aux, grads = microbatched_grads(state.params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        gnorm = jnp.zeros(())
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, state.opt_state, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,215 @@
+"""Unit tests for the TBN core transform (Eqs. 1-9 of the paper)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    TileSpec,
+    aggregate,
+    compute_alpha,
+    construct_binary,
+    expand_alpha,
+    export_tile,
+    fold_inputs_reference,
+    plan_tiling,
+    reconstruct_from_tile,
+    tile_vector,
+    tiled_matmul_reference,
+    tiled_weight,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def spec(shape, p, **kw):
+    s = plan_tiling(shape, p=p, min_size=1, **kw)
+    assert s is not None
+    return s
+
+
+class TestPlanning:
+    def test_basic_divisible(self):
+        s = spec((8, 16), 4)
+        assert s.p == 4 and s.q == 32 and s.aligned_rows
+
+    def test_lambda_policy_blocks_small_layers(self):
+        assert plan_tiling((8, 16), p=4, min_size=64_000) is None
+
+    def test_p_not_dividing_n_falls_back_to_divisor(self):
+        # N = 96, p=5 does not divide -> largest divisor <= 5 is 4
+        s = plan_tiling((6, 16), p=5, min_size=1)
+        assert s.p == 4
+
+    def test_unaligned_detected(self):
+        s = plan_tiling((6, 16), p=4, min_size=1)  # 4 does not divide 6
+        assert s is not None and not s.aligned_rows
+
+    def test_require_aligned_rejects(self):
+        assert plan_tiling((6, 16), p=4, min_size=1, require_aligned=True) is None
+
+    def test_stored_bits(self):
+        s = spec((8, 16), 4, alpha_mode="tile")
+        assert s.stored_bits == 32 + 32 * 4
+        s = spec((8, 16), 4, alpha_mode="layer")
+        assert s.stored_bits == 32 + 32
+        assert s.bits_per_param == (32 + 32) / 128
+
+
+class TestConstruction:
+    def test_tile_replication_structure(self):
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (8, 16))
+        s = spec((8, 16), 4)
+        b = construct_binary(w, s)
+        flat = np.asarray(b).reshape(4, 32)
+        for i in range(1, 4):
+            np.testing.assert_array_equal(flat[0], flat[i])
+        assert set(np.unique(flat)) <= {-1.0, 1.0}
+
+    def test_tile_matches_sign_of_columnsum(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+        s = spec((4, 8), 2)
+        t = tile_vector(w, s)
+        expected = np.where(np.asarray(w).reshape(2, 16).sum(0) > 0, 1.0, -1.0)
+        np.testing.assert_array_equal(np.asarray(t), expected)
+
+    def test_sign_zero_maps_to_minus_one(self):
+        w = jnp.zeros((4, 8))
+        s = spec((4, 8), 2)
+        assert np.all(np.asarray(tile_vector(w, s)) == -1.0)
+
+    def test_alpha_layer_eq7(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+        s = spec((4, 8), 2, alpha_mode="layer")
+        a = compute_alpha(w, s)
+        np.testing.assert_allclose(
+            np.asarray(a), np.abs(np.asarray(w)).mean(), rtol=1e-6
+        )
+
+    def test_alpha_tile_eq9(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (4, 8))
+        s = spec((4, 8), 2, alpha_mode="tile")
+        a = np.asarray(compute_alpha(w, s))
+        wf = np.abs(np.asarray(w).reshape(2, 16))
+        np.testing.assert_allclose(a, wf.mean(axis=1), rtol=1e-6)
+
+    def test_tiled_weight_equals_reconstruct(self):
+        w = jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+        a_param = jax.random.normal(jax.random.PRNGKey(5), (16, 8))
+        s = spec((16, 8), 4, alpha_mode="tile", alpha_source="A")
+        bhat = tiled_weight(w, s, a=a_param)
+        t, alpha = export_tile(w, s, a=a_param)
+        np.testing.assert_allclose(
+            np.asarray(bhat), np.asarray(reconstruct_from_tile(t, alpha, s)), rtol=1e-6
+        )
+
+    def test_compression_invariant_unique_values(self):
+        """Property: B_hat restricted to tile i is alpha_i * t — only q
+        distinct magnitudes per tile."""
+        w = jax.random.normal(jax.random.PRNGKey(6), (32, 32))
+        s = spec((32, 32), 8, alpha_mode="tile", alpha_source="W")
+        bhat = np.asarray(tiled_weight(w, s))
+        flat = bhat.reshape(8, 128)
+        t = np.asarray(tile_vector(w, s))
+        alpha = np.asarray(compute_alpha(w, s))
+        for i in range(8):
+            np.testing.assert_allclose(flat[i], alpha[i] * t, rtol=1e-6)
+
+
+class TestGradients:
+    def test_identity_ste_passes_grad_through(self):
+        w = jax.random.normal(jax.random.PRNGKey(7), (8, 8))
+        s = spec((8, 8), 4, ste="identity")
+        g = jax.grad(lambda w: (construct_binary(w, s) * 2.0).sum())(w)
+        np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones((8, 8)), rtol=1e-6)
+
+    def test_autodiff_ste_sums_replica_grads(self):
+        w = jax.random.normal(jax.random.PRNGKey(8), (8, 8))
+        s = spec((8, 8), 4, ste="autodiff")
+        # dL/dB = B (for L = 0.5*sum(B^2) = const, use L = sum(B * C))
+        c = jax.random.normal(jax.random.PRNGKey(9), (8, 8))
+        g = jax.grad(lambda w: (construct_binary(w, s) * c).sum())(w)
+        # every master element in tile-slot j receives sum_i c*[i, j]
+        csum = np.asarray(c).reshape(4, 16).sum(0)
+        expected = np.broadcast_to(csum, (4, 16)).reshape(8, 8)
+        np.testing.assert_allclose(np.asarray(g), expected, rtol=1e-5)
+
+    def test_alpha_grad_flows_to_A(self):
+        w = jax.random.normal(jax.random.PRNGKey(10), (8, 8))
+        a = jax.random.normal(jax.random.PRNGKey(11), (8, 8))
+        s = spec((8, 8), 2, alpha_source="A")
+        ga = jax.grad(lambda a: tiled_weight(w, s, a=a).sum())(a)
+        assert np.abs(np.asarray(ga)).sum() > 0
+
+    def test_train_step_reduces_loss_on_tiny_regression(self):
+        """End-to-end sanity: TBN layer trained with SGD fits better than init."""
+        key = jax.random.PRNGKey(12)
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (64, 16))
+        w_true = jax.random.normal(k2, (16, 16))
+        y = x @ w_true.T
+        s = spec((16, 16), 2, alpha_source="W", alpha_mode="tile")
+
+        def loss(w):
+            yhat = x @ tiled_weight(w, s).T
+            return jnp.mean((yhat - y) ** 2)
+
+        w = jax.random.normal(k3, (16, 16)) * 0.1
+        l0 = loss(w)
+        step = jax.jit(lambda w: w - 0.05 * jax.grad(loss)(w))
+        for _ in range(150):
+            w = step(w)
+        assert loss(w) < l0 * 0.9
+
+
+class TestStructuredFastMath:
+    @pytest.mark.parametrize("alpha_mode", ["layer", "tile"])
+    def test_tiled_matmul_reference_matches_dense(self, alpha_mode):
+        key = jax.random.PRNGKey(13)
+        kx, kw = jax.random.split(key)
+        n_out, n_in, p = 24, 8, 4
+        x = jax.random.normal(kx, (5, n_in))
+        w = jax.random.normal(kw, (n_out, n_in))
+        s = spec((n_out, n_in), p, alpha_mode=alpha_mode, alpha_source="W")
+        t, alpha = export_tile(w, s)
+        dense = x @ reconstruct_from_tile(t, alpha, s).T
+        fast = tiled_matmul_reference(x, t, alpha, s)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(dense), rtol=1e-5)
+
+    @pytest.mark.parametrize("alpha_mode", ["layer", "tile"])
+    def test_fold_inputs_reference_matches_dense(self, alpha_mode):
+        key = jax.random.PRNGKey(14)
+        kx, kw = jax.random.split(key)
+        n_in, n_out, p = 24, 8, 4  # weight stored (n_in, n_out)
+        x = jax.random.normal(kx, (5, n_in))
+        w = jax.random.normal(kw, (n_in, n_out))
+        s = spec((n_in, n_out), p, alpha_mode=alpha_mode, alpha_source="W")
+        t, alpha = export_tile(w, s)
+        dense = x @ reconstruct_from_tile(t, alpha, s)
+        fast = fold_inputs_reference(x, t, alpha, s)
+        np.testing.assert_allclose(
+            np.asarray(fast), np.asarray(dense), rtol=1e-4, atol=1e-5
+        )
+
+
+class TestPacking:
+    @pytest.mark.parametrize("q", [1, 31, 32, 33, 64, 1000])
+    def test_roundtrip(self, q):
+        from repro.core import pack_bits, unpack_bits
+
+        t = np.sign(np.random.RandomState(q).randn(q))
+        t[t == 0] = 1.0
+        packed = pack_bits(jnp.asarray(t))
+        assert packed.dtype == jnp.int32
+        out = np.asarray(unpack_bits(packed, q))
+        np.testing.assert_array_equal(out, t)
+
+    def test_numpy_twin_matches(self):
+        from repro.core import pack_bits, pack_bits_np
+
+        t = np.sign(np.random.RandomState(0).randn(130))
+        t[t == 0] = 1.0
+        np.testing.assert_array_equal(
+            np.asarray(pack_bits(jnp.asarray(t))), pack_bits_np(t)
+        )

@@ -1,0 +1,221 @@
+"""Distributed runtime: sharding rules, gradient compression, GPipe.
+
+Multi-device cases run in a subprocess with 8 forced host devices (the
+main pytest process must stay single-device per the dry-run contract)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compression import (
+    ef_sign_encode,
+    int8_decode,
+    int8_encode,
+    wire_bits,
+)
+
+
+def run_subprocess(body: str):
+    """Run ``body`` under 8 virtual devices; body must print PASS."""
+    prog = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        """
+    ) + textwrap.dedent(body)
+    out = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        cwd="/root/repo", timeout=480,
+    )
+    assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr[-3000:]}"
+    assert "PASS" in out.stdout, out.stdout
+
+
+class TestCodecs:
+    def test_int8_roundtrip_error_bound(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+        q, s = int8_encode(g)
+        err = np.abs(np.asarray(int8_decode(q, s) - g))
+        assert err.max() <= float(s) * 0.5 + 1e-6
+
+    def test_ef_sign_error_feedback_identity(self):
+        """payload + error == grad + previous error (nothing is lost)."""
+        g = jax.random.normal(jax.random.PRNGKey(1), (64,))
+        e0 = jax.random.normal(jax.random.PRNGKey(2), (64,)) * 0.1
+        payload, e1 = ef_sign_encode(g, e0)
+        np.testing.assert_allclose(
+            np.asarray(payload + e1), np.asarray(g + e0), rtol=1e-5, atol=1e-6
+        )
+
+    def test_wire_bits_ordering(self):
+        n = 10_000
+        assert wire_bits("ef_sign", n) < wire_bits("int8", n) < wire_bits("none", n)
+
+
+class TestShardingRules:
+    def test_divisible_spec_drops_ragged(self):
+        run_subprocess("""
+        from repro.distributed.sharding import param_shardings
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        logical = {"t": ("vocab", "embed")}
+        abst = {"t": jax.ShapeDtypeStruct((50281, 64), jnp.float32)}
+        sh = param_shardings(mesh, logical, abstract_tree=abst)
+        assert sh["t"].spec == jax.sharding.PartitionSpec(None, "data"), sh["t"].spec
+        print("PASS")
+        """)
+
+    def test_duplicate_axis_first_wins(self):
+        run_subprocess("""
+        from repro.distributed.sharding import param_shardings
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        logical = {"t": ("experts", "mlp", "embed")}
+        abst = {"t": jax.ShapeDtypeStruct((8, 16, 32), jnp.float32)}
+        sh = param_shardings(mesh, logical, abstract_tree=abst)
+        # experts takes "model"; mlp (also model) must be dropped
+        assert sh["t"].spec == jax.sharding.PartitionSpec("model", None, "data"), sh["t"].spec
+        print("PASS")
+        """)
+
+
+class TestCompressedDP:
+    def test_ef_sign_dp_converges(self):
+        """Explicit-DP shard_map step with EF-sign reaches the same loss
+        region as exact reduction on a least-squares problem."""
+        run_subprocess("""
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compression import (
+            CompressionState, build_dp_train_step)
+        from repro.optim import constant, sgd_momentum
+        from repro.train.step import init_state
+
+        mesh = jax.make_mesh((8,), ("data",))
+        k = jax.random.PRNGKey(0)
+        w_true = jax.random.normal(k, (16,))
+        X = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+        y = X @ w_true
+
+        def loss_fn(params, batch):
+            pred = batch["x"] @ params["w"]
+            l = jnp.mean((pred - batch["y"]) ** 2)
+            return l, {}
+
+        results = {}
+        for kind in ("none", "ef_sign", "int8"):
+            opt = sgd_momentum(constant(0.05), momentum=0.0)
+            state = init_state({"w": jnp.zeros((16,))}, opt)
+            comp = CompressionState.init(state.params, kind)
+            step = build_dp_train_step(loss_fn, opt, mesh, compression=kind)
+            for i in range(300):
+                state, comp, m = step(state, comp, {"x": X, "y": y})
+            results[kind] = float(m["loss"])
+        assert results["none"] < 1e-3, results
+        assert results["int8"] < 1e-2, results
+        assert results["ef_sign"] < 5e-2, results
+        print("PASS")
+        """)
+
+
+class TestGPipe:
+    def test_pipeline_matches_sequential(self):
+        """4-stage GPipe output == running the stages sequentially."""
+        run_subprocess("""
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.pipeline import (
+            build_gpipe_apply, bubble_fraction)
+
+        mesh = jax.make_mesh((4,), ("stage",))
+        S, M, MB, D = 4, 8, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), S)
+        Ws = jnp.stack([jax.random.normal(k, (D, D)) * 0.3 for k in ks])
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        apply = build_gpipe_apply(
+            stage_fn, mesh, params_spec=P("stage"),
+        )
+        x = jax.random.normal(jax.random.PRNGKey(9), (M, MB, D))
+        y_pipe = apply(Ws, x)
+
+        y_ref = x
+        for s in range(S):
+            y_ref = jnp.tanh(y_ref @ Ws[s])
+        np.testing.assert_allclose(
+            np.asarray(y_pipe), np.asarray(y_ref), rtol=2e-4, atol=2e-5)
+        assert abs(bubble_fraction(8, 4) - 3/11) < 1e-9
+        print("PASS")
+        """)
+
+    def test_pipeline_is_differentiable(self):
+        run_subprocess("""
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.pipeline import build_gpipe_apply
+
+        mesh = jax.make_mesh((4,), ("stage",))
+        S, M, MB, D = 4, 4, 2, 8
+        Ws = jnp.stack([jax.random.normal(jax.random.PRNGKey(i), (D, D)) * 0.3
+                        for i in range(S)])
+        x = jax.random.normal(jax.random.PRNGKey(9), (M, MB, D))
+        apply = build_gpipe_apply(stage_fn := (lambda w, h: jnp.tanh(h @ w)),
+                                  mesh, params_spec=P("stage"))
+
+        def loss_pipe(Ws):
+            return jnp.sum(apply(Ws, x) ** 2)
+
+        def loss_ref(Ws):
+            h = x
+            for s in range(S):
+                h = jnp.tanh(h @ Ws[s])
+            return jnp.sum(h ** 2)
+
+        g_pipe = jax.grad(loss_pipe)(Ws)
+        g_ref = jax.grad(loss_ref)(Ws)
+        np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_ref),
+                                   rtol=5e-4, atol=5e-5)
+        print("PASS")
+        """)
+
+
+class TestMultiDeviceTrainStep:
+    def test_production_sharded_train_step_runs(self):
+        """A reduced arch train step EXECUTES on a (2,4) host mesh with the
+        production sharding rules (not just lowers — runs and updates)."""
+        run_subprocess("""
+        import dataclasses
+        from repro.configs import get_config, build_model
+        from repro.distributed.sharding import axis_rules, param_shardings
+        from repro.launch.mesh import make_host_mesh
+        from repro.nn import module as mod
+        from repro.nn.context import TRAIN, ModelContext
+        from repro.optim import adamw, cosine_with_warmup
+        from repro.train.step import build_train_step, init_state
+
+        cfg = get_config("granite-8b").reduced()
+        cfg = dataclasses.replace(cfg, n_layers=2, vocab=128)
+        model = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN))
+        params = mod.init_params(model.specs(), jax.random.PRNGKey(0))
+        opt = adamw(cosine_with_warmup(1e-3, 2, 100))
+        state = init_state(params, opt)
+        step = build_train_step(model.train_forward, opt)
+        mesh = make_host_mesh(2, 4)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, cfg.vocab)
+        with axis_rules(mesh):
+            state2, metrics = jax.jit(step)(state, {"tokens": toks})
+        assert jnp.isfinite(metrics["loss"]), metrics
+        # params actually moved
+        delta = jax.tree_util.tree_reduce(
+            lambda a, b: a + float(jnp.sum(jnp.abs(b[0] - b[1]))),
+            jax.tree.map(lambda a, b: (a, b), state.params, state2.params),
+            0.0)
+        assert delta > 0
+        print("PASS")
+        """)

@@ -1,0 +1,238 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles.
+
+Per the deliverable: sweep shapes/dtypes and assert_allclose against the
+ref.py oracle for every kernel, plus hypothesis property tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import pack_bits, plan_tiling, unpack_bits
+from repro.kernels import (
+    tbn_dense_train,
+    tile_construct,
+    tile_construct_pallas,
+    tiled_dense_infer,
+    tiled_matmul_unique,
+)
+from repro.kernels.ref import (
+    replicate_scale_ref,
+    tile_construct_ref,
+    tiled_matmul_ref,
+    tiled_matmul_unique_ref,
+)
+
+
+def _rand_tile_packed(key, r, k):
+    t = jnp.where(jax.random.bernoulli(key, 0.5, (r * k,)), 1.0, -1.0)
+    return pack_bits(t).reshape(r, k // 32), t
+
+
+# --------------------------------------------------------------------------
+# tiled_matmul kernel
+# --------------------------------------------------------------------------
+SHAPES = [
+    # (M, K, r) — pre-padded to block multiples (ops.py pads otherwise)
+    (8, 32, 8),
+    (128, 128, 128),
+    (128, 512, 128),
+    (256, 256, 64),
+    (64, 1024, 256),
+]
+
+
+@pytest.mark.parametrize("m,k,r", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tiled_matmul_unique_matches_ref(m, k, r, dtype):
+    kx, kt = jax.random.split(jax.random.PRNGKey(m * 7 + k + r))
+    x = jax.random.normal(kx, (m, k), dtype)
+    packed, t = _rand_tile_packed(kt, r, k)
+    bm, br, bk = min(128, m), min(128, r), min(512, k)
+    # make blocks divide
+    while m % bm:
+        bm //= 2
+    while r % br:
+        br //= 2
+    while k % bk or bk % 32:
+        bk //= 2
+    got = tiled_matmul_unique(
+        x, packed, r=r, block_m=bm, block_r=br, block_k=bk, interpret=True
+    )
+    want = tiled_matmul_unique_ref(x.astype(jnp.float32), packed.reshape(-1), r=r)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-2)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("alpha_mode", ["layer", "tile"])
+def test_tiled_dense_infer_matches_dense_reconstruction(p, alpha_mode):
+    n_out, n_in, m = 64 * p, 96, 16
+    spec = plan_tiling(
+        (n_out, n_in), p=p, min_size=1, alpha_mode=alpha_mode, alpha_source="W"
+    )
+    key = jax.random.PRNGKey(p)
+    kx, kt, ka = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, n_in))
+    t = jnp.where(jax.random.bernoulli(kt, 0.5, (spec.q,)), 1.0, -1.0)
+    packed = pack_bits(t)
+    alpha = jax.random.uniform(ka, (spec.n_alpha,)) + 0.1
+    want = tiled_matmul_ref(x, packed, alpha, n_out=n_out, p=p)
+    # pure-JAX structured path (dry-run path)
+    got_jnp = tiled_dense_infer(x, packed, alpha, spec, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got_jnp), np.asarray(want), rtol=1e-4, atol=1e-4)
+    # pallas interpret path (padding exercised: n_in=96 < block_k)
+    got_pl = tiled_dense_infer(x, packed, alpha, spec, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_tiled_dense_infer_batched_leading_dims():
+    spec = plan_tiling((128, 64), p=4, min_size=1, alpha_source="W")
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 64))
+    t = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (spec.q,)), 1.0, -1.0)
+    alpha = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (4,))) + 0.1
+    y = tiled_dense_infer(x, pack_bits(t), alpha, spec, use_pallas=True)
+    assert y.shape == (2, 3, 128)
+    y2 = tiled_dense_infer(x, pack_bits(t), alpha, spec, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# tile_construct kernel
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("p,q", [(2, 64), (4, 128), (8, 4096), (4, 8192), (3, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tile_construct_pallas_matches_ref(p, q, dtype):
+    w = jax.random.normal(jax.random.PRNGKey(p * q), (p, q), dtype)
+    bq = min(1024, q)
+    got_packed, got_alpha = tile_construct_pallas(w, block_q=bq, interpret=True)
+    want_packed, want_alpha = tile_construct_ref(w.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got_packed), np.asarray(want_packed))
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got_alpha), np.asarray(want_alpha), rtol=rtol)
+
+
+@pytest.mark.parametrize("alpha_source", ["W", "A"])
+@pytest.mark.parametrize("alpha_mode", ["layer", "tile"])
+def test_tile_construct_wrapper_matches_core(alpha_source, alpha_mode):
+    from repro.core import compute_alpha, tile_vector
+
+    spec = plan_tiling(
+        (40, 50), p=4, min_size=1, alpha_mode=alpha_mode, alpha_source=alpha_source
+    )  # q = 500: not a multiple of 32 -> exercises padding
+    kw, ka = jax.random.split(jax.random.PRNGKey(3))
+    w = jax.random.normal(kw, (40, 50))
+    a = jax.random.normal(ka, (40, 50))
+    for use_pallas in (False, True):
+        packed, alpha = tile_construct(w, spec, a=a, use_pallas=use_pallas)
+        t = unpack_bits(packed, spec.q)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(tile_vector(w, spec)))
+        src = a if alpha_source == "A" else w
+        np.testing.assert_allclose(
+            np.asarray(alpha), np.asarray(compute_alpha(src, spec)), rtol=1e-5
+        )
+
+
+def test_construct_with_separate_alpha_source():
+    w = jax.random.normal(jax.random.PRNGKey(4), (4, 256))
+    a = jax.random.normal(jax.random.PRNGKey(5), (4, 256))
+    _, alpha_w = tile_construct_pallas(w, interpret=True)
+    _, alpha_a = tile_construct_pallas(w, a, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(alpha_a), np.abs(np.asarray(a)).mean(1), rtol=1e-5
+    )
+    assert not np.allclose(np.asarray(alpha_w), np.asarray(alpha_a))
+
+
+# --------------------------------------------------------------------------
+# fused training forward
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("alpha_source", ["W", "A"])
+def test_tbn_dense_train_forward_and_grad_match_reference(alpha_source):
+    from repro.core import tiled_weight
+
+    spec = plan_tiling(
+        (64, 48), p=4, min_size=1, alpha_mode="tile", alpha_source=alpha_source
+    )
+    kx, kw, ka = jax.random.split(jax.random.PRNGKey(6), 3)
+    x = jax.random.normal(kx, (10, 48))
+    w = jax.random.normal(kw, (64, 48))
+    a = jax.random.normal(ka, (64, 48)) if alpha_source == "A" else w
+
+    def ref(x, w, a):
+        bhat = tiled_weight(w, spec, a=(a if alpha_source == "A" else None))
+        return jnp.einsum("mk,ok->mo", x, bhat)
+
+    y_ref = ref(x, w, a)
+    y_fused = tbn_dense_train(x, w, a, spec)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+    gref = jax.grad(lambda w, a: (ref(x, w, a) ** 2).sum(), argnums=(0, 1))(w, a)
+    gfused = jax.grad(
+        lambda w, a: (tbn_dense_train(x, w, a, spec) ** 2).sum(), argnums=(0, 1)
+    )(w, a)
+    for g1, g2 in zip(gref, gfused):
+        np.testing.assert_allclose(np.asarray(g2), np.asarray(g1), rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# hypothesis property tests
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([32, 64, 128]),
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_property_kernel_linear_in_x(r, k, m, seed):
+    """Kernel output is linear in x: f(a*x1 + x2) == a*f(x1) + f(x2)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, kt = jax.random.split(key, 3)
+    x1 = jax.random.normal(k1, (m, k))
+    x2 = jax.random.normal(k2, (m, k))
+    packed, _ = _rand_tile_packed(kt, r, k)
+    f = lambda x: tiled_matmul_unique(
+        x, packed, r=r, block_m=max(8, m), block_r=8, block_k=32, interpret=True
+    )
+    mpad = (-m) % max(8, m)
+    x1p, x2p = (jnp.pad(v, ((0, mpad), (0, 0))) for v in (x1, x2))
+    lhs = f(2.5 * x1p + x2p)
+    rhs = 2.5 * f(x1p) + f(x2p)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.sampled_from([2, 4, 8]),
+    q=st.sampled_from([32, 96, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_property_construct_sign_invariance(p, q, seed):
+    """Scaling W by a positive constant never changes the tile bits and
+    scales alpha linearly (invariant of Eqs. 2-3, 7-9)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (p, q))
+    pk1, a1 = tile_construct_pallas(w, interpret=True)
+    pk2, a2 = tile_construct_pallas(3.0 * w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pk1), np.asarray(pk2))
+    np.testing.assert_allclose(np.asarray(a2), 3.0 * np.asarray(a1), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 16]),
+    r=st.sampled_from([8, 16]),
+    p=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_property_replicate_scale_blocks(m, r, p, seed):
+    """Every output block i equals alpha_i/alpha_j times block j."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(k1, (m, r))
+    alpha = jnp.abs(jax.random.normal(k2, (p,))) + 0.5
+    y = np.asarray(replicate_scale_ref(u, alpha, p)).reshape(m, p, r)
+    a = np.asarray(alpha)
+    for i in range(1, p):
+        np.testing.assert_allclose(y[:, i], y[:, 0] * (a[i] / a[0]), rtol=1e-5)

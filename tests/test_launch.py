@@ -1,0 +1,55 @@
+"""Launcher CLIs + examples: end-to-end smoke (reduced, CPU)."""
+import subprocess
+import sys
+
+import pytest
+
+
+def run_module(args, timeout=420):
+    out = subprocess.run(
+        [sys.executable, "-m", *args], capture_output=True, text=True,
+        cwd="/root/repo", timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert out.returncode == 0, out.stderr[-2500:]
+    return out.stdout
+
+
+class TestTrainCLI:
+    def test_train_resume_cycle(self, tmp_path):
+        """20 steps, then resume to 30 from the checkpoint."""
+        common = ["repro.launch.train", "--arch", "granite-8b", "--reduced",
+                  "--batch", "2", "--seq", "32", "--log-every", "10",
+                  "--ckpt-every", "10", "--ckpt-dir", str(tmp_path)]
+        out = run_module(common + ["--steps", "20"])
+        assert "done: 20 steps" in out
+        out = run_module(common + ["--steps", "30"])
+        # resumed from step 20 -> only 10 more steps run
+        assert "final step=30" in out
+
+    def test_train_bwnn_mode(self, tmp_path):
+        out = run_module(
+            ["repro.launch.train", "--arch", "mamba2-370m", "--reduced",
+             "--steps", "5", "--batch", "2", "--seq", "32",
+             "--mode", "bwnn", "--ckpt-dir", str(tmp_path)])
+        assert "mode=bwnn" in out
+
+
+class TestServeCLI:
+    def test_serve_reduced(self):
+        out = run_module(
+            ["repro.launch.serve", "--arch", "granite-8b", "--reduced",
+             "--requests", "3", "--max-tokens", "4", "--max-len", "48"])
+        assert "smaller" in out and "requests" in out
+
+
+class TestDryrunCLI:
+    def test_single_cell(self, tmp_path):
+        out_file = tmp_path / "cell.json"
+        run_module(
+            ["repro.launch.dryrun", "--arch", "mamba2-370m",
+             "--shape", "decode_32k", "--mesh", "single", "--no-roofline",
+             "--out", str(out_file)], timeout=540)
+        import json
+        rec = json.loads(out_file.read_text())
+        assert rec["status"] == "ok" and rec["fits_hbm"]

@@ -1,0 +1,276 @@
+"""Property-based tests (hypothesis) on the TBN core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack_bits, packed_len, storage_bytes, unpack_bits
+from repro.core.tiling import (
+    TileSpec,
+    compute_alpha,
+    construct_binary,
+    expand_alpha,
+    export_tile,
+    fold_inputs_reference,
+    plan_tiling,
+    reconstruct_from_tile,
+    tile_vector,
+    tiled_matmul_reference,
+    tiled_weight,
+)
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# strategy: (n_out, n_in, p) with p | n_out (aligned) and N >= 1
+aligned_shapes = st.tuples(
+    st.sampled_from([2, 4, 8]),                 # p
+    st.integers(1, 6),                          # rows per tile
+    st.integers(1, 24),                         # n_in
+).map(lambda t: (t[0] * t[1], t[2], t[0]))
+
+unaligned_shapes = st.tuples(
+    st.integers(2, 7),                          # n_out
+    st.integers(2, 12),                         # n_in
+    st.sampled_from([2, 3, 4, 6]),              # p
+).filter(lambda t: (t[0] * t[1]) % t[2] == 0)
+
+
+def mk_spec(n_out, n_in, p, alpha_mode="tile", alpha_source="W"):
+    return plan_tiling(
+        (n_out, n_in), p=p, min_size=0,
+        alpha_mode=alpha_mode, alpha_source=alpha_source,
+    )
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestTilingInvariants:
+    @given(aligned_shapes, st.integers(0, 100))
+    @settings(**SETTINGS)
+    def test_plan_arithmetic(self, dims, _):
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p)
+        assert spec.p * spec.q == n_out * n_in
+        assert spec.aligned_rows
+        assert spec.stored_bits == spec.q + 32 * spec.n_alpha
+
+    @given(unaligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_reconstruction_equals_training_weight(self, dims, seed):
+        """reconstruct(export(W)) == tiled training weight — the shipped
+        representation is exactly what training optimized (any p | N)."""
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p)
+        w = rand(seed, (n_out, n_in))
+        bhat = tiled_weight(w, spec)
+        t, alpha = export_tile(w, spec)
+        rec = reconstruct_from_tile(t, alpha, spec)
+        np.testing.assert_allclose(np.asarray(bhat), np.asarray(rec), rtol=1e-6)
+
+    @given(unaligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_tile_replication_structure(self, dims, seed):
+        """Every tile replica in B is identical (the paper's core claim)."""
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p)
+        w = rand(seed, (n_out, n_in))
+        b = construct_binary(w, spec).reshape(spec.p, spec.q)
+        for i in range(1, spec.p):
+            np.testing.assert_array_equal(np.asarray(b[0]), np.asarray(b[i]))
+
+    @given(unaligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_binary_values_pm1(self, dims, seed):
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p)
+        b = np.asarray(construct_binary(rand(seed, (n_out, n_in)), spec))
+        assert set(np.unique(b)).issubset({-1.0, 1.0})
+
+    @given(aligned_shapes, st.integers(0, 10_000),
+           st.sampled_from(["layer", "tile"]))
+    @settings(**SETTINGS)
+    def test_tiled_matmul_reference_matches_dense(self, dims, seed, amode):
+        """Tile-reuse matmul (p-fold fewer FLOPs) == dense B_hat matmul."""
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p, alpha_mode=amode)
+        w = rand(seed, (n_out, n_in))
+        x = rand(seed + 1, (3, n_in))
+        t, alpha = export_tile(w, spec)
+        y_fast = tiled_matmul_reference(x, t, alpha, spec)
+        y_ref = x @ np.asarray(tiled_weight(w, spec)).T
+        np.testing.assert_allclose(
+            np.asarray(y_fast), y_ref, rtol=2e-5, atol=2e-5
+        )
+
+    @given(aligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_fold_inputs_reference_matches_dense(self, dims, seed):
+        """Input-folding variant: y = x @ W_hat for (n_in, n_out) layout."""
+        n_in, n_out, p = dims          # leading dim is the contraction here
+        spec = mk_spec(n_in, n_out, p)
+        w = rand(seed, (n_in, n_out))
+        x = rand(seed + 1, (3, n_in))
+        t, alpha = export_tile(w, spec)
+        y_fast = fold_inputs_reference(x, t, alpha, spec)
+        y_ref = x @ np.asarray(tiled_weight(w, spec))
+        np.testing.assert_allclose(
+            np.asarray(y_fast), y_ref, rtol=3e-5, atol=3e-5
+        )
+
+    @given(st.integers(1, 40))
+    @settings(**SETTINGS)
+    def test_lambda_policy_threshold(self, n):
+        spec = plan_tiling((n, 10), p=2, min_size=200)
+        if n * 10 < 200:
+            assert spec is None
+        elif (n * 10) % 2 == 0:
+            assert spec is not None
+
+
+class TestAlphaInvariants:
+    @given(unaligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_alpha_layer_is_mean_abs(self, dims, seed):
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p, alpha_mode="layer")
+        w = rand(seed, (n_out, n_in))
+        alpha = compute_alpha(w, spec)
+        np.testing.assert_allclose(
+            float(alpha[0]), float(jnp.mean(jnp.abs(w))), rtol=1e-6
+        )
+
+    @given(unaligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_tile_alphas_average_to_layer_alpha(self, dims, seed):
+        """mean over per-tile alphas == the single layer alpha (Eq.7/Eq.9)."""
+        n_out, n_in, p = dims
+        w = rand(seed, (n_out, n_in))
+        a_tile = compute_alpha(w, mk_spec(n_out, n_in, p, alpha_mode="tile"))
+        a_layer = compute_alpha(w, mk_spec(n_out, n_in, p, alpha_mode="layer"))
+        np.testing.assert_allclose(
+            float(jnp.mean(a_tile)), float(a_layer[0]), rtol=1e-5
+        )
+
+    @given(unaligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_expand_alpha_constant_within_tile(self, dims, seed):
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p, alpha_mode="tile")
+        alpha = jnp.abs(rand(seed, (spec.p,))) + 0.1
+        e = np.asarray(expand_alpha(alpha, spec)).reshape(spec.p, spec.q)
+        for i in range(spec.p):
+            assert np.all(e[i] == e[i, 0])
+
+
+class TestSTE:
+    @given(unaligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_identity_ste_passes_gradient_through(self, dims, seed):
+        """Paper Eq. 6: dL/dW == dL/dB elementwise for the identity STE
+        (alpha from the separate tensor A so the product rule is isolated)."""
+        n_out, n_in, p = dims
+        spec = plan_tiling((n_out, n_in), p=p, min_size=0,
+                           alpha_mode="layer", alpha_source="A")
+        w = rand(seed, (n_out, n_in))
+        a = rand(seed + 7, (n_out, n_in))
+
+        def f(w):
+            alpha = jax.lax.stop_gradient(compute_alpha(a, spec))
+            g = jnp.arange(1.0, 1.0 + w.size).reshape(w.shape)
+            return jnp.sum(construct_binary(w, spec) * expand_alpha(alpha, spec) * g)
+
+        grad = jax.grad(f)(w)
+        alpha = float(compute_alpha(a, spec)[0])
+        expected = alpha * np.arange(1.0, 1.0 + w.size).reshape(w.shape)
+        np.testing.assert_allclose(np.asarray(grad), expected, rtol=1e-5)
+
+
+class TestPacking:
+    @given(st.integers(1, 400), st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_pack_unpack_roundtrip(self, q, seed):
+        t = jnp.sign(rand(seed, (q,)))
+        t = jnp.where(t == 0, 1.0, t)
+        packed = pack_bits(t)
+        assert packed.shape == (packed_len(q),)
+        got = unpack_bits(packed, q)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(got))
+
+    @given(st.integers(1, 4000), st.integers(1, 8))
+    @settings(**SETTINGS)
+    def test_storage_bytes_exact(self, q, n_alpha):
+        assert storage_bytes(q, n_alpha) == packed_len(q) * 4 + 4 * n_alpha
+
+    @given(st.integers(2, 200), st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_batched_packing(self, q, seed):
+        t = jnp.sign(rand(seed, (3, q)))
+        t = jnp.where(t == 0, 1.0, t)
+        got = unpack_bits(pack_bits(t), q)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(got))
+
+
+class TestSubBitAccounting:
+    @given(st.sampled_from([2, 4, 8, 16]), st.integers(6, 12))
+    @settings(**SETTINGS)
+    def test_bits_per_param_below_one(self, p, log2n):
+        """The headline claim: stored bits/param < 1 (sub-bit) once the
+        layer clears the alpha overhead."""
+        n_out = 2 ** log2n
+        n_in = 2 ** log2n
+        spec = plan_tiling((n_out, n_in), p=p, min_size=0, alpha_mode="tile")
+        if spec.q >= 32 * spec.n_alpha:   # alpha overhead amortized
+            assert spec.bits_per_param < 1.0
+            assert spec.bits_per_param >= 1.0 / p
+
+
+class TestRowsConstruction:
+    @given(aligned_shapes, st.integers(0, 10_000),
+           st.sampled_from(["layer", "tile"]),
+           st.sampled_from(["W", "A"]))
+    @settings(**SETTINGS)
+    def test_rows_equals_flat(self, dims, seed, amode, asrc):
+        """Axis-sum construction (tiled_weight_rows) is bit-identical to
+        the paper's flat (p, q) construction for row-aligned specs."""
+        from repro.core.tiling import tiled_weight_rows
+
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p, alpha_mode=amode, alpha_source=asrc)
+        w = rand(seed, (n_out, n_in))
+        a = rand(seed + 3, (n_out, n_in)) if asrc == "A" else None
+        ref = tiled_weight(w, spec, a=a)
+        got = tiled_weight_rows(w, spec, a=a)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                                   rtol=1e-6, atol=1e-7)
+
+    @given(aligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_rows_batched_matches_vmap(self, dims, seed):
+        from repro.core.tiling import tiled_weight_rows
+
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p, alpha_source="W")
+        w = rand(seed, (3, n_out, n_in))
+        got = tiled_weight_rows(w, spec)
+        ref = jax.vmap(lambda we: tiled_weight(we, spec))(w)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                                   rtol=1e-6, atol=1e-7)
+
+    @given(aligned_shapes, st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_rows_identity_ste_gradient(self, dims, seed):
+        from repro.core.tiling import tiled_weight_rows
+
+        n_out, n_in, p = dims
+        spec = mk_spec(n_out, n_in, p, alpha_mode="layer", alpha_source="A")
+        w = rand(seed, (n_out, n_in))
+        a = rand(seed + 3, (n_out, n_in))
+        g_ref = jax.grad(lambda w: jnp.sum(
+            tiled_weight(w, spec, a=jax.lax.stop_gradient(a))))(w)
+        g_got = jax.grad(lambda w: jnp.sum(
+            tiled_weight_rows(w, spec, a=jax.lax.stop_gradient(a))))(w)
+        np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_got),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,184 @@
+"""Serving: weights export (train -> packed tiles), batched engine
+correctness vs single-request decode, int8 KV cache parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.core.packing import unpack_bits
+from repro.nn import module as mod
+from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.serve.engine import BatchedEngine, ServeConfig
+from repro.serve.sampling import SamplingParams, sample_logits
+from repro.serve.weights import export_serving_params, serving_bytes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def build_pair(arch="granite-8b", **cfg_over):
+    cfg = get_config(arch).reduced()
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    t_model = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN,
+                                            compute_dtype=jnp.float32))
+    s_model = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
+                                            compute_dtype=jnp.float32,
+                                            use_pallas=False))
+    return cfg, t_model, s_model
+
+
+class TestWeightsExport:
+    def test_export_matches_train_forward(self):
+        """Serve-form (packed tile) logits == train-forward logits: the
+        shipped representation computes the identical function."""
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+        batch = {"tokens": toks}
+        pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+
+        xt = tm._embed_inputs(tp, batch)
+        ht, _ = tm.backbone(tp, xt, positions=pos)
+        lt = tm.logits(tp, ht)
+
+        xs = sm._embed_inputs(sp, batch)
+        hs, _ = sm.backbone(sp, xs, positions=pos)
+        ls = sm.logits(sp, hs)
+        np.testing.assert_allclose(
+            np.asarray(lt, np.float32), np.asarray(ls, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+    def test_export_is_smaller(self):
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        assert serving_bytes(sp) < serving_bytes(tp) / 4
+
+    def test_moe_expert_bank_export(self):
+        cfg, tm, sm = build_pair("qwen2-moe-a2.7b")
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        # spot-check a tiled expert bank leaf: per-expert packed tiles
+        leaves = {
+            "/".join(str(getattr(p, "key", p)) for p in path): v
+            for path, v in jax.tree_util.tree_leaves_with_path(sp)
+        }
+        tile_keys = [k for k in leaves if k.endswith("/tile")]
+        assert tile_keys, "no packed tiles in MoE serve params"
+        assert all(leaves[k].dtype == jnp.int32 for k in tile_keys)
+
+    def test_packed_tile_bits_roundtrip(self):
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        # find a Dense with a tile and verify sign structure matches W
+        from repro.core.tiling import plan_tiling, tile_vector
+
+        w = tp["seg0"]["mixer"]["wq"]["w"][0]      # layer 0 slice
+        spec = cfg.tbn.spec_for(tuple(w.shape))
+        t_ref = tile_vector(w, spec)
+        packed = sp["seg0"]["mixer"]["wq"]["tile"][0]
+        t_got = unpack_bits(packed, spec.q)
+        np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_got))
+
+
+class TestEngine:
+    def _engine(self, arch="granite-8b", n_slots=3, **cfg_over):
+        cfg, tm, sm = build_pair(arch, **cfg_over)
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        eng = BatchedEngine(
+            sm, sp,
+            ServeConfig(n_slots=n_slots, max_len=64, prefill_buckets=(8, 16)),
+        )
+        return cfg, sm, sp, eng
+
+    def test_single_request_greedy(self):
+        cfg, sm, sp, eng = self._engine()
+        req = eng.submit([1, 2, 3], SamplingParams(max_tokens=5))
+        eng.run_until_drained()
+        assert req.done and len(req.output) == 5
+        assert all(0 <= t < cfg.vocab for t in req.output)
+
+    def test_batched_equals_solo(self):
+        """Tokens produced with 3 concurrent requests == one at a time."""
+        _, _, _, eng1 = self._engine(n_slots=3)
+        prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]
+        reqs = [eng1.submit(p, SamplingParams(max_tokens=4)) for p in prompts]
+        eng1.run_until_drained()
+
+        _, _, _, eng2 = self._engine(n_slots=1)
+        solo = []
+        for p in prompts:
+            r = eng2.submit(p, SamplingParams(max_tokens=4))
+            eng2.run_until_drained()
+            solo.append(r.output)
+        for r, s in zip(reqs, solo):
+            assert r.output == s
+
+    def test_slot_reuse_drains_queue(self):
+        _, _, _, eng = self._engine(n_slots=2)
+        reqs = [eng.submit([i + 1], SamplingParams(max_tokens=3))
+                for i in range(5)]
+        eng.run_until_drained()
+        assert all(r.done for r in reqs)
+
+    def test_eos_stops_early(self):
+        cfg, sm, sp, eng = self._engine()
+        # greedy decode to find the first emitted token, then use it as EOS
+        probe = eng.submit([1, 2], SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        eos = probe.output[0]
+        _, _, _, eng2 = self._engine()
+        r = eng2.submit([1, 2], SamplingParams(max_tokens=32, eos_id=eos))
+        eng2.run_until_drained()
+        assert r.output[-1] == eos and len(r.output) <= 32
+
+
+class TestInt8KV:
+    def test_decode_parity_bf16_vs_int8(self):
+        """Greedy decode path with int8 KV matches bf16 KV closely."""
+        outs = {}
+        for kvd in ("bf16", "int8"):
+            cfg, tm, sm = build_pair("granite-8b", kv_dtype=kvd)
+            tp = mod.init_params(tm.specs(), KEY)
+            sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+            toks = jnp.array([[1, 2, 3, 4]], jnp.int32)
+            logits, caches, lengths = sm.prefill(sp, {"tokens": toks}, 16)
+            seq = []
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            for _ in range(4):
+                logits, caches, lengths = sm.decode_step(sp, tok, caches, lengths)
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                seq.append(int(tok[0, 0]))
+            outs[kvd] = seq
+        assert outs["bf16"] == outs["int8"]
+
+    def test_quant_roundtrip_exact_for_updates(self):
+        from repro.nn.attention import dequantize_kv, quantize_kv
+
+        x = jax.random.normal(KEY, (2, 8, 4, 16), jnp.float32)
+        q, s = quantize_kv(x)
+        # requantizing the dequantized cache reproduces the codes exactly
+        q2, s2 = quantize_kv(dequantize_kv(q, s, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-6)
+
+
+class TestSampling:
+    def test_greedy_is_argmax(self):
+        logits = jnp.array([[0.1, 2.0, -1.0], [3.0, 0.0, 0.0]])
+        out = sample_logits(logits, KEY, temperature=0.0)
+        np.testing.assert_array_equal(np.asarray(out), [1, 0])
+
+    def test_topk_restricts_support(self):
+        logits = jnp.array([[10.0, 9.0, -50.0, -50.0]])
+        for seed in range(16):
+            t = sample_logits(logits, jax.random.PRNGKey(seed),
+                              temperature=1.0, top_k=2)
+            assert int(t[0]) in (0, 1)
