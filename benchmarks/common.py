@@ -65,6 +65,60 @@ def train_classifier(
     return correct / total
 
 
+def measure_serve_delta(
+    name: str,
+    policy: TBNPolicy,
+    *,
+    img: int = 32,
+    batch: int = 4,
+    repeats: int = 3,
+    **kw,
+) -> Dict[str, Dict[str, float]]:
+    """MEASURED dense-vs-packed serving delta for a conv model.
+
+    Builds ``name`` once in TRAIN mode, exports the SERVE form twice — the
+    fp32 dense representation and the packed TBN representation — and
+    reports exact shipped bytes (``serving_bytes``) plus wall-clock forward
+    latency of each jitted serve path on this host. The packed path is the
+    structured tile-reuse math (``use_pallas=False``) so the numbers are
+    host-measurable; on TPU the Pallas kernels replace it with the same
+    FLOPs. This measures *cost* (bytes moved / work done), not accuracy —
+    the function-parity claims live in tests/test_tiled_conv.py and
+    tests/test_serve.py.
+    """
+    from repro.nn.context import SERVE, TRAIN
+    from repro.serve.weights import export_serving_params, serving_bytes
+
+    tctx = ModelContext(policy=policy, mode=TRAIN, compute_dtype=jnp.float32)
+    tm = build_paper_model(name, tctx, **kw)
+    tp = mod.init_params(tm.specs(), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, img, img, 3))
+
+    out: Dict[str, Dict[str, float]] = {}
+    for label, pol in [("dense_fp32", fp32_policy()), ("packed", policy)]:
+        sctx = ModelContext(policy=pol, mode=SERVE, compute_dtype=jnp.float32,
+                            use_pallas=False)
+        sm = build_paper_model(name, sctx, **kw)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, pol)
+        fwd = jax.jit(lambda p, x, m=sm: m(p, x))
+        fwd(sp, x).block_until_ready()  # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fwd(sp, x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        out[label] = {
+            "bytes": float(serving_bytes(sp)),
+            "latency_ms": 1e3 * best,
+        }
+    d, p_ = out["dense_fp32"], out["packed"]
+    out["delta"] = {
+        "bytes_saving": d["bytes"] / p_["bytes"],
+        "latency_speedup": d["latency_ms"] / p_["latency_ms"],
+    }
+    return out
+
+
 def save_rows(name: str, rows: List[dict]):
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))

@@ -1,0 +1,60 @@
+"""Version-compat shims over APIs that moved between jax releases.
+
+The repo targets current jax spellings; these wrappers keep the same call
+sites running on the older installed jax:
+
+  * ``shard_map`` graduated from ``jax.experimental.shard_map`` (kwarg
+    ``check_rep``) to top-level ``jax.shard_map`` (kwarg ``check_vma``).
+  * ``jax.make_mesh`` grew an ``axis_types=`` parameter (and
+    ``jax.sharding.AxisType``) only in newer releases.
+  * Pallas' ``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams``.
+  * ``Compiled.cost_analysis()`` returned a one-element list of dicts before
+    returning the dict directly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, kwarg is check_vma
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # older jax: experimental module, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` with the new-style signature on any supported jax."""
+    if check_vma is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` under either of its names."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a flat dict on any jax."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))

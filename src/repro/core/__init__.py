@@ -4,9 +4,11 @@ from repro.core.collapse import collapsed_chain_reference, fold_consumer_weight
 from repro.core.packing import (
     pack_bits,
     pack_bits_np,
+    pack_conv_tile,
     packed_len,
     storage_bytes,
     unpack_bits,
+    unpack_conv_tile,
 )
 from repro.core.policy import (
     BWNN,
@@ -18,13 +20,16 @@ from repro.core.policy import (
     tbn_policy,
 )
 from repro.core.tiling import (
+    ConvTilePlan,
     TileSpec,
     aggregate,
     compute_alpha,
     construct_binary,
+    conv_tile_bank,
     expand_alpha,
     export_tile,
     fold_inputs_reference,
+    plan_conv_tiling,
     plan_tiling,
     reconstruct_from_tile,
     tile_as_matrix,
@@ -36,9 +41,11 @@ from repro.core.tiling import (
 __all__ = [
     "BitsReport", "LayerLedger", "LayerRecord",
     "collapsed_chain_reference", "fold_consumer_weight",
-    "pack_bits", "pack_bits_np", "packed_len", "storage_bytes", "unpack_bits",
+    "pack_bits", "pack_bits_np", "pack_conv_tile", "packed_len",
+    "storage_bytes", "unpack_bits", "unpack_conv_tile",
     "BWNN", "FP32", "TBN", "TBNPolicy", "bwnn_policy", "fp32_policy", "tbn_policy",
-    "TileSpec", "aggregate", "compute_alpha", "construct_binary", "expand_alpha",
-    "export_tile", "fold_inputs_reference", "plan_tiling", "reconstruct_from_tile",
+    "ConvTilePlan", "TileSpec", "aggregate", "compute_alpha", "construct_binary",
+    "conv_tile_bank", "expand_alpha", "export_tile", "fold_inputs_reference",
+    "plan_conv_tiling", "plan_tiling", "reconstruct_from_tile",
     "tile_as_matrix", "tile_vector", "tiled_matmul_reference", "tiled_weight",
 ]

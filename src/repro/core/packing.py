@@ -59,6 +59,30 @@ def unpack_tile_matrix(packed: jax.Array, n: int, dtype=jnp.float32) -> jax.Arra
     return unpack_bits(packed, n, dtype)
 
 
+def pack_conv_tile(t: jax.Array, r: int, c_in: int, kh: int, kw: int) -> jax.Array:
+    """Flat conv tile (q,) ±1 -> (kh*kw, r, ceil(c_in/32)) int32 ("conv layout").
+
+    q = r * c_in * kh * kw, flat in OIHW row-major order (r filters). The
+    tiled conv kernel contracts one (i, j) kernel position per grid step, so
+    the shipped layout groups each position's (r, c_in) cross-section and
+    packs it along channels — the kernel unpacks a (block_r, c_in) ±1 block
+    from int32 lanes without crossing kernel positions. Rows are padded to
+    whole words with zero bits (consumers pad activations with zero
+    channels, so the -1 values those bits unpack to contribute nothing).
+    """
+    bank = t.reshape(r, c_in, kh, kw)
+    by_pos = bank.transpose(2, 3, 0, 1).reshape(kh * kw, r, c_in)
+    return pack_bits(by_pos)
+
+
+def unpack_conv_tile(
+    packed: jax.Array, r: int, c_in: int, kh: int, kw: int, dtype=jnp.float32
+) -> jax.Array:
+    """(kh*kw, r, ceil(c_in/32)) int32 -> OIHW tile bank (r, c_in, kh, kw) ±1."""
+    by_pos = unpack_bits(packed, c_in, dtype=dtype)  # (kh*kw, r, c_in)
+    return by_pos.reshape(kh, kw, r, c_in).transpose(2, 3, 0, 1)
+
+
 def storage_bytes(q: int, n_alpha: int) -> int:
     """Exact shipped bytes for one tiled layer (tile lanes + fp32 alphas)."""
     return packed_len(q) * 4 + 4 * n_alpha

@@ -320,6 +320,87 @@ def tiled_weight_rows(
 
 
 # --------------------------------------------------------------------------
+# Conv tiling plan — how the flat (p, q) tiling lands on an OIHW weight
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ConvTilePlan:
+    """Structured view of an aligned tiling of an OIHW conv weight.
+
+    For ``W (c_out, c_in, kh, kw)`` with ``p | c_out`` the flat row-major
+    (p, q) tiling covers ``r = c_out / p`` *complete* filters per tile
+    (q = r * c_in * kh * kw), so replica ``a`` of the tile is filters
+    ``a*r .. (a+1)*r - 1``. That is the structure the tiled conv inference
+    kernel exploits: it computes ``u = conv(x, T)`` against the r-filter
+    tile bank once and broadcasts over the p replicas with per-tile alpha —
+    exactly the conv analogue of ``tiled_matmul_reference``.
+
+    The kernel consumes the tile in "conv layout": per kernel position
+    (i, j), the (r, c_in) cross-section packed along channels into int32
+    lanes — shape ``(kh*kw, r, ceil(c_in/32))`` (see
+    ``repro.core.packing.pack_conv_tile``).
+    """
+
+    spec: TileSpec
+
+    def __post_init__(self):
+        if len(self.spec.shape) != 4:
+            raise ValueError(f"conv plan needs a 4-D weight, got {self.spec.shape}")
+        if not self.spec.aligned_rows:
+            raise ValueError("conv plan needs p | c_out (aligned tiling)")
+
+    @property
+    def c_out(self) -> int:
+        return self.spec.shape[0]
+
+    @property
+    def c_in(self) -> int:
+        return self.spec.shape[1]
+
+    @property
+    def kernel(self) -> Tuple[int, int]:
+        return (self.spec.shape[2], self.spec.shape[3])
+
+    @property
+    def r(self) -> int:
+        """Filters covered by one tile."""
+        return self.spec.rows_per_tile
+
+    @property
+    def kk(self) -> int:
+        """Patch length: elements of one filter (= im2col contraction dim)."""
+        return self.spec.n // self.spec.shape[0]
+
+    @property
+    def positions(self) -> int:
+        return self.spec.shape[2] * self.spec.shape[3]
+
+    def packed_shape(self) -> Tuple[int, int, int]:
+        """Shipped conv-layout tile shape: (kh*kw, r, ceil(c_in/32)) int32."""
+        from repro.core.packing import packed_len
+
+        return (self.positions, self.r, packed_len(self.c_in))
+
+
+def plan_conv_tiling(spec: Optional[TileSpec]) -> Optional[ConvTilePlan]:
+    """ConvTilePlan for a conv TileSpec, or None when the fast path does not
+    apply (no tiling / not 4-D / unaligned — the layer then falls back to
+    dense-weight reconstruction at serve time)."""
+    if spec is None or len(spec.shape) != 4 or not spec.aligned_rows:
+        return None
+    return ConvTilePlan(spec=spec)
+
+
+def conv_tile_bank(t: jax.Array, plan: ConvTilePlan, dtype=jnp.float32) -> jax.Array:
+    """View the flat tile t (q,) as an r-filter OIHW bank (r, c_in, kh, kw).
+
+    This is the p-fold-smaller conv kernel the tiled inference path runs;
+    the effective dense weight is its block replication with per-tile alpha.
+    """
+    kh, kw = plan.kernel
+    return t.reshape(plan.r, plan.c_in, kh, kw).astype(dtype)
+
+
+# --------------------------------------------------------------------------
 # Inference-form parameters (what actually ships)
 # --------------------------------------------------------------------------
 def export_tile(

@@ -50,9 +50,21 @@ class DataPipeline:
         return self._step
 
     def close(self):
+        """Stop and JOIN the prefetch thread. Leaving it running as a daemon
+        is not safe: it calls into jax, and a daemon thread killed mid-XLA
+        call at interpreter exit aborts the process from C++ ("terminate
+        called without an active exception")."""
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout=5.0)
+        if self._thread.is_alive():  # generator stuck >5s — still unsafe
+            import logging
+
+            logging.getLogger("repro.data").warning(
+                "prefetch thread did not stop within 5s; process exit may "
+                "abort if it is inside a jax call"
+            )

@@ -23,7 +23,8 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 
 def pipeline_forward(

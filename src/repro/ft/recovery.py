@@ -114,20 +114,28 @@ class RecoveryManager:
         start_step, state = self._bootstrap()
         data = self.make_data(start_step)
         step = start_step
-        for batch in data:
-            if step >= num_steps:
-                break
-            self.watchdog.start_step()
-            state, metrics = step_fn(state, batch)
-            dur, slow = self.watchdog.end_step()
-            if slow:
-                log.warning("straggler step %d: %.3fs (median %.3fs)",
-                            step, dur, self.watchdog.median)
-            step += 1
-            self.metrics_log.append((step, metrics))
-            if hooks is not None:
-                hooks(step, state, metrics)
-            self.ckpt.save(step, state, metadata={"wall": time.time()})
+        try:
+            for batch in data:
+                if step >= num_steps:
+                    break
+                self.watchdog.start_step()
+                state, metrics = step_fn(state, batch)
+                dur, slow = self.watchdog.end_step()
+                if slow:
+                    log.warning("straggler step %d: %.3fs (median %.3fs)",
+                                step, dur, self.watchdog.median)
+                step += 1
+                self.metrics_log.append((step, metrics))
+                if hooks is not None:
+                    hooks(step, state, metrics)
+                self.ckpt.save(step, state, metadata={"wall": time.time()})
+        finally:
+            # always stop the prefetch thread — a restart would otherwise
+            # leak one live producer per attempt, and a leaked thread inside
+            # a jax call aborts the process at interpreter shutdown
+            close = getattr(data, "close", None)
+            if close is not None:
+                close()
         self.ckpt.save(step, state, metadata={"wall": time.time()}, force=True)
         self.ckpt.wait()
         return state

@@ -1,12 +1,22 @@
 """TBN Pallas TPU kernels (validated in interpret mode on CPU)."""
-from repro.kernels.ops import tbn_dense_train, tile_construct, tiled_dense_infer
+from repro.kernels.ops import (
+    resolve_conv_padding,
+    tbn_dense_train,
+    tile_construct,
+    tiled_conv_infer,
+    tiled_dense_infer,
+)
 from repro.kernels.tile_construct import tile_construct_pallas
+from repro.kernels.tiled_conv import tiled_conv_unique
 from repro.kernels.tiled_matmul import tiled_matmul_unique
 
 __all__ = [
+    "resolve_conv_padding",
     "tbn_dense_train",
     "tile_construct",
+    "tiled_conv_infer",
     "tiled_dense_infer",
     "tile_construct_pallas",
+    "tiled_conv_unique",
     "tiled_matmul_unique",
 ]

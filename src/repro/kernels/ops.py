@@ -4,6 +4,10 @@ Public entry points:
   * ``tiled_dense_infer``  — serving-time FC layer from (packed tile, alpha)
     without materializing the dense weight. Pallas on TPU; pure-JAX
     structured math elsewhere (identical FLOPs — used by the SPMD dry-run).
+  * ``tiled_conv_infer``   — serving-time Conv2D from a conv-layout packed
+    tile: fused im2col + tile-reuse matmul on TPU (the dense OIHW weight
+    never exists); elsewhere the structured fallback runs the p-fold
+    smaller tile bank through ``conv_general_dilated``.
   * ``tile_construct``     — (W[,A]) -> (packed tile, alpha) fused on TPU.
   * ``tbn_dense_train``    — training forward y = x @ B_hat^T that composes
     the two kernels (B_hat never hits HBM) with a custom VJP whose backward
@@ -13,20 +17,22 @@ Public entry points:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import pack_bits, unpack_bits
+from repro.core.packing import pack_bits, unpack_bits, unpack_conv_tile
 from repro.core.tiling import (
     TileSpec,
     compute_alpha,
+    plan_conv_tiling,
     tile_vector,
     tiled_matmul_reference,
     tiled_weight,
 )
 from repro.kernels.tile_construct import tile_construct_pallas
+from repro.kernels.tiled_conv import tiled_conv_unique
 from repro.kernels.tiled_matmul import tiled_matmul_unique
 
 
@@ -91,6 +97,127 @@ def tiled_dense_infer(
             u[:, None, :] * alpha[None, :, None], (m, spec.p, r)
         )
     return y.reshape(*lead, n_out).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Inference conv
+# --------------------------------------------------------------------------
+Padding = Union[str, Sequence[Tuple[int, int]]]
+
+
+def _conv_spatial(size: int, k: int, s: int, pad) -> Tuple[int, int, int]:
+    """(out_size, pad_lo, pad_hi) with conv_general_dilated semantics."""
+    if pad in ("SAME", "SAME_LOWER"):
+        out = -(-size // s)
+        total = max((out - 1) * s + k - size, 0)
+        half = total // 2
+        lo = half if pad == "SAME" else total - half
+        return out, lo, total - lo
+    if pad == "VALID":
+        lo = hi = 0
+    elif isinstance(pad, str):
+        raise ValueError(f"unsupported padding {pad!r} for tiled conv")
+    else:
+        lo, hi = pad
+    return (size + lo + hi - k) // s + 1, lo, hi
+
+
+def resolve_conv_padding(
+    hw: Tuple[int, int], kernel: Tuple[int, int], stride: Tuple[int, int],
+    padding: Padding,
+) -> Tuple[Tuple[int, int], Tuple[Tuple[int, int], Tuple[int, int]]]:
+    """-> ((OH, OW), explicit ((lo_h, hi_h), (lo_w, hi_w)))."""
+    pads = (padding, padding) if isinstance(padding, str) else tuple(padding)
+    oh, lo_h, hi_h = _conv_spatial(hw[0], kernel[0], stride[0], pads[0])
+    ow, lo_w, hi_w = _conv_spatial(hw[1], kernel[1], stride[1], pads[1])
+    return (oh, ow), ((lo_h, hi_h), (lo_w, hi_w))
+
+
+def _replicate_conv_out(u, alpha, spec: TileSpec):
+    """u (N, OH, OW, r) -> y (N, OH, OW, p*r) via the tile-replica broadcast."""
+    n, oh, ow, r = u.shape
+    if spec.alpha_mode == "layer":
+        y = jnp.broadcast_to(u[..., None, :], (n, oh, ow, spec.p, r)) \
+            * alpha.reshape(1)
+    else:
+        y = jnp.broadcast_to(
+            u[..., None, :] * alpha[None, None, None, :, None],
+            (n, oh, ow, spec.p, r),
+        )
+    return y.reshape(n, oh, ow, spec.p * r)
+
+
+def tiled_conv_infer(
+    x: jax.Array,
+    packed: jax.Array,
+    alpha: jax.Array,
+    spec: TileSpec,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: Padding = "SAME",
+    use_pallas: Optional[bool] = None,
+    block_r: int = 128,
+) -> jax.Array:
+    """y = conv(x, W_hat) from the shipped conv representation.
+
+    x: (N, H, W, C) NHWC; packed: (kh*kw, r, ceil(C/32)) int32 conv-layout
+    tile (repro.core.packing.pack_conv_tile); alpha: (n_alpha,). The weight
+    logical shape spec.shape == (c_out, C, kh, kw) with p | c_out.
+
+    The dense weight is never materialized on either path: the conv runs
+    against the r = c_out/p unique filters of the tile and the p replicas
+    are a broadcast-scale on the output channels (exact conv analogue of
+    ``tiled_matmul_reference`` — validated against
+    ``kernels.ref.tiled_conv_ref``).
+    """
+    plan = plan_conv_tiling(spec)
+    if plan is None:
+        raise ValueError(f"spec {spec.shape} has no aligned conv tiling")
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    kh, kw = plan.kernel
+    sh, sw = stride
+    n, h, w, c = x.shape
+    assert c == plan.c_in, (c, plan.c_in)
+    (oh, ow), pads = resolve_conv_padding((h, w), (kh, kw), stride, padding)
+
+    if not use_pallas:
+        bank = unpack_conv_tile(packed, plan.r, c, kh, kw, dtype=x.dtype)
+        u = jax.lax.conv_general_dilated(
+            x, bank, window_strides=stride, padding=pads,
+            dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        )
+        return _replicate_conv_out(u, alpha.astype(u.dtype), spec).astype(x.dtype)
+
+    # Pallas path: pad spatially so every kernel read is in bounds
+    # (Hp >= (OH-1)*sh + kh, Wp >= kw-1 + OW*sw), channels to whole int32
+    # lanes (zero activations x any tile bit contribute nothing), and the
+    # filter axis to block_r multiples (junk rows sliced off).
+    hp = max(h + pads[0][0] + pads[0][1], (oh - 1) * sh + kh)
+    wp = max(w + pads[1][0] + pads[1][1], (kw - 1) + ow * sw)
+    cpad = (-c) % 32
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pads[0][0], hp - h - pads[0][0]),
+            (pads[1][0], wp - w - pads[1][0]),
+            (0, cpad),
+        ),
+    )
+    r = plan.r
+    br = min(block_r, r)
+    rpad = (-r) % br
+    packed_p = jnp.pad(packed, ((0, 0), (0, rpad), (0, 0)))
+    u = tiled_conv_unique(
+        xp,
+        packed_p,
+        kernel=(kh, kw),
+        stride=stride,
+        out_hw=(oh, ow),
+        block_r=br,
+    )[..., :r]
+    return _replicate_conv_out(u, alpha, spec).astype(x.dtype)
 
 
 # --------------------------------------------------------------------------

@@ -12,8 +12,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import pack_bits, unpack_bits
-from repro.core.tiling import TileSpec, compute_alpha, tile_vector
+from repro.core.packing import pack_bits, unpack_bits, unpack_conv_tile
+from repro.core.tiling import (
+    TileSpec,
+    compute_alpha,
+    expand_alpha,
+    plan_conv_tiling,
+    tile_vector,
+)
 
 
 def tile_construct_ref(
@@ -64,6 +70,43 @@ def tiled_matmul_unique_ref(
     m, k = x.shape
     t = unpack_bits(packed, r * k, dtype=jnp.float32).reshape(r, k)
     return x.astype(jnp.float32) @ t.T
+
+
+def tiled_conv_dense_weight(
+    packed: jax.Array, alpha: jax.Array, spec: TileSpec, dtype=jnp.float32
+) -> jax.Array:
+    """Rebuild the FULL dense OIHW weight from a conv-layout packed tile.
+
+    Ground truth only — this is exactly the materialization the tiled conv
+    kernel exists to avoid.
+    """
+    plan = plan_conv_tiling(spec)
+    kh, kw = plan.kernel
+    bank = unpack_conv_tile(packed, plan.r, plan.c_in, kh, kw, dtype=dtype)
+    w = jnp.broadcast_to(bank[None], (spec.p, plan.r, plan.c_in, kh, kw))
+    w = w.reshape(spec.shape)
+    return (w * expand_alpha(alpha, spec).astype(dtype)).astype(dtype)
+
+
+def tiled_conv_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    alpha: jax.Array,
+    spec: TileSpec,
+    *,
+    stride=(1, 1),
+    padding="SAME",
+) -> jax.Array:
+    """Dense ground truth for ``ops.tiled_conv_infer``: materialize W_hat and
+    run ``jax.lax.conv_general_dilated`` on it."""
+    w = tiled_conv_dense_weight(packed, alpha, spec, dtype=jnp.float32)
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    )
 
 
 def replicate_scale_ref(u: jax.Array, alpha: jax.Array, p: int) -> jax.Array:

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 LANE_BITS = 32
 
 
@@ -108,7 +110,7 @@ def tiled_matmul_unique(
         out_specs=pl.BlockSpec((block_m, block_r), lambda mi, ri, ki: (mi, ri)),
         out_shape=jax.ShapeDtypeStruct((m, r), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_r), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -7,20 +7,16 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_auto_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16) data x model per pod; (2,16,16) pod x data x model across two."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4):
     """Small mesh over forced-host devices for multi-device tests."""
-    return jax.make_mesh(
-        (data, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_auto_mesh((data, model), ("data", "model"))

@@ -81,10 +81,9 @@ def main(argv=None):
     mesh = None
     if args.mesh:
         d, m = (int(v) for v in args.mesh.split("x"))
-        mesh = jax.make_mesh(
-            (d, m), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.compat import make_auto_mesh
+
+        mesh = make_auto_mesh((d, m), ("data", "model"))
 
     def make_state():
         params = mod.init_params(model.specs(), jax.random.PRNGKey(args.seed))

@@ -24,10 +24,12 @@ from repro.core.tiling import (
     TileSpec,
     _ste_sign,
     compute_alpha,
+    plan_conv_tiling,
+    reconstruct_from_tile,
     tiled_weight,
 )
 from repro.distributed.sharding import logical_constraint
-from repro.kernels.ops import tbn_dense_train, tiled_dense_infer
+from repro.kernels.ops import tbn_dense_train, tiled_conv_infer, tiled_dense_infer
 from repro.nn import module as mod
 from repro.nn.context import SERVE, TRAIN, ModelContext
 
@@ -192,7 +194,15 @@ class Dense:
 @dataclasses.dataclass
 class Conv2D:
     """NHWC conv with OIHW-stored weight (paper layout: tiles replicate
-    whole output-channel filters -> the Table 2 bit-ops saving)."""
+    whole output-channel filters -> the Table 2 bit-ops saving).
+
+    In SERVE mode a tiled conv carries only the conv-layout packed tile +
+    alpha and applies through ``tiled_conv_infer`` (fused im2col Pallas
+    kernel on TPU, structured tile-bank conv elsewhere) — the dense OIHW
+    weight is never reconstructed. Unaligned tilings (p does not divide
+    c_out, only reachable with ``require_aligned=False``) ship the flat
+    packed tile and fall back to dense reconstruction at apply time.
+    """
 
     c_in: int
     c_out: int
@@ -209,9 +219,12 @@ class Conv2D:
         self.spec: Optional[TileSpec] = self.ctx.policy.spec_for(
             self.wshape, kind="conv"
         )
+        self.plan = plan_conv_tiling(self.spec)
         self.ctx.note(self.name, self.wshape, kind="conv", spec=self.spec)
 
     def specs(self) -> mod.SpecTree:
+        if self.ctx.mode == SERVE:
+            return self._serve_specs()
         out = {
             "w": mod.ParamSpec(
                 self.wshape, self.ctx.param_dtype, (None,) * 4, mod.kaiming()
@@ -227,24 +240,89 @@ class Conv2D:
             )
         return out
 
-    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
-        cd = self.ctx.compute_dtype
-        w = params["w"]
-        if self.spec is not None:
-            w = tiled_weight(w, self.spec, a=params.get("a"), dtype=cd).reshape(
-                self.wshape
+    def _serve_specs(self) -> mod.SpecTree:
+        out: dict = {}
+        if self.plan is not None:
+            out["tile_conv"] = mod.ParamSpec(
+                self.plan.packed_shape(), jnp.int32, (None,) * 3,
+                mod.zeros_init(),
+            )
+            out["alpha"] = mod.ParamSpec(
+                (self.spec.n_alpha,), jnp.float32, (None,), mod.ones_init()
+            )
+        elif self.spec is not None:  # unaligned: flat tile, dense fallback
+            out["tile"] = mod.ParamSpec(
+                (packed_len(self.spec.q),), jnp.int32, (None,),
+                mod.zeros_init(),
+            )
+            out["alpha"] = mod.ParamSpec(
+                (self.spec.n_alpha,), jnp.float32, (None,), mod.ones_init()
             )
         elif self.ctx.policy.binarize("conv"):
-            w = bwnn_weight(w, cd)
+            kh, kw = self.kernel
+            out["wbits"] = mod.ParamSpec(
+                (self.c_out, packed_len(self.c_in * kh * kw)),
+                jnp.int32, (None, None), mod.zeros_init(),
+            )
+            out["alpha"] = mod.ParamSpec((1,), jnp.float32, (None,), mod.ones_init())
         else:
-            w = w.astype(cd)
-        y = jax.lax.conv_general_dilated(
-            x.astype(cd),
+            out["w"] = mod.ParamSpec(
+                self.wshape, self.ctx.compute_dtype, (None,) * 4, mod.kaiming()
+            )
+        if self.use_bias:
+            out["b"] = mod.ParamSpec(
+                (self.c_out,), jnp.float32, (None,), mod.zeros_init()
+            )
+        return out
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        cd = self.ctx.compute_dtype
+        if self.ctx.mode == SERVE:
+            y = self._serve_apply(params, x)
+        else:
+            w = params["w"]
+            if self.spec is not None:
+                w = tiled_weight(w, self.spec, a=params.get("a"), dtype=cd).reshape(
+                    self.wshape
+                )
+            elif self.ctx.policy.binarize("conv"):
+                w = bwnn_weight(w, cd)
+            else:
+                w = w.astype(cd)
+            y = self._dense_conv(x.astype(cd), w)
+        if self.use_bias:
+            y = y + params["b"].astype(y.dtype)
+        return y
+
+    def _dense_conv(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        return jax.lax.conv_general_dilated(
+            x,
             w,
             window_strides=self.stride,
             padding=self.padding,
             dimension_numbers=("NHWC", "OIHW", "NHWC"),
         )
-        if self.use_bias:
-            y = y + params["b"].astype(y.dtype)
-        return y
+
+    def _serve_apply(self, params: dict, x: jax.Array) -> jax.Array:
+        cd = self.ctx.compute_dtype
+        x = x.astype(cd)
+        if "tile_conv" in params:
+            return tiled_conv_infer(
+                x,
+                params["tile_conv"],
+                params["alpha"],
+                self.spec,
+                stride=self.stride,
+                padding=self.padding,
+                use_pallas=self.ctx.use_pallas,
+            )
+        if "tile" in params:  # unaligned tiling: documented dense fallback
+            t = unpack_bits(params["tile"], self.spec.q, dtype=cd)
+            w = reconstruct_from_tile(t, params["alpha"], self.spec, dtype=cd)
+            return self._dense_conv(x, w)
+        if "wbits" in params:
+            kh, kw = self.kernel
+            w = unpack_bits(params["wbits"], self.c_in * kh * kw, dtype=cd)
+            w = (w * params["alpha"].astype(cd)).reshape(self.wshape)
+            return self._dense_conv(x, w)
+        return self._dense_conv(x, params["w"].astype(cd))

@@ -108,7 +108,9 @@ class RooflineTerms:
 
 
 def analyze_compiled(compiled) -> RooflineTerms:
-    cost = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis_dict
+
+    cost = cost_analysis_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
     try:

@@ -25,18 +25,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import pack_bits, packed_len
+from repro.core.packing import pack_bits, pack_conv_tile, packed_len
 from repro.core.policy import TBNPolicy
-from repro.core.tiling import TileSpec, compute_alpha, plan_tiling, tile_vector
+from repro.core.tiling import (
+    TileSpec,
+    compute_alpha,
+    plan_conv_tiling,
+    plan_tiling,
+    tile_vector,
+)
 from repro.nn import module as mod
 
 
-def _derive_spec(
-    policy: TBNPolicy, layer_shape: Tuple[int, ...], tile_packed: int,
-    n_alpha: int,
-) -> TileSpec:
-    """Re-derive the layer's TileSpec from shapes; cross-check vs serve spec."""
-    spec = plan_tiling(
+def _derive_layer_spec(policy: TBNPolicy, layer_shape: Tuple[int, ...]):
+    """Re-derive a layer's TileSpec from the policy (single source for every
+    export branch, so a new policy field threads through exactly once)."""
+    return plan_tiling(
         layer_shape,
         p=policy.p,
         min_size=policy.min_size,
@@ -45,6 +49,14 @@ def _derive_spec(
         ste=policy.ste,
         require_aligned=policy.require_aligned,
     )
+
+
+def _derive_spec(
+    policy: TBNPolicy, layer_shape: Tuple[int, ...], tile_packed: int,
+    n_alpha: int,
+) -> TileSpec:
+    """TileSpec for a flat-tile layer; cross-check vs the serve decl."""
+    spec = _derive_layer_spec(policy, layer_shape)
     if spec is None:
         raise ValueError(f"policy does not tile layer of shape {layer_shape}")
     if packed_len(spec.q) != tile_packed or spec.n_alpha != n_alpha:
@@ -56,19 +68,42 @@ def _derive_spec(
     return spec
 
 
-def _export_tiled(w, a, spec: TileSpec):
-    """(packed int32 (ceil(q/32),), alpha (n_alpha,)) for one layer."""
+def _tile_and_alpha(w, a, spec: TileSpec):
+    """The shipped (t ±1 (q,), alpha (n_alpha,)) — shared by every layout."""
     t = tile_vector(w.astype(jnp.float32), spec)
     src = a if (spec.alpha_source == "A" and a is not None) else w
-    alpha = compute_alpha(src.astype(jnp.float32), spec)
+    return t, compute_alpha(src.astype(jnp.float32), spec)
+
+
+def _export_tiled(w, a, spec: TileSpec):
+    """(packed int32 (ceil(q/32),), alpha (n_alpha,)) for one layer."""
+    t, alpha = _tile_and_alpha(w, a, spec)
     return pack_bits(t), alpha
 
 
+def _export_conv_tiled(w, a, spec: TileSpec):
+    """Conv-layout packed tile (kh*kw, r, ceil(c_in/32)) + alpha.
+
+    Same tile bits as ``_export_tiled``, laid out per kernel position so the
+    fused im2col kernel (repro.kernels.tiled_conv) streams them directly —
+    the serving host never re-shuffles, and the dense OIHW weight never
+    exists on the serving path.
+    """
+    plan = plan_conv_tiling(spec)
+    t, alpha = _tile_and_alpha(w, a, spec)
+    kh, kw = plan.kernel
+    return pack_conv_tile(t, plan.r, plan.c_in, kh, kw), alpha
+
+
 def _export_bwnn(w):
-    """Row-packed sign bits + single alpha for a (n_out, n_in) weight."""
+    """Row-packed sign bits + single alpha for one weight tensor.
+
+    Rows are the leading dim; trailing dims flatten into the packed axis
+    (dense (n_out, n_in) rows and conv (c_out, c_in*kh*kw) filters alike).
+    """
     alpha = jnp.mean(jnp.abs(w.astype(jnp.float32))).reshape(1)
-    bits = pack_bits(jnp.where(w > 0, 1.0, -1.0))  # packs along last axis
-    return bits, alpha
+    rows = jnp.where(w > 0, 1.0, -1.0).reshape(w.shape[0], -1)
+    return pack_bits(rows), alpha
 
 
 def _vmap_n(fn, n_lead: int):
@@ -89,6 +124,27 @@ def export_serving_params(
         if not isinstance(sv_spec, dict):
             raise TypeError(f"unexpected serve spec node {type(sv_spec)}")
         keys = set(sv_spec)
+        if "tile_conv" in keys:  # tiled Conv2D (conv-layout packed tile)
+            tile_decl: mod.ParamSpec = sv_spec["tile_conv"]
+            alpha_decl: mod.ParamSpec = sv_spec["alpha"]
+            w = tr_par["w"]
+            a = tr_par.get("a")
+            n_lead = len(tile_decl.shape) - 3
+            layer_shape = tuple(w.shape[n_lead:])
+            spec = _derive_layer_spec(policy, layer_shape)
+            plan = plan_conv_tiling(spec)
+            if plan is None or plan.packed_shape() != tile_decl.shape[n_lead:] \
+                    or spec.n_alpha != alpha_decl.shape[-1]:
+                raise ValueError(
+                    f"derived conv plan does not match serve decl "
+                    f"{tile_decl.shape} for shape {layer_shape}"
+                )
+            fn = _vmap_n(lambda we, ae: _export_conv_tiled(we, ae, spec), n_lead)
+            tile, alpha = fn(w, w if a is None else a)
+            out = {"tile_conv": tile, "alpha": alpha}
+            if "b" in keys:
+                out["b"] = tr_par["b"].astype(sv_spec["b"].dtype)
+            return out
         if "tile" in keys:  # TBN layer (possibly stacked / expert bank)
             tile_decl: mod.ParamSpec = sv_spec["tile"]
             alpha_decl: mod.ParamSpec = sv_spec["alpha"]

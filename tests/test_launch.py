@@ -1,4 +1,5 @@
 """Launcher CLIs + examples: end-to-end smoke (reduced, CPU)."""
+import os
 import subprocess
 import sys
 
@@ -6,10 +7,16 @@ import pytest
 
 
 def run_module(args, timeout=420):
+    # Minimal env, but JAX_*/XLA_* must pass through: without e.g.
+    # JAX_PLATFORMS=cpu, jax backend discovery blocks on non-CPU probing
+    # and the subprocess hangs until the timeout.
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    env.update({k: v for k, v in os.environ.items()
+                if k.startswith(("JAX_", "XLA_"))})
+    env.setdefault("JAX_PLATFORMS", "cpu")
     out = subprocess.run(
         [sys.executable, "-m", *args], capture_output=True, text=True,
-        cwd="/root/repo", timeout=timeout,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo", timeout=timeout, env=env,
     )
     assert out.returncode == 0, out.stderr[-2500:]
     return out.stdout

@@ -1,7 +1,16 @@
-"""Property-based tests (hypothesis) on the TBN core invariants."""
+"""Property-based tests (hypothesis) on the TBN core invariants and the
+Pallas kernels (interpret mode).
+
+hypothesis is a dev-only dependency (requirements-dev.txt / the ``dev``
+extra); the whole module is skipped when it is not installed so the tier-1
+command still passes from a clean checkout.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.packing import pack_bits, packed_len, storage_bytes, unpack_bits
@@ -213,6 +222,55 @@ class TestPacking:
         np.testing.assert_array_equal(np.asarray(t), np.asarray(got))
 
 
+class TestConvPacking:
+    @given(
+        st.integers(1, 8),                      # r
+        st.integers(1, 40),                     # c_in
+        st.sampled_from([(1, 1), (3, 3), (5, 3)]),
+        st.integers(0, 10_000),
+    )
+    @settings(**SETTINGS)
+    def test_conv_layout_roundtrip(self, r, c_in, kernel, seed):
+        """pack_conv_tile/unpack_conv_tile invert each other for any filter
+        count / channel count / kernel shape (word padding included)."""
+        from repro.core.packing import pack_conv_tile, unpack_conv_tile
+
+        kh, kw = kernel
+        q = r * c_in * kh * kw
+        t = jnp.sign(rand(seed, (q,)))
+        t = jnp.where(t == 0, 1.0, t)
+        packed = pack_conv_tile(t, r, c_in, kh, kw)
+        assert packed.shape == (kh * kw, r, packed_len(c_in))
+        bank = unpack_conv_tile(packed, r, c_in, kh, kw)
+        np.testing.assert_array_equal(
+            np.asarray(bank), np.asarray(t.reshape(r, c_in, kh, kw))
+        )
+
+    @given(
+        st.sampled_from([2, 3, 4]),             # p
+        st.integers(1, 4),                      # r
+        st.integers(1, 12),                     # c_in
+        st.integers(0, 10_000),
+    )
+    @settings(**SETTINGS)
+    def test_conv_layout_bits_equal_flat_bits(self, p, r, c_in, seed):
+        """The conv layout is a pure relayout of the flat shipped tile: the
+        same q bits, no information added or lost."""
+        from repro.core.packing import pack_conv_tile, unpack_conv_tile
+        from repro.core.tiling import export_tile
+
+        kh = kw = 3
+        spec = plan_tiling((p * r, c_in, kh, kw), p=p, min_size=0,
+                           alpha_mode="tile", alpha_source="W")
+        w = rand(seed, (p * r, c_in, kh, kw))
+        t, _ = export_tile(w, spec)
+        packed = pack_conv_tile(t, r, c_in, kh, kw)
+        bank = unpack_conv_tile(packed, r, c_in, kh, kw)
+        np.testing.assert_array_equal(
+            np.asarray(bank.reshape(-1)), np.asarray(t)
+        )
+
+
 class TestSubBitAccounting:
     @given(st.sampled_from([2, 4, 8, 16]), st.integers(6, 12))
     @settings(**SETTINGS)
@@ -225,6 +283,84 @@ class TestSubBitAccounting:
         if spec.q >= 32 * spec.n_alpha:   # alpha overhead amortized
             assert spec.bits_per_param < 1.0
             assert spec.bits_per_param >= 1.0 / p
+
+
+class TestKernelProperties:
+    """Property tests on the Pallas kernels (moved from test_kernels.py so
+    that module stays hypothesis-free)."""
+
+    @staticmethod
+    def _rand_tile_packed(key, r, k):
+        t = jnp.where(jax.random.bernoulli(key, 0.5, (r * k,)), 1.0, -1.0)
+        return pack_bits(t).reshape(r, k // 32), t
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        r=st.sampled_from([8, 16, 32]),
+        k=st.sampled_from([32, 64, 128]),
+        m=st.integers(1, 16),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_kernel_linear_in_x(self, r, k, m, seed):
+        """Kernel output is linear in x: f(a*x1 + x2) == a*f(x1) + f(x2)."""
+        from repro.kernels import tiled_matmul_unique
+
+        key = jax.random.PRNGKey(seed)
+        k1, k2, kt = jax.random.split(key, 3)
+        x1 = jax.random.normal(k1, (m, k))
+        x2 = jax.random.normal(k2, (m, k))
+        packed, _ = self._rand_tile_packed(kt, r, k)
+        f = lambda x: tiled_matmul_unique(
+            x, packed, r=r, block_m=max(8, m), block_r=8, block_k=32,
+            interpret=True,
+        )
+        mpad = (-m) % max(8, m)
+        x1p, x2p = (jnp.pad(v, ((0, mpad), (0, 0))) for v in (x1, x2))
+        lhs = f(2.5 * x1p + x2p)
+        rhs = 2.5 * f(x1p) + f(x2p)
+        np.testing.assert_allclose(
+            np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        p=st.sampled_from([2, 4, 8]),
+        q=st.sampled_from([32, 96, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_construct_sign_invariance(self, p, q, seed):
+        """Scaling W by a positive constant never changes the tile bits and
+        scales alpha linearly (invariant of Eqs. 2-3, 7-9)."""
+        from repro.kernels import tile_construct_pallas
+
+        w = jax.random.normal(jax.random.PRNGKey(seed), (p, q))
+        pk1, a1 = tile_construct_pallas(w, interpret=True)
+        pk2, a2 = tile_construct_pallas(3.0 * w, interpret=True)
+        np.testing.assert_array_equal(np.asarray(pk1), np.asarray(pk2))
+        np.testing.assert_allclose(
+            np.asarray(a2), 3.0 * np.asarray(a1), rtol=1e-5
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16]),
+        r=st.sampled_from([8, 16]),
+        p=st.sampled_from([2, 4]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_replicate_scale_blocks(self, m, r, p, seed):
+        """Every output block i equals alpha_i/alpha_j times block j."""
+        from repro.kernels.ref import replicate_scale_ref
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        u = jax.random.normal(k1, (m, r))
+        alpha = jnp.abs(jax.random.normal(k2, (p,))) + 0.5
+        y = np.asarray(replicate_scale_ref(u, alpha, p)).reshape(m, p, r)
+        a = np.asarray(alpha)
+        for i in range(1, p):
+            np.testing.assert_allclose(
+                y[:, i], y[:, 0] * (a[i] / a[0]), rtol=1e-5
+            )
 
 
 class TestRowsConstruction:

@@ -1,0 +1,258 @@
+"""Tiled conv inference path: kernel parity, serve routing, and the
+no-dense-weight guarantee.
+
+The acceptance oracle is ``jax.lax.conv_general_dilated`` on the fully
+reconstructed dense weight (kernels.ref.tiled_conv_ref); both the Pallas
+interpret path and the structured tile-bank fallback must match it to
+<= 1e-4 in f32 across strides / paddings / kernel sizes / channel counts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    export_tile,
+    pack_conv_tile,
+    plan_conv_tiling,
+    plan_tiling,
+    unpack_conv_tile,
+)
+from repro.kernels import resolve_conv_padding, tiled_conv_infer
+from repro.kernels.ref import tiled_conv_dense_weight, tiled_conv_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_case(c_out, c_in, kh, kw, p, alpha_mode="tile", alpha_source="W"):
+    spec = plan_tiling(
+        (c_out, c_in, kh, kw), p=p, min_size=0,
+        alpha_mode=alpha_mode, alpha_source=alpha_source,
+    )
+    assert spec is not None and spec.aligned_rows
+    w = jax.random.normal(jax.random.fold_in(KEY, c_out * kh + c_in),
+                          (c_out, c_in, kh, kw))
+    t, alpha = export_tile(w, spec)
+    packed = pack_conv_tile(t, c_out // spec.p, c_in, kh, kw)
+    return spec, packed, alpha
+
+
+# --------------------------------------------------------------------------
+# acceptance sweep: {stride 1,2} x {SAME,VALID} x {1x1, 3x3} x channels
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("stride", [(1, 1), (2, 2)])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("kernel", [(1, 1), (3, 3)])
+@pytest.mark.parametrize("c_in,c_out,p", [(32, 64, 4), (16, 24, 2), (3, 8, 2)])
+def test_tiled_conv_infer_matches_dense_reference(
+    stride, padding, kernel, c_in, c_out, p
+):
+    kh, kw = kernel
+    spec, packed, alpha = make_case(c_out, c_in, kh, kw, p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 9, c_in))
+    want = tiled_conv_ref(x, packed, alpha, spec, stride=stride, padding=padding)
+    for use_pallas in (False, True):
+        got = tiled_conv_infer(
+            x, packed, alpha, spec, stride=stride, padding=padding,
+            use_pallas=use_pallas,
+        )
+        assert got.shape == want.shape
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4,
+            err_msg=f"use_pallas={use_pallas}",
+        )
+
+
+@pytest.mark.parametrize("alpha_mode", ["layer", "tile"])
+@pytest.mark.parametrize("kernel,stride", [((5, 3), (1, 2)), ((3, 3), (2, 1))])
+def test_tiled_conv_infer_asymmetric_and_alpha_modes(alpha_mode, kernel, stride):
+    kh, kw = kernel
+    spec, packed, alpha = make_case(24, 8, kh, kw, 3, alpha_mode=alpha_mode)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 12, 11, 8))
+    want = tiled_conv_ref(x, packed, alpha, spec, stride=stride, padding="VALID")
+    for use_pallas in (False, True):
+        got = tiled_conv_infer(
+            x, packed, alpha, spec, stride=stride, padding="VALID",
+            use_pallas=use_pallas,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_explicit_padding_pairs():
+    spec, packed, alpha = make_case(16, 8, 3, 3, 2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 7, 7, 8))
+    pads = [(2, 1), (0, 2)]
+    want = tiled_conv_ref(x, packed, alpha, spec, stride=(1, 1), padding=pads)
+    for use_pallas in (False, True):
+        got = tiled_conv_infer(
+            x, packed, alpha, spec, stride=(1, 1), padding=pads,
+            use_pallas=use_pallas,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_same_lower_and_unsupported_padding_strings():
+    spec, packed, alpha = make_case(16, 8, 3, 3, 2)
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 6, 6, 8))
+    want = tiled_conv_ref(x, packed, alpha, spec, stride=(2, 2),
+                          padding="SAME_LOWER")
+    for use_pallas in (False, True):
+        got = tiled_conv_infer(x, packed, alpha, spec, stride=(2, 2),
+                               padding="SAME_LOWER", use_pallas=use_pallas)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+    with pytest.raises(ValueError, match="unsupported padding"):
+        tiled_conv_infer(x, packed, alpha, spec, padding="WRAP")
+
+
+def test_resolve_conv_padding_matches_xla():
+    """Output dims from the resolver == conv_general_dilated's for every
+    combination the sweep exercises."""
+    x = jnp.zeros((1, 13, 9, 4))
+    w = jnp.zeros((8, 4, 3, 3))
+    for stride in [(1, 1), (2, 2), (3, 1)]:
+        for padding in ["SAME", "VALID", [(1, 2), (0, 1)]]:
+            y = jax.lax.conv_general_dilated(
+                x, w, stride, padding if not isinstance(padding, str) else padding,
+                dimension_numbers=("NHWC", "OIHW", "NHWC"))
+            (oh, ow), _ = resolve_conv_padding((13, 9), (3, 3), stride, padding)
+            assert (y.shape[1], y.shape[2]) == (oh, ow), (stride, padding)
+
+
+# --------------------------------------------------------------------------
+# conv-layout packing round trip
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("c_in", [1, 3, 32, 48])
+def test_pack_conv_tile_roundtrip(c_in):
+    r, kh, kw = 6, 3, 3
+    q = r * c_in * kh * kw
+    t = jnp.where(jax.random.bernoulli(KEY, 0.5, (q,)), 1.0, -1.0)
+    packed = pack_conv_tile(t, r, c_in, kh, kw)
+    assert packed.shape == (kh * kw, r, (c_in + 31) // 32)
+    bank = unpack_conv_tile(packed, r, c_in, kh, kw)
+    np.testing.assert_array_equal(
+        np.asarray(bank), np.asarray(t.reshape(r, c_in, kh, kw))
+    )
+
+
+# --------------------------------------------------------------------------
+# Conv2D layer routing (serve mode)
+# --------------------------------------------------------------------------
+def _conv_pair(policy, **kw):
+    from repro.nn.context import SERVE, TRAIN, ModelContext
+    from repro.nn.linear import Conv2D
+
+    tctx = ModelContext(policy=policy, mode=TRAIN, compute_dtype=jnp.float32)
+    sctx = ModelContext(policy=policy, mode=SERVE, compute_dtype=jnp.float32,
+                        use_pallas=False)
+    return (Conv2D(ctx=tctx, **kw), Conv2D(ctx=sctx, **kw))
+
+
+def test_conv2d_serve_routes_through_packed_tile():
+    """SERVE Conv2D under the packed policy declares only (tile_conv, alpha)
+    — no dense weight in the shipped params — and matches TRAIN output."""
+    from repro.core.policy import tbn_policy
+    from repro.nn import module as mod
+    from repro.serve.weights import export_serving_params
+
+    pol = tbn_policy(p=4, min_size=0, alpha_source="A")
+    tc, sc = _conv_pair(pol, c_in=8, c_out=16, kernel=(3, 3), stride=(2, 2))
+    sspec = sc.specs()
+    assert set(sspec) == {"tile_conv", "alpha"}
+    assert sspec["tile_conv"].dtype == jnp.int32
+    tp = mod.init_params({"c": tc.specs()}, KEY)
+    sp = export_serving_params({"c": tc.specs()}, {"c": sspec}, tp, pol)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 8, 8))
+    np.testing.assert_allclose(
+        np.asarray(tc(tp["c"], x)), np.asarray(sc(sp["c"], x)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_conv2d_serve_never_materializes_dense_weight():
+    """Jaxpr audit: no intermediate on the serve path has the dense weight's
+    element count — the largest weight-derived tensor is the p-fold smaller
+    tile bank."""
+    from repro.core.policy import tbn_policy
+    from repro.nn import module as mod
+    from repro.serve.weights import export_serving_params
+
+    pol = tbn_policy(p=4, min_size=0, alpha_source="W")
+    kw = dict(c_in=32, c_out=64, kernel=(3, 3))
+    tc, sc = _conv_pair(pol, **kw)
+    tp = mod.init_params({"c": tc.specs()}, KEY)
+    sp = export_serving_params({"c": tc.specs()}, {"c": sc.specs()}, tp, pol)
+    x = jnp.zeros((1, 8, 8, 32))
+    n_dense = 64 * 32 * 3 * 3
+    jaxpr = jax.make_jaxpr(lambda p, x: sc(p, x))(sp["c"], x)
+    for eqn in jaxpr.jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                size = int(np.prod(v.aval.shape)) if v.aval.shape else 1
+                # activations can be big; catch weight-shaped tensors only
+                assert v.aval.shape != (64, 32, 3, 3) and size != n_dense, (
+                    f"dense-weight-sized intermediate {v.aval.shape} in "
+                    f"{eqn.primitive}"
+                )
+
+
+def test_conv2d_serve_bwnn_parity():
+    from repro.core.policy import bwnn_policy
+    from repro.nn import module as mod
+    from repro.serve.weights import export_serving_params
+
+    pol = bwnn_policy()
+    tc, sc = _conv_pair(pol, c_in=4, c_out=8, kernel=(3, 3), use_bias=True)
+    sspec = sc.specs()
+    assert "wbits" in sspec and "w" not in sspec
+    tp = mod.init_params({"c": tc.specs()}, KEY)
+    sp = export_serving_params({"c": tc.specs()}, {"c": sspec}, tp, pol)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 6, 6, 4))
+    np.testing.assert_allclose(
+        np.asarray(tc(tp["c"], x)), np.asarray(sc(sp["c"], x)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_conv2d_serve_unaligned_falls_back_to_flat_tile():
+    """p | N but p does not divide c_out: serve ships the flat tile and the
+    (documented) dense-reconstruction fallback still matches TRAIN."""
+    from repro.core.policy import tbn_policy
+    from repro.nn import module as mod
+    from repro.serve.weights import export_serving_params
+
+    pol = tbn_policy(p=3, min_size=0, alpha_source="W", require_aligned=False)
+    tc, sc = _conv_pair(pol, c_in=6, c_out=8, kernel=(3, 3))
+    assert tc.spec is not None and not tc.spec.aligned_rows
+    sspec = sc.specs()
+    assert "tile" in sspec and "tile_conv" not in sspec
+    tp = mod.init_params({"c": tc.specs()}, KEY)
+    sp = export_serving_params({"c": tc.specs()}, {"c": sspec}, tp, pol)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 5, 5, 6))
+    np.testing.assert_allclose(
+        np.asarray(tc(tp["c"], x)), np.asarray(sc(sp["c"], x)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_conv_plan_arithmetic():
+    spec = plan_tiling((64, 32, 3, 3), p=4, min_size=0)
+    plan = plan_conv_tiling(spec)
+    assert plan.r == 16 and plan.kk == 32 * 9 and plan.positions == 9
+    assert plan.packed_shape() == (9, 16, 1)
+    assert plan.r * plan.kk == spec.q
+    # dense reconstruction helper agrees with the replication structure
+    t = jnp.where(jax.random.bernoulli(KEY, 0.5, (spec.q,)), 1.0, -1.0)
+    packed = pack_conv_tile(t, plan.r, plan.c_in, 3, 3)
+    alpha = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (4,))) + 0.1
+    w = np.asarray(tiled_conv_dense_weight(packed, alpha, spec))
+    for a in range(1, 4):
+        np.testing.assert_allclose(
+            w[a * 16:(a + 1) * 16] / float(alpha[a]),
+            w[:16] / float(alpha[0]), rtol=1e-6,
+        )
