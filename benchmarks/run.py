@@ -3,14 +3,20 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1_cnn]
 
 Prints ``name,seconds,rows`` CSV lines plus each benchmark's table;
-row-level JSON lands under results/bench/.
+row-level JSON lands under results/bench/. A per-bench status record
+(``run_summary.json``) is written after EVERY benchmark — including the
+ones that fail — and the process exits nonzero when any benchmark failed,
+so CI sees both the signal and the partial results.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import time
 import traceback
+
+from benchmarks.common import RESULTS
 
 BENCHES = [
     "table1_cnn",
@@ -33,23 +39,33 @@ def main() -> None:
     args = ap.parse_args()
 
     names = [args.only] if args.only else BENCHES
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    summary_path = RESULTS / "run_summary.json"
     summary = []
     failures = 0
     for name in names:
-        mod = importlib.import_module(f"benchmarks.{name}")
         print(f"\n=== {name} ===", flush=True)
         t0 = time.time()
+        rec = dict(name=name, quick=args.quick)
         try:
+            # import inside the try: a bench module that fails at import
+            # is a recorded failure, not an orchestrator crash
+            mod = importlib.import_module(f"benchmarks.{name}")
             rows = mod.run(quick=args.quick)
-            dt = time.time() - t0
-            summary.append((name, dt, len(rows)))
-        except Exception:
+            rec.update(status="ok", rows=len(rows) if rows is not None else 0)
+        except Exception as e:
             traceback.print_exc()
             failures += 1
-            summary.append((name, time.time() - t0, -1))
+            rec.update(status="error", error=f"{type(e).__name__}: {e}")
+        rec["seconds"] = round(time.time() - t0, 1)
+        summary.append(rec)
+        # flush after every bench so a later crash/kill loses nothing
+        summary_path.write_text(json.dumps(summary, indent=1))
     print("\nname,seconds,rows")
-    for name, dt, n in summary:
-        print(f"{name},{dt:.1f},{n}")
+    for rec in summary:
+        print(f"{rec['name']},{rec['seconds']:.1f},{rec.get('rows', -1)}")
+    if failures:
+        print(f"{failures} benchmark(s) FAILED — see {summary_path}")
     raise SystemExit(1 if failures else 0)
 
 

@@ -34,6 +34,13 @@ DEFAULT_RULES: Dict[str, AxisVal] = {
     "conv_spatial": None,
     "layers": None,
     "stage": None,
+    # unique-row axis of a row-packed serve tile: the r = n_out/p rows of
+    # one tile shard over the model axis (r/TP rows per device), so HBM per
+    # device holds q/TP tile bits. The kernels run per-shard under
+    # shard_map (kernels/ops.py); alphas stay replicated — each shard's
+    # rows appear in ALL p replica blocks of the output, so every shard
+    # needs every alpha, and p floats are not worth slicing (DESIGN.md §5).
+    "tile_rows": "model",
     # activation axes
     "act_batch": ("pod", "data"),
     "act_seq": None,
@@ -97,6 +104,62 @@ def active_mesh() -> Optional[Mesh]:
     return _ACTIVE.mesh
 
 
+def _rule_axes(rule_name: str) -> Tuple[Optional[Mesh], Tuple[str, ...]]:
+    """Active mesh + the rule's axes (normalized, filtered to the mesh)."""
+    mesh, rules = _ACTIVE.mesh, _ACTIVE.rules
+    if mesh is None or rules is None:
+        return None, ()
+    ax = rules.get(rule_name)
+    if ax is None:
+        return mesh, ()
+    if isinstance(ax, str):
+        ax = (ax,)
+    return mesh, tuple(a for a in ax if a in mesh.axis_names)
+
+
+def _dividing_prefix(mesh: Mesh, axes: Tuple[str, ...], dim: int):
+    """Longest prefix of ``axes`` whose extent divides ``dim`` — the same
+    degradation rule ``_divisible_spec`` applies to param placement, so
+    trace-time decisions in the serve kernels can never disagree with
+    where the params were actually placed."""
+    for k in range(len(axes), 0, -1):
+        cand = axes[:k]
+        if dim % _mesh_extent(mesh, cand) == 0:
+            return cand
+    return ()
+
+
+def tile_sharding(n_rows: int) -> Optional[Tuple[Mesh, Tuple[str, ...], int]]:
+    """(mesh, axes, extent) to shard a tile's ``n_rows`` unique rows, or None.
+
+    None means tile-row sharding is off: no active rules, the
+    ``tile_rows`` rule maps to no mesh axis, or the longest
+    dim-dividing prefix of its axes has extent 1 (including the
+    TP-does-not-divide-r fallback). The serve kernels consult this at
+    trace time to choose between the shard_map tensor-parallel path and
+    the single-device path (kernels/ops.py)."""
+    mesh, axes = _rule_axes("tile_rows")
+    if mesh is None or not axes:
+        return None
+    chosen = _dividing_prefix(mesh, axes, n_rows)
+    extent = _mesh_extent(mesh, chosen)
+    if extent <= 1:
+        return None
+    return mesh, chosen, extent
+
+
+def batch_shard_axes(exclude: Sequence[str], dim: int) -> Tuple[str, ...]:
+    """Axes to shard a batch-like dim of size ``dim`` inside the serve
+    shard_map wrappers: the longest dividing prefix of the ``act_batch``
+    rule minus ``exclude`` — keeps activations data-parallel inside the
+    tensor-parallel region instead of forcing replication."""
+    mesh, axes = _rule_axes("act_batch")
+    if mesh is None:
+        return ()
+    axes = tuple(a for a in axes if a not in exclude)
+    return _dividing_prefix(mesh, axes, dim)
+
+
 def spec_from_logical(logical: Sequence[Optional[str]]) -> P:
     rules = _ACTIVE.rules or {}
     return P(*(rules.get(name) if name else None for name in logical))
@@ -132,15 +195,15 @@ def _divisible_spec(mesh: Mesh, shape, spec_axes) -> P:
         parts = tuple(a for a in parts if a not in used)
         # longest prefix of the axis tuple that evenly divides the dim —
         # a (pod, data, model) batch rule degrades to (pod, data) for a
-        # 32-sample prefill instead of replicating outright
-        chosen: AxisVal = None
-        for k in range(len(parts), 0, -1):
-            cand = parts[:k]
-            if dim % _mesh_extent(mesh, cand) == 0:
-                chosen = cand if len(cand) > 1 else cand[0]
-                used.update(cand)
-                break
-        out.append(chosen)
+        # 32-sample prefill instead of replicating outright. Shared with
+        # the serve kernels' trace-time decisions (tile_sharding /
+        # batch_shard_axes) so placement and shard_map can never disagree.
+        cand = _dividing_prefix(mesh, parts, dim)
+        if not cand:
+            out.append(None)
+            continue
+        used.update(cand)
+        out.append(cand if len(cand) > 1 else cand[0])
     return P(*out)
 
 

@@ -4,15 +4,26 @@ Public entry points:
   * ``tiled_dense_infer``  — serving-time FC layer from (packed tile, alpha)
     without materializing the dense weight. Pallas on TPU; pure-JAX
     structured math elsewhere (identical FLOPs — used by the SPMD dry-run).
+    Under an active mesh whose rules map ``tile_rows`` to a >1 axis
+    (distributed/sharding.py) the row-packed tile is tensor-parallel: a
+    shard_map runs the same kernel per shard on r/TP unique rows and the
+    output stays sharded on the tile-row axis (DESIGN.md §5).
   * ``tiled_conv_infer``   — serving-time Conv2D from a conv-layout packed
     tile: fused im2col + tile-reuse matmul on TPU (the dense OIHW weight
     never exists); elsewhere the structured fallback runs the p-fold
-    smaller tile bank through ``conv_general_dilated``.
+    smaller tile bank through ``conv_general_dilated``. Same shard_map
+    tensor-parallel path over the tile's unique filters.
   * ``tile_construct``     — (W[,A]) -> (packed tile, alpha) fused on TPU.
   * ``tbn_dense_train``    — training forward y = x @ B_hat^T that composes
     the two kernels (B_hat never hits HBM) with a custom VJP whose backward
     is the *paper-faithful* gradient (vjp of the pure-JAX reference), so the
     fused path is a drop-in for the reference during training.
+
+Tile layouts accepted by ``tiled_dense_infer``:
+  * flat  (ceil(q/32),) int32 — legacy/fused-train form; requires 32 | n_in
+    on the Pallas path and never engages tensor parallelism.
+  * rows  (r, ceil(n_in/32)) int32 — the shipped serve form: one packed
+    word-padded row per unique weight row, shardable on its leading axis.
 """
 from __future__ import annotations
 
@@ -21,7 +32,9 @@ from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.packing import pack_bits, unpack_bits, unpack_conv_tile
 from repro.core.tiling import (
     TileSpec,
@@ -31,6 +44,7 @@ from repro.core.tiling import (
     tiled_matmul_reference,
     tiled_weight,
 )
+from repro.distributed.sharding import batch_shard_axes, tile_sharding
 from repro.kernels.tile_construct import tile_construct_pallas
 from repro.kernels.tiled_conv import tiled_conv_unique
 from repro.kernels.tiled_matmul import tiled_matmul_unique
@@ -49,6 +63,52 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
 # --------------------------------------------------------------------------
 # Inference matmul
 # --------------------------------------------------------------------------
+def _dense_unique_local(
+    xm: jax.Array,
+    packed_rows: jax.Array,
+    *,
+    n_in: int,
+    use_pallas: bool,
+    block_m: int,
+    block_r: int,
+    block_k: int,
+) -> jax.Array:
+    """u = x @ T^T against a row-packed tile slice.
+
+    xm (m, n_in); packed_rows (r_loc, words) int32 with words*32 >= n_in
+    (rows pad to whole words: pad bits unpack to -1 but only ever multiply
+    zero-padded activation columns). Runs unchanged per shard under the
+    tensor-parallel wrapper — r_loc is then r/TP.
+    """
+    m = xm.shape[0]
+    r_loc, words = packed_rows.shape
+    if not use_pallas:
+        tm = unpack_bits(packed_rows, n_in, dtype=xm.dtype)  # (r_loc, n_in)
+        return jnp.einsum("mk,rk->mr", xm, tm)
+    xp = jnp.pad(xm, ((0, 0), (0, words * 32 - n_in)))
+    xp = _pad_to(_pad_to(xp, 0, block_m), 1, block_k)
+    tm_p = _pad_to(_pad_to(packed_rows, 0, block_r), 1, block_k // 32)
+    return tiled_matmul_unique(
+        xp,
+        tm_p,
+        r=tm_p.shape[0],
+        block_m=block_m,
+        block_r=block_r,
+        block_k=block_k,
+    )[:m, :r_loc]
+
+
+def _replicate_dense_out(u: jax.Array, alpha: jax.Array, spec: TileSpec):
+    """u (m, r_loc) -> y (m, p, r_loc): the tile-replica broadcast-scale."""
+    m, r_loc = u.shape
+    alpha = alpha.astype(u.dtype)
+    if spec.alpha_mode == "layer":
+        return jnp.broadcast_to(u[:, None, :], (m, spec.p, r_loc)) \
+            * alpha.reshape(1)
+    return jnp.broadcast_to(u[:, None, :] * alpha[None, :, None],
+                            (m, spec.p, r_loc))
+
+
 def tiled_dense_infer(
     x: jax.Array,
     packed: jax.Array,
@@ -62,8 +122,14 @@ def tiled_dense_infer(
 ) -> jax.Array:
     """y = x @ W_hat^T from the shipped representation.
 
-    x: (..., n_in); packed: int32 (ceil(q/32),); alpha: (n_alpha,).
+    x: (..., n_in); packed: int32, flat (ceil(q/32),) or row-packed
+    (r, ceil(n_in/32)) — see module docstring; alpha: (n_alpha,).
     Weight logical shape spec.shape == (n_out, n_in), aligned tiling.
+
+    Row-packed tiles are tensor-parallel under an active mesh: the tile
+    rows shard over the ``tile_rows`` axis, each shard runs the same
+    kernel on r/TP rows, and the (m, p, r) output stays sharded on its
+    unique-row axis until the caller's reshape (DESIGN.md §5).
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
@@ -73,30 +139,32 @@ def tiled_dense_infer(
     xm = x.reshape(-1, n_in)
     m = xm.shape[0]
 
-    if not use_pallas:
-        t = unpack_bits(packed, spec.q, dtype=x.dtype)
-        y = tiled_matmul_reference(xm, t, alpha, spec)
-        return y.reshape(*lead, n_out).astype(x.dtype)
+    row_form = packed.ndim == 2
+    if not row_form:
+        if not use_pallas:
+            t = unpack_bits(packed, spec.q, dtype=x.dtype)
+            y = tiled_matmul_reference(xm, t, alpha, spec)
+            return y.reshape(*lead, n_out).astype(x.dtype)
+        packed = packed.reshape(r, n_in // 32)  # flat form: needs 32 | n_in
 
-    # Pallas path: row-pack the tile as (r, n_in/32) and pad to blocks.
-    tm_packed = packed.reshape(r, n_in // 32)
-    xm_p = _pad_to(_pad_to(xm, 0, block_m), 1, block_k)
-    tm_p = _pad_to(_pad_to(tm_packed, 0, block_r), 1, block_k // 32)
-    u = tiled_matmul_unique(
-        xm_p,
-        tm_p,
-        r=tm_p.shape[0],
-        block_m=block_m,
-        block_r=block_r,
-        block_k=block_k,
-    )[:m, :r]
-    if spec.alpha_mode == "layer":
-        y = jnp.broadcast_to(u[:, None, :], (m, spec.p, r)) * alpha.reshape(1)
+    local = functools.partial(
+        _dense_unique_local, n_in=n_in, use_pallas=use_pallas,
+        block_m=block_m, block_r=block_r, block_k=block_k,
+    )
+    tp = tile_sharding(r) if row_form else None
+    if tp is not None:
+        mesh, ax, _ = tp
+        m_ax = batch_shard_axes(ax, m) or None
+        y3 = shard_map(
+            lambda xl, pl_, al: _replicate_dense_out(local(xl, pl_), al, spec),
+            mesh=mesh,
+            in_specs=(P(m_ax, None), P(ax, None), P()),
+            out_specs=P(m_ax, None, ax),
+            check_vma=False,
+        )(xm, packed, alpha)
     else:
-        y = jnp.broadcast_to(
-            u[:, None, :] * alpha[None, :, None], (m, spec.p, r)
-        )
-    return y.reshape(*lead, n_out).astype(x.dtype)
+        y3 = _replicate_dense_out(local(xm, packed), alpha, spec)
+    return y3.reshape(*lead, n_out).astype(x.dtype)
 
 
 # --------------------------------------------------------------------------
@@ -134,17 +202,19 @@ def resolve_conv_padding(
 
 
 def _replicate_conv_out(u, alpha, spec: TileSpec):
-    """u (N, OH, OW, r) -> y (N, OH, OW, p*r) via the tile-replica broadcast."""
-    n, oh, ow, r = u.shape
+    """u (N, OH, OW, r_loc) -> y (N, OH, OW, p, r_loc), replica-major.
+
+    Kept unflattened so the tensor-parallel wrapper can declare the
+    unique-filter axis sharded; callers reshape to (N, OH, OW, p*r)."""
+    n, oh, ow, r_loc = u.shape
+    alpha = alpha.astype(u.dtype)
     if spec.alpha_mode == "layer":
-        y = jnp.broadcast_to(u[..., None, :], (n, oh, ow, spec.p, r)) \
+        return jnp.broadcast_to(u[..., None, :], (n, oh, ow, spec.p, r_loc)) \
             * alpha.reshape(1)
-    else:
-        y = jnp.broadcast_to(
-            u[..., None, :] * alpha[None, None, None, :, None],
-            (n, oh, ow, spec.p, r),
-        )
-    return y.reshape(n, oh, ow, spec.p * r)
+    return jnp.broadcast_to(
+        u[..., None, :] * alpha[None, None, None, :, None],
+        (n, oh, ow, spec.p, r_loc),
+    )
 
 
 def tiled_conv_infer(
@@ -179,45 +249,64 @@ def tiled_conv_infer(
     sh, sw = stride
     n, h, w, c = x.shape
     assert c == plan.c_in, (c, plan.c_in)
+    r = plan.r
     (oh, ow), pads = resolve_conv_padding((h, w), (kh, kw), stride, padding)
 
-    if not use_pallas:
-        bank = unpack_conv_tile(packed, plan.r, c, kh, kw, dtype=x.dtype)
-        u = jax.lax.conv_general_dilated(
-            x, bank, window_strides=stride, padding=pads,
-            dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    if use_pallas:
+        # Pallas path: pad spatially so every kernel read is in bounds
+        # (Hp >= (OH-1)*sh + kh, Wp >= kw-1 + OW*sw), channels to whole
+        # int32 lanes (zero activations x any tile bit contribute nothing);
+        # the filter axis pads to block_r multiples per shard below.
+        hp = max(h + pads[0][0] + pads[0][1], (oh - 1) * sh + kh)
+        wp = max(w + pads[1][0] + pads[1][1], (kw - 1) + ow * sw)
+        cpad = (-c) % 32
+        xin = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pads[0][0], hp - h - pads[0][0]),
+                (pads[1][0], wp - w - pads[1][0]),
+                (0, cpad),
+            ),
         )
-        return _replicate_conv_out(u, alpha.astype(u.dtype), spec).astype(x.dtype)
+    else:
+        xin = x
 
-    # Pallas path: pad spatially so every kernel read is in bounds
-    # (Hp >= (OH-1)*sh + kh, Wp >= kw-1 + OW*sw), channels to whole int32
-    # lanes (zero activations x any tile bit contribute nothing), and the
-    # filter axis to block_r multiples (junk rows sliced off).
-    hp = max(h + pads[0][0] + pads[0][1], (oh - 1) * sh + kh)
-    wp = max(w + pads[1][0] + pads[1][1], (kw - 1) + ow * sw)
-    cpad = (-c) % 32
-    xp = jnp.pad(
-        x,
-        (
-            (0, 0),
-            (pads[0][0], hp - h - pads[0][0]),
-            (pads[1][0], wp - w - pads[1][0]),
-            (0, cpad),
-        ),
-    )
-    r = plan.r
-    br = min(block_r, r)
-    rpad = (-r) % br
-    packed_p = jnp.pad(packed, ((0, 0), (0, rpad), (0, 0)))
-    u = tiled_conv_unique(
-        xp,
-        packed_p,
-        kernel=(kh, kw),
-        stride=stride,
-        out_hw=(oh, ow),
-        block_r=br,
-    )[..., :r]
-    return _replicate_conv_out(u, alpha, spec).astype(x.dtype)
+    def local_u(x_l, packed_l):
+        """u = conv(x, T_loc) against a conv-layout tile slice of r_loc
+        unique filters (r_loc = r/TP under the tensor-parallel wrapper)."""
+        r_loc = packed_l.shape[1]
+        if not use_pallas:
+            bank = unpack_conv_tile(packed_l, r_loc, c, kh, kw, dtype=x.dtype)
+            return jax.lax.conv_general_dilated(
+                x_l, bank, window_strides=stride, padding=pads,
+                dimension_numbers=("NHWC", "OIHW", "NHWC"),
+            )
+        br = min(block_r, r_loc)
+        packed_p = jnp.pad(packed_l, ((0, 0), (0, (-r_loc) % br), (0, 0)))
+        return tiled_conv_unique(
+            x_l,
+            packed_p,
+            kernel=(kh, kw),
+            stride=stride,
+            out_hw=(oh, ow),
+            block_r=br,
+        )[..., :r_loc]
+
+    tp = tile_sharding(r)
+    if tp is not None:
+        mesh, ax, _ = tp
+        n_ax = batch_shard_axes(ax, n) or None
+        y5 = shard_map(
+            lambda xl, pl_, al: _replicate_conv_out(local_u(xl, pl_), al, spec),
+            mesh=mesh,
+            in_specs=(P(n_ax, None, None, None), P(None, ax, None), P()),
+            out_specs=P(n_ax, None, None, None, ax),
+            check_vma=False,
+        )(xin, packed, alpha)
+    else:
+        y5 = _replicate_conv_out(local_u(xin, packed), alpha, spec)
+    return y5.reshape(n, oh, ow, spec.p * r).astype(x.dtype)
 
 
 # --------------------------------------------------------------------------

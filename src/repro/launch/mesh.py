@@ -20,3 +20,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 2, model: int = 4):
     """Small mesh over forced-host devices for multi-device tests."""
     return make_auto_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_arg(spec: str):
+    """CLI '--mesh DPxTP' (e.g. '1x4') -> (data, model) Mesh; None for 1x1.
+
+    Shared by the train and serve launchers so both validate the device
+    count the same way instead of surfacing a raw jax error."""
+    try:
+        dp, tp = (int(v) for v in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DPxTP (e.g. 1x4), got {spec!r}")
+    if dp < 1 or tp < 1:
+        raise SystemExit(f"--mesh dims must be >= 1, got {spec!r}")
+    if dp * tp == 1:
+        return None
+    n_dev = len(jax.devices())
+    if dp * tp > n_dev:
+        raise SystemExit(
+            f"--mesh {spec} needs {dp * tp} devices, have {n_dev} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "for local testing)"
+        )
+    return make_auto_mesh((dp, tp), ("data", "model"))

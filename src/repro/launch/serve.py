@@ -3,10 +3,21 @@
     python -m repro.launch.serve --arch granite-8b --reduced \\
         --requests 8 --max-tokens 16
 
+Tensor-parallel serving shards each layer's packed tile rows over the
+model mesh axis (DESIGN.md §5):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    python -m repro.launch.serve --arch granite-8b --reduced --mesh 1x4
+
+(`--mesh DPxTP`; on a real TPU slice the devices are the chips and the
+XLA_FLAGS trick is unnecessary — it only fakes a multi-device host for
+local testing.)
+
 Flow: init TRAIN masters (or restore a checkpoint), export the SERVE
 representation (packed tile bits + alpha scalars — repro.serve.weights),
-stand up the slot-based BatchedEngine and drain a batch of synthetic
-prompts. Prints the compression of the shipped weights vs the masters and
+stand up the slot-based BatchedEngine (mesh-placed when --mesh is given)
+and drain a batch of synthetic prompts. Prints the compression of the
+shipped weights vs the masters, the per-device resident tile bytes, and
 the engine throughput.
 """
 from __future__ import annotations
@@ -20,11 +31,17 @@ import numpy as np
 
 from repro.configs import build_model, get_config
 from repro.ft.checkpoint import latest_step, restore_into
+from repro.launch.mesh import parse_mesh_arg
 from repro.nn import module as mod
 from repro.nn.context import SERVE, TRAIN, ModelContext
 from repro.serve.engine import BatchedEngine, ServeConfig
 from repro.serve.sampling import SamplingParams
-from repro.serve.weights import export_serving_params, serving_bytes
+from repro.serve.weights import (
+    export_serving_params,
+    per_device_tile_bytes,
+    serving_bytes,
+    tile_serving_bytes,
+)
 
 
 def main(argv=None):
@@ -39,7 +56,10 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DPxTP serving mesh, e.g. 1x4 (default single device)")
     args = ap.parse_args(argv)
+    mesh = parse_mesh_arg(args.mesh)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -70,7 +90,15 @@ def main(argv=None):
         ServeConfig(n_slots=args.slots, max_len=args.max_len,
                     prefill_buckets=(16, 64), temperature=args.temperature,
                     seed=args.seed),
+        mesh=mesh,
     )
+    if mesh is not None:
+        total_tile = tile_serving_bytes(sp)
+        per_dev = per_device_tile_bytes(eng.params)
+        worst = max(per_dev.values()) if per_dev else 0
+        print(f"mesh={dict(mesh.shape)}: tile bits {total_tile/1e6:.3f}MB total, "
+              f"{worst/1e6:.3f}MB max/device "
+              f"({total_tile/max(worst, 1):.1f}x sharding)")
     rng = np.random.default_rng(args.seed)
     reqs = [
         eng.submit(rng.integers(0, cfg.vocab, size=rng.integers(3, 12)),

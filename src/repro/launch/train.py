@@ -80,10 +80,9 @@ def main(argv=None):
 
     mesh = None
     if args.mesh:
-        d, m = (int(v) for v in args.mesh.split("x"))
-        from repro.compat import make_auto_mesh
+        from repro.launch.mesh import parse_mesh_arg
 
-        mesh = make_auto_mesh((d, m), ("data", "model"))
+        mesh = parse_mesh_arg(args.mesh)
 
     def make_state():
         params = mod.init_params(model.specs(), jax.random.PRNGKey(args.seed))

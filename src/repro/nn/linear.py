@@ -91,7 +91,21 @@ class Dense:
 
     def _serve_specs(self) -> mod.SpecTree:
         out: dict = {}
-        if self.spec is not None:
+        if self.spec is not None and self.spec.aligned_rows:
+            # Shipped form: one packed word-padded row per unique weight
+            # row, (r, ceil(n_in/32)). The leading axis is the tensor-
+            # parallel shard axis — "tile_rows" maps to the model mesh axis
+            # so each device holds r/TP rows (DESIGN.md §5).
+            out["tile"] = mod.ParamSpec(
+                (self.spec.rows_per_tile, packed_len(self.n_in)),
+                jnp.int32, ("tile_rows", None), mod.zeros_init(),
+            )
+            out["alpha"] = mod.ParamSpec(
+                (self.spec.n_alpha,), jnp.float32, (None,), mod.ones_init()
+            )
+        elif self.spec is not None:
+            # Unaligned tiling (p | N but not p | n_out): flat q-bit tile,
+            # dense reconstruction at apply time — mirrors Conv2D.
             out["tile"] = mod.ParamSpec(
                 (packed_len(self.spec.q),), jnp.int32, (None,), mod.zeros_init()
             )
@@ -161,7 +175,7 @@ class Dense:
     def _serve_apply(self, params: dict, x: jax.Array) -> jax.Array:
         cd = self.ctx.compute_dtype
         x = x.astype(cd)
-        if self.spec is not None:
+        if self.spec is not None and self.spec.aligned_rows:
             y = tiled_dense_infer(
                 x,
                 params["tile"],
@@ -169,6 +183,10 @@ class Dense:
                 self.spec,
                 use_pallas=self.ctx.use_pallas,
             )
+        elif self.spec is not None:  # unaligned: documented dense fallback
+            t = unpack_bits(params["tile"], self.spec.q, dtype=cd)
+            w = reconstruct_from_tile(t, params["alpha"], self.spec, dtype=cd)
+            y = jnp.einsum("...k,ok->...o", x, w.reshape(self.n_out, self.n_in))
         elif "wbits" in params:
             w = unpack_bits(params["wbits"], self.n_in, dtype=cd)
             w = w * params["alpha"].astype(cd)
@@ -243,9 +261,11 @@ class Conv2D:
     def _serve_specs(self) -> mod.SpecTree:
         out: dict = {}
         if self.plan is not None:
+            # (kh*kw, r, words): the unique-filter axis is the tensor-
+            # parallel shard axis, same contract as the dense row tile.
             out["tile_conv"] = mod.ParamSpec(
-                self.plan.packed_shape(), jnp.int32, (None,) * 3,
-                mod.zeros_init(),
+                self.plan.packed_shape(), jnp.int32,
+                (None, "tile_rows", None), mod.zeros_init(),
             )
             out["alpha"] = mod.ParamSpec(
                 (self.spec.n_alpha,), jnp.float32, (None,), mod.ones_init()

@@ -61,7 +61,23 @@ class ExpertBank:
         pd = self.ctx.param_dtype
         e = self.n_experts
         if self.ctx.mode == SERVE:
-            if self.spec is not None:
+            if self.spec is not None and self.spec.aligned_rows:
+                # Row-packed per-expert tiles (E, r, words). "experts" wins
+                # the model axis (expert parallelism, first-claim rule in
+                # distributed/sharding.py); "tile_rows" then shards only on
+                # meshes where the expert axis is absent or dropped.
+                return {
+                    "tile": mod.ParamSpec(
+                        (e, self.spec.rows_per_tile, packed_len(self.n_in)),
+                        jnp.int32, ("experts", "tile_rows", None),
+                        mod.zeros_init(),
+                    ),
+                    "alpha": mod.ParamSpec(
+                        (e, self.spec.n_alpha), jnp.float32,
+                        ("experts", None), mod.ones_init(),
+                    ),
+                }
+            if self.spec is not None:  # unaligned: flat per-expert tiles
                 return {
                     "tile": mod.ParamSpec(
                         (e, packed_len(self.spec.q)), jnp.int32,
@@ -96,7 +112,12 @@ class ExpertBank:
         cd = self.ctx.compute_dtype
         if self.ctx.mode == SERVE:
             if self.spec is not None:
-                t = unpack_bits(params["tile"], self.spec.q, dtype=cd)  # (E, q)
+                tile = params["tile"]
+                if tile.ndim == 3:  # row-packed (E, r, words)
+                    t = unpack_bits(tile, self.n_in, dtype=cd)  # (E, r, n_in)
+                    t = t.reshape(self.n_experts, self.spec.q)
+                else:               # flat (E, ceil(q/32))
+                    t = unpack_bits(tile, self.spec.q, dtype=cd)  # (E, q)
                 def rebuild(te, ae):
                     from repro.core.tiling import reconstruct_from_tile
                     return reconstruct_from_tile(te, ae, self.spec, dtype=cd)

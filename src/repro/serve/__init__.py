@@ -1,6 +1,11 @@
 from repro.serve.engine import BatchedEngine, Request, ServeConfig
 from repro.serve.sampling import sample_logits
-from repro.serve.weights import export_serving_params, serving_bytes
+from repro.serve.weights import (
+    export_serving_params,
+    per_device_tile_bytes,
+    serving_bytes,
+    tile_serving_bytes,
+)
 
 __all__ = [
     "BatchedEngine",
@@ -8,5 +13,7 @@ __all__ = [
     "ServeConfig",
     "sample_logits",
     "export_serving_params",
+    "per_device_tile_bytes",
     "serving_bytes",
+    "tile_serving_bytes",
 ]

@@ -14,12 +14,18 @@ Design (vLLM-style, adapted to fixed-shape XLA):
 * Weights are SERVE-form (packed tiles + alphas, repro.serve.weights); the
   model's serve path applies them through the tile-reuse math, so HBM holds
   q bits per tiled layer, not N.
+* Passing ``mesh=`` places the weights with the serving sharding rules
+  (packed tile rows over the model axis — 1/TP tile bytes per device) and
+  traces prefill/decode under those rules, so the tile-reuse matmuls run
+  tensor-parallel through the shard_map wrappers in kernels/ops.py
+  (DESIGN.md §5). Without a mesh nothing touches device placement APIs.
 
 The engine is exact on CPU with reduced configs (integration tests) and is
 the same code path the dry-run compiles for the production mesh.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import queue
@@ -29,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import axis_rules, param_shardings
 from repro.serve.sampling import SamplingParams, sample_logits
 
 
@@ -40,6 +47,7 @@ class Request:
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None  # "eos" | "length" once done
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,10 +61,25 @@ class ServeConfig:
 
 
 class BatchedEngine:
-    def __init__(self, model, params, cfg: ServeConfig):
+    def __init__(self, model, params, cfg: ServeConfig, *, mesh=None):
         self.model = model
-        self.params = params
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # Place the serve weights with the serving rules: packed tile
+            # rows ("tile_rows") shard over the model axis, ragged or
+            # non-dividing dims drop to replicated (distributed/sharding).
+            from repro.nn import module as mod
+
+            logical = mod.logical_axes(model.specs())
+            abstract = jax.tree.map(
+                lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), params
+            )
+            shardings = param_shardings(
+                mesh, logical, abstract_tree=abstract
+            )
+            params = jax.device_put(params, shardings)
+        self.params = params
         self._queue: "queue.Queue[Request]" = queue.Queue()
         self._live: Dict[int, Request] = {}      # slot -> request
         self._free = list(range(cfg.n_slots))
@@ -75,13 +98,24 @@ class BatchedEngine:
         }
         self.steps = 0
 
+    def _mesh_ctx(self):
+        """Sharding-rule context for traces/executions; no-op without mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return axis_rules(self.mesh)
+
     # ------------------------------------------------------------------
     def submit(
         self, prompt, params: Optional[SamplingParams] = None
     ) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        # Validate against the bucket ladder HERE, not at admission: a
+        # too-long prompt then fails fast without consuming a slot or
+        # wedging the tick loop mid-admission.
+        self._bucket(len(prompt))
         req = Request(
             rid=next(self._rid),
-            prompt=np.asarray(prompt, np.int32),
+            prompt=prompt,
             params=params or SamplingParams(),
         )
         self._queue.put(req)
@@ -95,6 +129,20 @@ class BatchedEngine:
             f"prompt len {n} exceeds largest bucket {self.cfg.prefill_buckets[-1]}"
         )
 
+    def _maybe_retire(self, slot: int, req: Request, tok: int) -> bool:
+        """Retire a just-extended request. EOS is checked before the length
+        cap so a stop token arriving exactly at max_tokens reports "eos"."""
+        if tok == req.params.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.output) >= req.params.max_tokens:
+            req.finish_reason = "length"
+        else:
+            return False
+        req.done = True
+        self._live.pop(slot, None)
+        self._free.append(slot)
+        return True
+
     def _admit(self, slot: int, req: Request):
         n = len(req.prompt)
         b = self._bucket(n)
@@ -105,10 +153,6 @@ class BatchedEngine:
         toks[0, b - n:] = req.prompt
         logits, caches, _ = self._prefill[b](self.params, {"tokens": toks})
         # splice the prompt caches into this slot's rows
-        def splice(dst, src):
-            return dst.at[_batch_index(dst, src, slot)].set(
-                _expand_to(dst, src, slot)
-            )
         self.caches = jax.tree.map(
             lambda dst, src: _splice_cache(dst, src, slot), self.caches, caches
         )
@@ -119,33 +163,35 @@ class BatchedEngine:
             temperature=req.params.temperature or self.cfg.temperature,
             top_k=req.params.top_k or self.cfg.top_k,
         )
-        req.output.append(int(first[0]))
+        tok = int(first[0])
+        req.output.append(tok)
         self.tokens = self.tokens.at[slot, 0].set(first[0])
         self._live[slot] = req
+        # the prefill token itself may already satisfy EOS or max_tokens=1
+        self._maybe_retire(slot, req, tok)
 
     # ------------------------------------------------------------------
     def step(self):
         """One engine tick: admissions + a single batched decode step."""
-        while self._free and not self._queue.empty():
-            self._admit(self._free.pop(), self._queue.get())
-        if not self._live:
-            return
-        logits, self.caches, self.lengths = self._decode(
-            self.params, self.tokens, self.caches, self.lengths
-        )
-        self._key, sub = jax.random.split(self._key)
-        nxt = sample_logits(
-            logits, sub, temperature=self.cfg.temperature, top_k=self.cfg.top_k
-        )
+        with self._mesh_ctx():
+            while self._free and not self._queue.empty():
+                self._admit(self._free.pop(0), self._queue.get())
+            if not self._live:
+                return
+            logits, self.caches, self.lengths = self._decode(
+                self.params, self.tokens, self.caches, self.lengths
+            )
+            self._key, sub = jax.random.split(self._key)
+            nxt = sample_logits(
+                logits, sub, temperature=self.cfg.temperature,
+                top_k=self.cfg.top_k,
+            )
         nxt_host = np.asarray(nxt)
         self.tokens = nxt[:, None]
         for slot, req in list(self._live.items()):
             tok = int(nxt_host[slot])
             req.output.append(tok)
-            if tok == req.params.eos_id or len(req.output) >= req.params.max_tokens:
-                req.done = True
-                del self._live[slot]
-                self._free.append(slot)
+            self._maybe_retire(slot, req, tok)
         self.steps += 1
 
     def run_until_drained(self, max_steps: int = 10_000) -> int:
@@ -180,11 +226,3 @@ def _splice_cache(dst: jax.Array, src: jax.Array, slot: int) -> jax.Array:
     return dst.at[tuple(idx)].set(
         jnp.squeeze(src, axis=batch_axis).astype(dst.dtype)
     )
-
-
-def _batch_index(dst, src, slot):  # pragma: no cover - legacy alias
-    raise NotImplementedError
-
-
-def _expand_to(dst, src, slot):  # pragma: no cover - legacy alias
-    raise NotImplementedError

@@ -81,6 +81,20 @@ def _export_tiled(w, a, spec: TileSpec):
     return pack_bits(t), alpha
 
 
+def _export_tiled_rows(w, a, spec: TileSpec):
+    """Row-packed shipped form: (r, ceil(n_in/32)) int32 + alpha (n_alpha,).
+
+    Same tile bits as ``_export_tiled`` laid out one word-padded packed row
+    per unique weight row, so the leading axis is directly shardable over
+    the tensor-parallel mesh axis ("tile_rows") and the matmul kernel
+    streams a (block_r, block_k/32) block without crossing rows.
+    """
+    t, alpha = _tile_and_alpha(w, a, spec)
+    r = spec.rows_per_tile
+    n_in = spec.n // spec.shape[0]
+    return pack_bits(t.reshape(r, n_in)), alpha
+
+
 def _export_conv_tiled(w, a, spec: TileSpec):
     """Conv-layout packed tile (kh*kw, r, ceil(c_in/32)) + alpha.
 
@@ -150,13 +164,34 @@ def export_serving_params(
             alpha_decl: mod.ParamSpec = sv_spec["alpha"]
             w = tr_par["w"]
             a = tr_par.get("a")
-            n_lead = len(tile_decl.shape) - 1
-            layer_shape = tuple(w.shape[n_lead:])
-            spec = _derive_spec(
-                policy, layer_shape, tile_decl.shape[-1], alpha_decl.shape[-1]
-            )
-            fn = _vmap_n(lambda we, ae: _export_tiled(we, ae, spec), n_lead)
-            tile, alpha = fn(w, w if a is None else a)
+            # Layout dispatch: a row-packed decl is (*lead, r, words) over a
+            # 2-D (n_out, n_in) layer; anything else is the flat q-bit form
+            # (unaligned tilings, and 4-D conv fallbacks).
+            exported = None
+            if len(tile_decl.shape) >= 2:
+                n_lead = len(tile_decl.shape) - 2
+                layer_shape = tuple(w.shape[n_lead:])
+                if len(layer_shape) == 2:
+                    spec = _derive_layer_spec(policy, layer_shape)
+                    if spec is not None and spec.aligned_rows:
+                        rows = (spec.rows_per_tile, packed_len(layer_shape[1]))
+                        if rows == tile_decl.shape[n_lead:] \
+                                and spec.n_alpha == alpha_decl.shape[-1]:
+                            fn = _vmap_n(
+                                lambda we, ae: _export_tiled_rows(we, ae, spec),
+                                n_lead,
+                            )
+                            exported = fn(w, w if a is None else a)
+            if exported is None:
+                n_lead = len(tile_decl.shape) - 1
+                layer_shape = tuple(w.shape[n_lead:])
+                spec = _derive_spec(
+                    policy, layer_shape, tile_decl.shape[-1],
+                    alpha_decl.shape[-1],
+                )
+                fn = _vmap_n(lambda we, ae: _export_tiled(we, ae, spec), n_lead)
+                exported = fn(w, w if a is None else a)
+            tile, alpha = exported
             out = {"tile": tile, "alpha": alpha}
             if "b" in keys:
                 out["b"] = tr_par["b"].astype(sv_spec["b"].dtype)
@@ -196,3 +231,42 @@ def serving_bytes(params) -> int:
         int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
         for x in jax.tree_util.tree_leaves(params)
     )
+
+
+def _tile_leaves(params):
+    """(path-key, leaf) for every packed-tile leaf (``tile``/``tile_conv``)."""
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if keys and keys[-1] in ("tile", "tile_conv"):
+            yield "/".join(keys), leaf
+
+
+def tile_serving_bytes(params) -> int:
+    """Bytes of the packed tile bits alone (the 1/TP-scaling share)."""
+    return sum(
+        int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        for _, leaf in _tile_leaves(params)
+    )
+
+
+def per_device_tile_bytes(params) -> Dict[str, int]:
+    """device -> bytes of packed tile bits RESIDENT on that device.
+
+    For a mesh-placed param tree this is what each chip's HBM actually
+    holds: sharded tiles count 1/TP of their bytes per device, replicated
+    leaves count fully on every device. Unplaced (single-device) trees
+    report one entry. The tensor-parallel acceptance check is that the
+    per-device number scales as 1/TP of ``tile_serving_bytes``.
+    """
+    out: Dict[str, int] = {}
+    for _, leaf in _tile_leaves(params):
+        shards = getattr(leaf, "addressable_shards", None)
+        if not shards:
+            dev = str(getattr(leaf, "device", "host"))
+            out[dev] = out.get(dev, 0) + leaf.nbytes
+            continue
+        for sh in shards:
+            dev = str(sh.device)
+            out[dev] = out.get(dev, 0) + int(np.prod(sh.data.shape)) \
+                * jnp.dtype(sh.data.dtype).itemsize
+    return out

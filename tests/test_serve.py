@@ -82,8 +82,13 @@ class TestWeightsExport:
         w = tp["seg0"]["mixer"]["wq"]["w"][0]      # layer 0 slice
         spec = cfg.tbn.spec_for(tuple(w.shape))
         t_ref = tile_vector(w, spec)
+        # shipped form is row-packed: (r, ceil(n_in/32)) — one word-padded
+        # packed row per unique weight row (shardable over the model axis)
         packed = sp["seg0"]["mixer"]["wq"]["tile"][0]
-        t_got = unpack_bits(packed, spec.q)
+        assert packed.shape == (
+            spec.rows_per_tile, (w.shape[1] + 31) // 32
+        ), packed.shape
+        t_got = unpack_bits(packed, w.shape[1]).reshape(-1)
         np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_got))
 
 
@@ -138,6 +143,60 @@ class TestEngine:
         r = eng2.submit([1, 2], SamplingParams(max_tokens=32, eos_id=eos))
         eng2.run_until_drained()
         assert r.output[-1] == eos and len(r.output) <= 32
+        assert r.finish_reason == "eos"
+
+    def test_prompt_longer_than_largest_bucket_rejected(self):
+        """An oversized prompt fails fast at submit() and neither consumes
+        a slot nor wedges the tick loop for concurrent requests."""
+        _, _, _, eng = self._engine(n_slots=2)  # buckets (8, 16)
+        ok = eng.submit([1, 2, 3], SamplingParams(max_tokens=3))
+        with pytest.raises(ValueError, match="exceeds largest bucket"):
+            eng.submit(list(range(17)), SamplingParams(max_tokens=3))
+        eng.run_until_drained()
+        assert ok.done and len(ok.output) == 3
+        assert sorted(eng._free) == [0, 1]      # no slot leaked
+
+    def test_slot_exhaustion_queues_and_drains(self):
+        """More requests than slots: the overflow waits in the queue, live
+        occupancy never exceeds n_slots, and every request completes."""
+        _, _, _, eng = self._engine(n_slots=2)
+        reqs = [eng.submit([i + 1, i + 2], SamplingParams(max_tokens=3))
+                for i in range(7)]
+        peak = 0
+        for _ in range(200):
+            if eng._queue.empty() and not eng._live:
+                break
+            eng.step()
+            peak = max(peak, len(eng._live))
+            # FIFO admission: started requests (first token emitted at
+            # admission) are always a prefix of submission order
+            started = [len(r.output) > 0 for r in reqs]
+            assert started == sorted(started, reverse=True), started
+        assert all(r.done for r in reqs)
+        assert peak <= 2
+        assert all(r.finish_reason == "length" for r in reqs)
+
+    def test_eos_vs_max_tokens_retirement_ordering(self):
+        """When the stop token lands exactly on the max_tokens boundary the
+        EOS check wins — finish_reason must say "eos", not "length"."""
+        _, _, _, probe_eng = self._engine()
+        probe = probe_eng.submit([1, 2], SamplingParams(max_tokens=1))
+        probe_eng.run_until_drained()
+        # max_tokens=1 retires at admission, before any decode tick
+        assert probe.done and len(probe.output) == 1
+        assert probe.finish_reason == "length" and probe_eng.steps == 0
+        eos = probe.output[0]
+
+        _, _, _, eng = self._engine()
+        both = eng.submit([1, 2], SamplingParams(max_tokens=1, eos_id=eos))
+        eng.run_until_drained()
+        assert both.done and both.output == [eos]
+        assert both.finish_reason == "eos"      # EOS checked before length
+
+        _, _, _, eng2 = self._engine()
+        never = eng2.submit([1, 2], SamplingParams(max_tokens=4, eos_id=-1))
+        eng2.run_until_drained()
+        assert never.finish_reason == "length" and len(never.output) == 4
 
 
 class TestInt8KV:
