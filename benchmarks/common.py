@@ -1,15 +1,13 @@
 """Shared benchmark utilities: ledgers, short synthetic training runs."""
 from __future__ import annotations
 
-import dataclasses
 import json
 import pathlib
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.policy import TBNPolicy, bwnn_policy, fp32_policy, tbn_policy
 from repro.models.paper import build_paper_model

@@ -7,7 +7,6 @@ layers cost MACs / p (the paper's Section 4.1 observation). Units: G-ops.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import fmt_table, save_rows
 from repro.core.policy import tbn_policy

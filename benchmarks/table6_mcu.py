@@ -14,11 +14,9 @@ fused ReLU) as a Python golden model against the tiled matmul oracle.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import fmt_table, save_rows
-from repro.core.packing import packed_len
 from repro.core.tiling import export_tile, plan_tiling, tiled_weight
 
 PAPER = dict(bwnn_storage_kb=12.70, tbn_storage_kb=3.32,

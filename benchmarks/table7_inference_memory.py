@@ -19,7 +19,16 @@ mesh: the packed tile rows of a reduced LM shard over the model axis
 (DESIGN.md §5) and we report per-device resident tile bytes, decode tick
 latency, and the max |logit| deviation vs the single-device path. It runs
 in a subprocess because the 8 forced host devices must be configured
-before jax initializes (the same trick the multi-device tests use)."""
+before jax initializes (the same trick the multi-device tests use).
+
+A MEASURED DECODE-BLOCKING section times the decode hot path's matmul at
+serving batch sizes: the old route padded an (n_slots, 1) decode batch to
+the matmul kernel's 128-row m block (~97% zero rows at 4 slots); the
+small-m dispatch in ``ops.tiled_dense_infer`` now routes those batches to
+``tiled_matvec_unique`` (whole sublane-rounded batch as one m block,
+widened r/k blocking). Both paths run the same backend (Pallas on TPU,
+interpret elsewhere), so the reported delta is the blocking's, not the
+platform's."""
 from __future__ import annotations
 
 import json
@@ -31,7 +40,7 @@ import sys
 import jax.numpy as jnp
 
 from benchmarks.common import fmt_table, measure_serve_delta, save_rows
-from repro.core.policy import bwnn_policy, fp32_policy, tbn_policy
+from repro.core.policy import tbn_policy
 from repro.models.paper import build_paper_model
 from repro.nn.context import ModelContext
 
@@ -133,6 +142,65 @@ def measure_sharded_serving(quick: bool):
           f"{out.stderr[-2000:]}")
     return None
 
+def measure_decode_blocking(quick: bool):
+    """Old 128-row matmul blocking vs the small-m matvec dispatch at
+    decode batch sizes (n_slots tokens per tick, one token per slot)."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.packing import pack_bits
+    from repro.kernels.tiled_matmul import tiled_matmul_unique
+    from repro.kernels.tiled_matvec import (
+        DECODE_BLOCK_K, DECODE_BLOCK_R, sublane_rounded, tiled_matvec_unique)
+
+    k_dim, r = (1024, 256) if quick else (2048, 512)
+    reps = 3 if quick else 10
+    key = jax.random.PRNGKey(0)
+    packed = pack_bits(
+        jnp.where(jax.random.bernoulli(key, 0.5, (r, k_dim)), 1.0, -1.0))
+
+    def timed(fn, x):
+        fn(x).block_until_ready()            # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(x)
+        out.block_until_ready()
+        return 1e3 * (time.perf_counter() - t0) / reps
+
+    rows = []
+    for m in (4, 16):
+        x = jax.random.normal(jax.random.PRNGKey(m), (m, k_dim), jnp.float32)
+
+        @jax.jit
+        def old_path(x, m=m):
+            xp = jnp.pad(x, ((0, 128 - m), (0, 0)))
+            return tiled_matmul_unique(xp, packed, r=r)[:m]
+
+        @jax.jit
+        def new_path(x, m=m):
+            xp = jnp.pad(x, ((0, sublane_rounded(m, x.dtype) - m), (0, 0)))
+            return tiled_matvec_unique(
+                xp, packed, r=r,
+                block_r=min(DECODE_BLOCK_R, r),
+                block_k=min(DECODE_BLOCK_K, k_dim),
+            )[:m]
+
+        np.testing.assert_allclose(                 # same math before timing
+            np.asarray(old_path(x)), np.asarray(new_path(x)),
+            rtol=1e-5, atol=1e-3)
+        old_ms, new_ms = timed(old_path, x), timed(new_path, x)
+        rows.append(dict(
+            n_slots=m, k=k_dim, r=r,
+            old_ms=round(old_ms, 3), new_ms=round(new_ms, 3),
+            old_tok_s=round(1e3 * m / old_ms, 1),
+            new_tok_s=round(1e3 * m / new_ms, 1),
+            speedup=f"{old_ms / new_ms:.2f}x",
+        ))
+    return rows
+
+
 PAPER = dict(fp=(222.5, 208.0), fp_tiled=(78.5, 52.0),
              bwnn=(18.4, 6.5), tbn=(13.4, 1.6))
 
@@ -204,6 +272,15 @@ def run(quick: bool = False):
     save_rows("table7_cnn_measured", mrows)
     print("\nmeasured resnet18 serving (dense fp32 vs packed conv tiles):")
     print(fmt_table(mrows, ["variant", "weight_mb", "latency_ms"]))
+
+    # measured decode blocking: the old 128-row-padded matmul vs the
+    # small-m matvec dispatch the decode tick now takes
+    drows = measure_decode_blocking(quick)
+    save_rows("table7_decode_matvec", drows)
+    print("\nmeasured decode-tick matmul (old 128-row blocking vs small-m "
+          "matvec dispatch, per jitted call):")
+    print(fmt_table(drows, ["n_slots", "k", "r", "old_ms", "new_ms",
+                            "old_tok_s", "new_tok_s", "speedup"]))
 
     # measured tensor-parallel serving: tile rows sharded over the model
     # axis — per-device bytes must scale as 1/TP with unchanged logits

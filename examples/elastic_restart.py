@@ -13,7 +13,6 @@ Simulates the production incident flow on one host:
 import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import build_model, get_config

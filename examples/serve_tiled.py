@@ -6,7 +6,6 @@ three quantization regimes, reporting the shipped-bytes ladder.
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.configs import build_model, get_config
 from repro.core.policy import bwnn_policy, fp32_policy, tbn_policy

@@ -21,7 +21,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.policy import BWNN, FP32, TBN, TBNPolicy
+from repro.core.policy import TBNPolicy
 from repro.core.tiling import TileSpec
 
 

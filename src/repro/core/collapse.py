@@ -22,7 +22,6 @@ GELU) must materialize the replication.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ TPU fast path and are validated against these functions.
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Literal, Optional, Sequence, Tuple
 

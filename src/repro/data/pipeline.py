@@ -6,9 +6,8 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Dict
 
-import jax
 
 
 class DataPipeline:

@@ -14,8 +14,7 @@ Tasks:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,8 +17,7 @@ tick (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

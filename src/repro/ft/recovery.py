@@ -24,7 +24,6 @@ import logging
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
-import jax
 
 from repro.ft.checkpoint import CheckpointManager, place, restore_into
 from repro.ft.watchdog import StepWatchdog

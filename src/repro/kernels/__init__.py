@@ -9,6 +9,7 @@ from repro.kernels.ops import (
 from repro.kernels.tile_construct import tile_construct_pallas
 from repro.kernels.tiled_conv import tiled_conv_unique
 from repro.kernels.tiled_matmul import tiled_matmul_unique
+from repro.kernels.tiled_matvec import MATVEC_MAX_M, tiled_matvec_unique
 
 __all__ = [
     "resolve_conv_padding",
@@ -19,4 +20,6 @@ __all__ = [
     "tile_construct_pallas",
     "tiled_conv_unique",
     "tiled_matmul_unique",
+    "tiled_matvec_unique",
+    "MATVEC_MAX_M",
 ]

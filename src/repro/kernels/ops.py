@@ -4,9 +4,12 @@ Public entry points:
   * ``tiled_dense_infer``  — serving-time FC layer from (packed tile, alpha)
     without materializing the dense weight. Pallas on TPU; pure-JAX
     structured math elsewhere (identical FLOPs — used by the SPMD dry-run).
-    Under an active mesh whose rules map ``tile_rows`` to a >1 axis
-    (distributed/sharding.py) the row-packed tile is tensor-parallel: a
-    shard_map runs the same kernel per shard on r/TP unique rows and the
+    Small batches (m <= MATVEC_MAX_M, i.e. decode ticks) dispatch to the
+    decode-blocked ``tiled_matvec_unique`` kernel instead of the 128-row
+    matmul blocking. Under an active mesh whose rules map ``tile_rows`` to
+    a >1 axis (distributed/sharding.py) the row-packed tile is
+    tensor-parallel: a shard_map runs the same kernel per shard on r/TP
+    unique rows (the decode dispatch applies per shard too) and the
     output stays sharded on the tile-row axis (DESIGN.md §5).
   * ``tiled_conv_infer``   — serving-time Conv2D from a conv-layout packed
     tile: fused im2col + tile-reuse matmul on TPU (the dense OIHW weight
@@ -48,6 +51,13 @@ from repro.distributed.sharding import batch_shard_axes, tile_sharding
 from repro.kernels.tile_construct import tile_construct_pallas
 from repro.kernels.tiled_conv import tiled_conv_unique
 from repro.kernels.tiled_matmul import tiled_matmul_unique
+from repro.kernels.tiled_matvec import (
+    DECODE_BLOCK_K,
+    DECODE_BLOCK_R,
+    MATVEC_MAX_M,
+    sublane_rounded,
+    tiled_matvec_unique,
+)
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -86,6 +96,18 @@ def _dense_unique_local(
         tm = unpack_bits(packed_rows, n_in, dtype=xm.dtype)  # (r_loc, n_in)
         return jnp.einsum("mk,rk->mr", xm, tm)
     xp = jnp.pad(xm, ((0, 0), (0, words * 32 - n_in)))
+    if m <= MATVEC_MAX_M:
+        # Decode fast path: m is the whole (sublane-rounded) batch, so the
+        # matmul kernel's 128-row m blocks would be mostly zero padding.
+        # The matvec variant takes the batch as ONE m block and widens the
+        # r/k blocking to keep the unpack-dominant regime fed.
+        br = min(DECODE_BLOCK_R, r_loc)
+        bk = min(DECODE_BLOCK_K, words * 32)
+        xp = _pad_to(_pad_to(xp, 0, sublane_rounded(m, xp.dtype)), 1, bk)
+        tm_p = _pad_to(_pad_to(packed_rows, 0, br), 1, bk // 32)
+        return tiled_matvec_unique(
+            xp, tm_p, r=tm_p.shape[0], block_r=br, block_k=bk,
+        )[:m, :r_loc]
     xp = _pad_to(_pad_to(xp, 0, block_m), 1, block_k)
     tm_p = _pad_to(_pad_to(packed_rows, 0, block_r), 1, block_k // 32)
     return tiled_matmul_unique(

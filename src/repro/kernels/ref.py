@@ -15,10 +15,8 @@ import jax.numpy as jnp
 from repro.core.packing import pack_bits, unpack_bits, unpack_conv_tile
 from repro.core.tiling import (
     TileSpec,
-    compute_alpha,
     expand_alpha,
     plan_conv_tiling,
-    tile_vector,
 )
 
 
@@ -70,6 +68,20 @@ def tiled_matmul_unique_ref(
     m, k = x.shape
     t = unpack_bits(packed, r * k, dtype=jnp.float32).reshape(r, k)
     return x.astype(jnp.float32) @ t.T
+
+
+def tiled_matvec_unique_ref(
+    x: jax.Array, packed_rows: jax.Array, *, n_in: int
+) -> jax.Array:
+    """Oracle for the decode matvec: u = x @ T^T from a ROW-packed tile.
+
+    x (M, K>=n_in — pad columns beyond n_in must be zero); packed_rows
+    (r, ceil(n_in/32)) int32, one word-padded packed row per unique weight
+    row (the shipped serve form). Returns (M, r) float32. Same math as
+    ``tiled_matmul_unique_ref`` up to the row-major vs row-packed layout.
+    """
+    t = unpack_bits(packed_rows, n_in, dtype=jnp.float32)  # (r, n_in)
+    return x[:, :n_in].astype(jnp.float32) @ t.T
 
 
 def tiled_conv_dense_weight(

@@ -20,7 +20,6 @@ Usage:
   python -m repro.launch.dryrun --all --mesh both --roofline
 """
 import argparse
-import dataclasses
 import json
 import pathlib
 import time
@@ -32,7 +31,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import cell_applicable
 from repro.distributed.sharding import axis_rules
-from repro.launch.cells import build_cell, depth_cfg, scan_trips
+from repro.launch.cells import build_cell, scan_trips
 from repro.launch.mesh import make_production_mesh
 from repro.roofline import hw
 from repro.roofline.analysis import (

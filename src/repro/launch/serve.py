@@ -23,7 +23,6 @@ the engine throughput.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -55,6 +54,8 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="engine-default top-k (per-request params override)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="1x1",
                     help="DPxTP serving mesh, e.g. 1x4 (default single device)")
@@ -72,7 +73,6 @@ def main(argv=None):
                                             use_pallas=False))
     params = mod.init_params(t_model.specs(), jax.random.PRNGKey(args.seed))
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        from repro.train.step import init_state
         step, restored = restore_into(params, args.ckpt_dir)
         params = restored
         print(f"restored masters at step {step}")
@@ -85,11 +85,16 @@ def main(argv=None):
     print(f"arch={cfg.name} TBN p={cfg.tbn.p}: masters {master_b/1e6:.2f}MB "
           f"-> shipped {ship_b/1e6:.2f}MB ({master_b/ship_b:.1f}x smaller)")
 
+    # bucket ladder clamped to the cache capacity (ServeConfig rejects
+    # buckets past max_len), with max_len itself as the top rung so every
+    # prompt the decode cache can hold is admissible
+    buckets = tuple(b for b in (16, 64) if b < args.max_len) \
+        + (args.max_len,)
     eng = BatchedEngine(
         s_model, sp,
         ServeConfig(n_slots=args.slots, max_len=args.max_len,
-                    prefill_buckets=(16, 64), temperature=args.temperature,
-                    seed=args.seed),
+                    prefill_buckets=buckets, temperature=args.temperature,
+                    top_k=args.top_k, seed=args.seed),
         mesh=mesh,
     )
     if mesh is not None:
@@ -109,8 +114,11 @@ def main(argv=None):
     ticks = eng.run_until_drained()
     dt = time.time() - t0
     tok = sum(len(r.output) for r in reqs)
+    # a ~0s drain (tiny reduced config, everything cached) must not
+    # divide-by-zero the throughput line
+    rate = f"{tok / dt:.1f} tok/s on CPU" if dt > 1e-9 else "instant drain"
     print(f"{len(reqs)} requests, {tok} tokens in {ticks} engine ticks, "
-          f"{dt:.2f}s ({tok/dt:.1f} tok/s on CPU)")
+          f"{dt:.2f}s ({rate})")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
     return reqs

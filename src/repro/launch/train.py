@@ -15,14 +15,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import build_model, get_config
-from repro.core.policy import bwnn_policy, fp32_policy, tbn_policy
+from repro.core.policy import bwnn_policy, fp32_policy
 from repro.data.pipeline import DataPipeline
 from repro.data.synthetic import lm_batch
 from repro.distributed.sharding import axis_rules

@@ -105,7 +105,7 @@ class DecBlock:
     def decode_step(self, params, x, cache, lengths):
         import math as _math
 
-        from repro.nn.attention import _attend_core, make_mask
+        from repro.nn.attention import _attend_core
 
         h = self.norm1(params["norm1"], x)
         h, ck_, cv_ = self.self_attn.decode_step(

@@ -14,7 +14,6 @@ One model object serves three entry points:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -19,7 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import active_mesh, logical_constraint
+from repro.distributed.sharding import logical_constraint
 from repro.nn import module as mod
 from repro.nn.context import ModelContext
 from repro.nn.linear import Dense

@@ -17,13 +17,11 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.packing import packed_len, unpack_bits
 from repro.core.tiling import (
     TileSpec,
     _ste_sign,
-    compute_alpha,
     plan_conv_tiling,
     reconstruct_from_tile,
     tiled_weight,
@@ -31,7 +29,7 @@ from repro.core.tiling import (
 from repro.distributed.sharding import logical_constraint
 from repro.kernels.ops import tbn_dense_train, tiled_conv_infer, tiled_dense_infer
 from repro.nn import module as mod
-from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.nn.context import SERVE, ModelContext
 
 
 def bwnn_weight(w: jax.Array, compute_dtype) -> jax.Array:

@@ -10,7 +10,6 @@ Input/gate projections are TBN-tileable; the per-channel recurrence params
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ TBN applies to the in/out projections (>= lambda); the SSD-specific params
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

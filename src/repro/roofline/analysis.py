@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.roofline import hw
 

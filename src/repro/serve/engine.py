@@ -5,12 +5,17 @@ Design (vLLM-style, adapted to fixed-shape XLA):
 
 * ``n_slots`` concurrent sequences share one decode step of static shape
   (B=n_slots, 1). A request occupies a slot from admission to completion.
-* Admission runs prefill for the incoming prompt (right-padded to a fixed
-  bucket so prefill compiles once per bucket), then *splices* the prompt's
-  caches into the slot's rows of the shared decode cache.
-* Each engine tick = one jitted decode step for all live slots + host-side
-  bookkeeping (EOS/max_tokens retirement, new admissions). Dead slots run
-  the same step (masked out) — shapes never change, so nothing recompiles.
+* Admission runs prefill for the incoming prompt (LEFT-padded to a fixed
+  bucket so prefill compiles once per bucket and the last position is the
+  true final prompt token), then *splices* the prompt's caches into the
+  slot's rows of the shared decode cache.
+* Each engine tick = one jitted (decode step + per-slot sampling) for all
+  live slots + host-side bookkeeping (EOS/max_tokens retirement, new
+  admissions). Sampling params live in per-slot ``(n_slots,)`` arrays
+  populated at admission and fed to the tick as runtime values, so every
+  token honors its request's temperature/top-k, nothing recompiles when a
+  new request lands in a slot, and only token ids cross back to host.
+  Dead slots run the same step (masked out) — shapes never change.
 * Weights are SERVE-form (packed tiles + alphas, repro.serve.weights); the
   model's serve path applies them through the tile-reuse math, so HBM holds
   q bits per tiled layer, not N.
@@ -29,14 +34,18 @@ import contextlib
 import dataclasses
 import itertools
 import queue
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import axis_rules, param_shardings
-from repro.serve.sampling import SamplingParams, sample_logits
+from repro.serve.sampling import (
+    SamplingParams,
+    sample_logits,
+    sample_logits_batch,
+)
 
 
 @dataclasses.dataclass
@@ -58,6 +67,26 @@ class ServeConfig:
     temperature: float = 0.0
     top_k: Optional[int] = None
     seed: int = 0
+
+    def __post_init__(self):
+        """Fail fast on a bad bucket ladder. An oversized bucket would let
+        ``submit()`` accept a prompt whose prefill cache cannot be spliced
+        into the ``max_len`` decode cache (corruption or a shape error deep
+        inside the tick loop); an empty/unsorted ladder breaks bucketing."""
+        b = tuple(self.prefill_buckets)
+        if not b:
+            raise ValueError("prefill_buckets must be non-empty")
+        if any(x <= 0 for x in b):
+            raise ValueError(f"prefill_buckets must be positive: {b}")
+        if list(b) != sorted(set(b)):
+            raise ValueError(
+                f"prefill_buckets must be strictly increasing: {b}"
+            )
+        if b[-1] > self.max_len:
+            raise ValueError(
+                f"prefill bucket {b[-1]} exceeds max_len {self.max_len}: "
+                "a prompt admitted through it could not fit the decode cache"
+            )
 
 
 class BatchedEngine:
@@ -90,8 +119,26 @@ class BatchedEngine:
         self.caches = model.init_caches(cfg.n_slots, cfg.max_len, cache_dtype)
         self.lengths = jnp.zeros((cfg.n_slots,), jnp.int32)
         self.tokens = jnp.zeros((cfg.n_slots, 1), jnp.int32)
+        # Per-slot sampling params, populated at admission from the
+        # request's resolved SamplingParams (None sentinels -> ServeConfig
+        # defaults). temps/topks ride into the jitted tick as runtime
+        # arrays; eos ids stay host-side for retirement bookkeeping.
+        self.temps = jnp.zeros((cfg.n_slots,), jnp.float32)
+        self.topks = jnp.zeros((cfg.n_slots,), jnp.int32)
+        self._eos_ids = np.full((cfg.n_slots,), -1, np.int64)
 
-        self._decode = jax.jit(model.decode_step)
+        def _tick(params, tokens, caches, lengths, temps, topks, key):
+            """decode step + per-slot sampling fused under one jit: the
+            (n_slots, vocab) logits never leave the device."""
+            logits, caches, lengths = model.decode_step(
+                params, tokens, caches, lengths
+            )
+            nxt = sample_logits_batch(
+                logits, key, temperature=temps, top_k=topks
+            )
+            return nxt, caches, lengths
+
+        self._decode = jax.jit(_tick)
         self._prefill = {
             b: jax.jit(lambda p, batch, b=b: model.prefill(p, batch, cfg.max_len))
             for b in cfg.prefill_buckets
@@ -132,7 +179,7 @@ class BatchedEngine:
     def _maybe_retire(self, slot: int, req: Request, tok: int) -> bool:
         """Retire a just-extended request. EOS is checked before the length
         cap so a stop token arriving exactly at max_tokens reports "eos"."""
-        if tok == req.params.eos_id:
+        if tok == int(self._eos_ids[slot]):
             req.finish_reason = "eos"
         elif len(req.output) >= req.params.max_tokens:
             req.finish_reason = "length"
@@ -141,6 +188,13 @@ class BatchedEngine:
         req.done = True
         self._live.pop(slot, None)
         self._free.append(slot)
+        # Reset the slot's sampling params: a stale temperature/top-k on a
+        # dead slot would keep tripping jnp.any(...) in the batch sampler
+        # and defeat its all-greedy / no-top-k fast paths for every later
+        # tick until the slot is reused.
+        self.temps = self.temps.at[slot].set(0.0)
+        self.topks = self.topks.at[slot].set(0)
+        self._eos_ids[slot] = -1
         return True
 
     def _admit(self, slot: int, req: Request):
@@ -157,11 +211,20 @@ class BatchedEngine:
             lambda dst, src: _splice_cache(dst, src, slot), self.caches, caches
         )
         self.lengths = self.lengths.at[slot].set(b)
+        # Resolve the request's sampling params against the engine defaults
+        # (is-None sentinels: an explicit temperature=0.0 / top_k=0 wins
+        # over a stochastic ServeConfig default) and pin them to the slot —
+        # every subsequent decode tick reads them from the per-slot arrays.
+        res = req.params.resolve(self.cfg.temperature, self.cfg.top_k)
+        self.temps = self.temps.at[slot].set(res.temperature)
+        self.topks = self.topks.at[slot].set(res.top_k)
+        self._eos_ids[slot] = res.eos_id
         self._key, sub = jax.random.split(self._key)
+        # Prefill-token sampling: the resolved params are static scalars
+        # here, so the scalar sampler applies (same masked logits and key
+        # stream as the batch sampler — tokens are identical).
         first = sample_logits(
-            logits, sub,
-            temperature=req.params.temperature or self.cfg.temperature,
-            top_k=req.params.top_k or self.cfg.top_k,
+            logits, sub, temperature=res.temperature, top_k=res.top_k,
         )
         tok = int(first[0])
         req.output.append(tok)
@@ -178,13 +241,10 @@ class BatchedEngine:
                 self._admit(self._free.pop(0), self._queue.get())
             if not self._live:
                 return
-            logits, self.caches, self.lengths = self._decode(
-                self.params, self.tokens, self.caches, self.lengths
-            )
             self._key, sub = jax.random.split(self._key)
-            nxt = sample_logits(
-                logits, sub, temperature=self.cfg.temperature,
-                top_k=self.cfg.top_k,
+            nxt, self.caches, self.lengths = self._decode(
+                self.params, self.tokens, self.caches, self.lengths,
+                self.temps, self.topks, sub,
             )
         nxt_host = np.asarray(nxt)
         self.tokens = nxt[:, None]

@@ -1,4 +1,19 @@
-"""Token sampling: greedy / temperature / top-k, pure-functional."""
+"""Token sampling: greedy / temperature / top-k, pure-functional.
+
+Two entry points:
+
+* ``sample_logits``       — static scalar config, one sampler per jit
+  specialization. Kept for single-stream callers and tests.
+* ``sample_logits_batch`` — per-row ``(B,)`` temperature / top-k arrays as
+  *runtime* values, so a continuous-batching engine can serve slots with
+  different request params from ONE jitted decode tick (no recompile when
+  a new request lands in a slot, and only token ids cross back to host).
+
+``SamplingParams`` fields default to ``None`` sentinels meaning "inherit
+the engine default" — an explicit ``temperature=0.0`` (greedy) or
+``top_k=0`` (restriction off) therefore wins over a stochastic
+``ServeConfig`` default instead of being swallowed by truthiness.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -10,10 +25,33 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    temperature: float = 0.0       # 0 -> greedy
-    top_k: Optional[int] = None
+    temperature: Optional[float] = None  # None -> engine default; 0 -> greedy
+    top_k: Optional[int] = None          # None -> engine default; 0 -> off
     max_tokens: int = 64
-    eos_id: int = -1               # -1 -> never stops on a token
+    eos_id: int = -1                     # -1 -> never stops on a token
+
+    def resolve(
+        self, default_temperature: float, default_top_k: Optional[int]
+    ) -> "ResolvedSampling":
+        """Fill ``None`` sentinels from the engine defaults (``is None``
+        checks — explicit falsy values like 0.0 / 0 are kept verbatim)."""
+        t = self.temperature if self.temperature is not None \
+            else default_temperature
+        k = self.top_k if self.top_k is not None else default_top_k
+        return ResolvedSampling(
+            temperature=float(t),
+            top_k=int(k) if k is not None else 0,
+            eos_id=int(self.eos_id),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedSampling:
+    """Concrete per-request sampler state (no sentinels): what the engine
+    stores in its per-slot arrays. ``top_k == 0`` means no restriction."""
+    temperature: float
+    top_k: int
+    eos_id: int
 
 
 def sample_logits(
@@ -27,8 +65,65 @@ def sample_logits(
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / temperature
-    if top_k is not None and top_k > 0:
+    # k >= V restricts nothing (and would crash lax.top_k) — skip it, the
+    # same semantics the batch sampler documents for its runtime k.
+    if top_k is not None and 0 < top_k < logits.shape[-1]:
         vals, _ = jax.lax.top_k(logits, top_k)
         kth = vals[..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_logits_batch(
+    logits: jax.Array,
+    key: jax.Array,
+    *,
+    temperature: jax.Array,
+    top_k: jax.Array,
+) -> jax.Array:
+    """Row-wise sampling with per-row params as runtime arrays.
+
+    logits (B, V); temperature (B,) float (<= 0 -> greedy row); top_k (B,)
+    int32 (0 or >= V -> no restriction). Returns token ids (B,) int32.
+    Greedy rows ignore the key, so greedy requests are deterministic even
+    when batched next to stochastic ones.
+    """
+    lf = logits.astype(jnp.float32)
+    v = lf.shape[-1]
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    temperature = temperature.astype(jnp.float32)
+    k = jnp.clip(top_k.astype(jnp.int32), 0, v)
+    # Greedy rows never need their top-k applied (argmax is always in the
+    # top k), so they must not arm the sort path either — a greedy request
+    # carrying an explicit top_k would otherwise force the full-vocab sort
+    # for the whole batch on every tick.
+    restrict = (k > 0) & (k < v) & (temperature > 0.0)
+
+    def _stochastic(_):
+        safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+        scaled = lf / safe_t[:, None]
+
+        # Per-row k-th threshold from one descending sort: rows with a
+        # varying runtime k cannot use lax.top_k (static k), but the k-th
+        # largest value is just a gather into the sorted row. The sort is
+        # gated too — unrestricted sampling never pays it.
+        def _with_topk(s):
+            sorted_desc = -jnp.sort(-s, axis=-1)
+            kth = jnp.take_along_axis(
+                sorted_desc, jnp.clip(k - 1, 0, v - 1)[:, None], axis=-1
+            )
+            return jnp.where(restrict[:, None] & (s < kth), -jnp.inf, s)
+
+        masked = jax.lax.cond(
+            jnp.any(restrict), _with_topk, lambda s: s, scaled
+        )
+        sampled = jax.random.categorical(key, masked, axis=-1)
+        return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)
+
+    # All-greedy batches (the ServeConfig default) skip sampling entirely:
+    # the decode tick then costs one argmax, same as before sampling moved
+    # on-device — the sort/categorical only run when a live slot asks.
+    return jax.lax.cond(
+        jnp.any(temperature > 0.0), _stochastic, lambda _: greedy, None
+    )

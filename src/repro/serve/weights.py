@@ -19,7 +19,7 @@ with serving weights costs ~1/128th the bytes at p=4.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,6 @@ live inside the model; this layer adds accumulation and the update rule.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -5,11 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    TileSpec,
-    aggregate,
     compute_alpha,
     construct_binary,
-    expand_alpha,
     export_tile,
     fold_inputs_reference,
     plan_tiling,

@@ -1,7 +1,5 @@
 """Fault tolerance: checkpoint roundtrip, retention, async save, recovery
 with injected failures, watchdog/straggler detection."""
-import threading
-import time
 
 import jax
 import jax.numpy as jnp

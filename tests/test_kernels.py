@@ -22,6 +22,7 @@ from repro.kernels.ref import (
     tile_construct_ref,
     tiled_matmul_ref,
     tiled_matmul_unique_ref,
+    tiled_matvec_unique_ref,
 )
 
 
@@ -96,6 +97,73 @@ def test_tiled_dense_infer_batched_leading_dims():
     assert y.shape == (2, 3, 128)
     y2 = tiled_dense_infer(x, pack_bits(t), alpha, spec, use_pallas=False)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# decode matvec kernel (small-m fast path)
+# --------------------------------------------------------------------------
+MATVEC_SHAPES = [
+    # (n_in, r) — word-padded rows, non-dividing r/k exercised via ops pads
+    (96, 24),
+    (512, 128),
+    (1504, 300),
+]
+
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+@pytest.mark.parametrize("n_in,r", MATVEC_SHAPES)
+def test_decode_matvec_matches_ref(m, n_in, r):
+    """ops._dense_unique_local routes m <= MATVEC_MAX_M to the decode
+    matvec kernel; its result must match the row-packed oracle."""
+    from repro.kernels import MATVEC_MAX_M
+    from repro.kernels.ops import _dense_unique_local
+
+    assert m <= MATVEC_MAX_M
+    kx, kt = jax.random.split(jax.random.PRNGKey(m * 13 + n_in + r))
+    x = jax.random.normal(kx, (m, n_in))
+    t = jnp.where(jax.random.bernoulli(kt, 0.5, (r, n_in)), 1.0, -1.0)
+    packed = pack_bits(t)                       # (r, ceil(n_in/32))
+    want = tiled_matvec_unique_ref(x, packed, n_in=n_in)
+    got = _dense_unique_local(
+        x, packed, n_in=n_in, use_pallas=True,
+        block_m=128, block_r=128, block_k=512,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+def test_decode_matvec_kernel_direct(m):
+    """Direct kernel call at pre-padded shapes (no ops padding)."""
+    from repro.kernels import tiled_matvec_unique
+    from repro.kernels.tiled_matvec import sublane_rounded
+
+    n_in, r = 256, 64
+    kx, kt = jax.random.split(jax.random.PRNGKey(m))
+    mp = sublane_rounded(m, jnp.float32)
+    x = jax.random.normal(kx, (mp, n_in))
+    t = jnp.where(jax.random.bernoulli(kt, 0.5, (r, n_in)), 1.0, -1.0)
+    packed = pack_bits(t)
+    got = tiled_matvec_unique(x, packed, r=r, block_r=64, block_k=256,
+                              interpret=True)
+    want = tiled_matvec_unique_ref(x, packed, n_in=n_in)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_decode_dispatch_matches_matmul_blocking():
+    """tiled_dense_infer at decode m equals the same call forced through
+    the reference math — the dispatch changes blocking, not results."""
+    spec = plan_tiling((256, 64), p=4, min_size=1, alpha_source="W")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    t = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(1), 0.5,
+                                       (spec.rows_per_tile, 64)), 1.0, -1.0)
+    rows = pack_bits(t)                          # row-packed serve form
+    alpha = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (4,))) + 0.1
+    got = tiled_dense_infer(x, rows, alpha, spec, use_pallas=True)
+    want = tiled_dense_infer(x, rows, alpha, spec, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
 
 
 # --------------------------------------------------------------------------

@@ -3,7 +3,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 
 def run_module(args, timeout=420):

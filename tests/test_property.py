@@ -15,7 +15,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.packing import pack_bits, packed_len, storage_bytes, unpack_bits
 from repro.core.tiling import (
-    TileSpec,
     compute_alpha,
     construct_binary,
     expand_alpha,
@@ -23,7 +22,6 @@ from repro.core.tiling import (
     fold_inputs_reference,
     plan_tiling,
     reconstruct_from_tile,
-    tile_vector,
     tiled_matmul_reference,
     tiled_weight,
 )

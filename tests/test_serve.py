@@ -77,7 +77,7 @@ class TestWeightsExport:
         tp = mod.init_params(tm.specs(), KEY)
         sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
         # find a Dense with a tile and verify sign structure matches W
-        from repro.core.tiling import plan_tiling, tile_vector
+        from repro.core.tiling import tile_vector
 
         w = tp["seg0"]["mixer"]["wq"]["w"][0]      # layer 0 slice
         spec = cfg.tbn.spec_for(tuple(w.shape))
@@ -199,6 +199,129 @@ class TestEngine:
         assert never.finish_reason == "length" and len(never.output) == 4
 
 
+class TestPerSlotSampling:
+    """Per-request sampling params must hold for EVERY token (the old tick
+    sampled decode tokens with the engine defaults) and explicit falsy
+    params (temperature=0.0 / top_k=0) must win over engine defaults."""
+
+    def _engine(self, n_slots=2, **serve_over):
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        scfg = ServeConfig(n_slots=n_slots, max_len=64,
+                           prefill_buckets=(8, 16), **serve_over)
+        return cfg, sm, sp, BatchedEngine(sm, sp, scfg)
+
+    def _replay_prefill(self, sm, sp, prompt):
+        """Mirror _admit's left-padded bucket-8 prefill for a replay."""
+        toks = np.zeros((1, 8), np.int32)
+        toks[0, 8 - len(prompt):] = prompt
+        return sm.prefill(sp, {"tokens": jnp.asarray(toks)}, 64)
+
+    def test_greedy_request_deterministic_on_sampling_engine(self):
+        """SamplingParams(temperature=0.0) on a stochastic-default engine:
+        explicit greedy must win over the 0.9 default (is-None sentinels,
+        not or-on-falsy) for the whole sequence, across engine seeds."""
+        outs = []
+        for seed in (0, 1):
+            _, _, _, eng = self._engine(temperature=0.9, seed=seed)
+            r = eng.submit([1, 2, 3],
+                           SamplingParams(temperature=0.0, max_tokens=6))
+            eng.run_until_drained()
+            outs.append(r.output)
+        assert outs[0] == outs[1]
+        # and equals the output of a greedy-default engine (params default
+        # to None -> inherit the engine's 0.0)
+        _, _, _, eng = self._engine(temperature=0.0, seed=7)
+        r = eng.submit([1, 2, 3], SamplingParams(max_tokens=6))
+        eng.run_until_drained()
+        assert r.output == outs[0]
+
+    def test_sampling_request_stochastic_beyond_first_token(self):
+        """A temperature request on a greedy-default engine: decode tokens
+        must come from the request's sampler, not the engine default — the
+        output must diverge from the greedy continuation of its own first
+        token (which is exactly what the old per-tick default produced)."""
+        _, sm, sp, eng = self._engine(temperature=0.0)
+        req = eng.submit([1, 2, 3],
+                         SamplingParams(temperature=1.0, max_tokens=10))
+        eng.run_until_drained()
+        assert len(req.output) == 10
+        logits, caches, lengths = self._replay_prefill(sm, sp, [1, 2, 3])
+        cur = req.output[0]
+        decode = jax.jit(sm.decode_step)
+        greedy = []
+        for _ in range(9):
+            logits, caches, lengths = decode(
+                sp, jnp.array([[cur]], jnp.int32), caches, lengths)
+            cur = int(jnp.argmax(logits[0]))
+            greedy.append(cur)
+        assert req.output[1:] != greedy
+
+    def test_topk_request_restricts_every_decode_token(self):
+        """top_k=2 on an unrestricted sampling engine: every decoded token
+        (not just the prefill one) must be in the top-2 of that step's
+        logits, verified by replaying the engine's exact cache states."""
+        _, sm, sp, eng = self._engine(temperature=1.0)  # default: full vocab
+        req = eng.submit([4, 5], SamplingParams(temperature=1.0, top_k=2,
+                                                max_tokens=8))
+        eng.run_until_drained()
+        logits, caches, lengths = self._replay_prefill(sm, sp, [4, 5])
+        top2 = np.argsort(-np.asarray(logits[0]))[:2]
+        assert req.output[0] in top2
+        decode = jax.jit(sm.decode_step)
+        cur = req.output[0]
+        for tok in req.output[1:]:
+            logits, caches, lengths = decode(
+                sp, jnp.array([[cur]], jnp.int32), caches, lengths)
+            top2 = np.argsort(-np.asarray(logits[0]))[:2]
+            assert tok in top2, (tok, top2)
+            cur = tok
+
+    def test_mixed_slots_greedy_unperturbed_by_stochastic_neighbor(self):
+        """A greedy request batched next to a stochastic one produces the
+        same tokens as when it runs alone (greedy rows ignore the key)."""
+        _, _, _, eng = self._engine(n_slots=2, temperature=0.0, seed=3)
+        solo = eng.submit([1, 2, 3], SamplingParams(max_tokens=5))
+        eng.run_until_drained()
+
+        _, _, _, eng2 = self._engine(n_slots=2, temperature=0.0, seed=3)
+        greedy = eng2.submit([1, 2, 3], SamplingParams(max_tokens=5))
+        eng2.submit([6, 7], SamplingParams(temperature=1.0, max_tokens=5))
+        eng2.run_until_drained()
+        assert greedy.output == solo.output
+
+
+    def test_slot_sampling_params_reset_on_retire(self):
+        """Retiring a stochastic request must clear its slot's sampling
+        arrays, or the dead slot would keep the batch sampler's all-greedy
+        fast path disabled for every later tick."""
+        _, _, _, eng = self._engine(n_slots=2, temperature=0.0)
+        r = eng.submit([1, 2], SamplingParams(temperature=1.0, top_k=2,
+                                              max_tokens=3))
+        eng.run_until_drained()
+        assert r.done
+        assert float(jnp.sum(jnp.abs(eng.temps))) == 0.0
+        assert int(jnp.sum(jnp.abs(eng.topks))) == 0
+        assert all(int(e) == -1 for e in eng._eos_ids)
+
+
+class TestServeConfigValidation:
+    def test_oversized_bucket_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            ServeConfig(max_len=32, prefill_buckets=(32, 128))
+
+    def test_empty_and_unsorted_ladders_rejected(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            ServeConfig(prefill_buckets=())
+        with pytest.raises(ValueError, match="strictly increasing"):
+            ServeConfig(max_len=256, prefill_buckets=(128, 32))
+        with pytest.raises(ValueError, match="strictly increasing"):
+            ServeConfig(max_len=256, prefill_buckets=(32, 32))
+        with pytest.raises(ValueError, match="positive"):
+            ServeConfig(max_len=256, prefill_buckets=(0, 32))
+
+
 class TestInt8KV:
     def test_decode_parity_bf16_vs_int8(self):
         """Greedy decode path with int8 KV matches bf16 KV closely."""
@@ -230,6 +353,38 @@ class TestInt8KV:
 
 
 class TestSampling:
+    def test_topk_at_least_vocab_is_no_restriction(self):
+        """k >= V must behave like no top-k (and not crash lax.top_k),
+        in both the scalar and the batch sampler."""
+        logits = jnp.array([[0.5, 2.0, -1.0, 0.1]])
+        want = sample_logits(logits, KEY, temperature=1.0, top_k=None)
+        got = sample_logits(logits, KEY, temperature=1.0, top_k=100)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        from repro.serve.sampling import sample_logits_batch
+
+        got_b = sample_logits_batch(
+            logits, KEY, temperature=jnp.array([1.0]),
+            top_k=jnp.array([100], jnp.int32))
+        want_b = sample_logits_batch(
+            logits, KEY, temperature=jnp.array([1.0]),
+            top_k=jnp.array([0], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+    def test_oversized_topk_request_serves_without_wedging(self):
+        """A stochastic request with top_k >= vocab must not crash
+        mid-admission (it previously wedged the engine with a leaked
+        slot); it serves as unrestricted sampling."""
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=2, max_len=64, prefill_buckets=(8, 16)))
+        r = eng.submit([1, 2], SamplingParams(
+            temperature=1.0, top_k=cfg.vocab + 100, max_tokens=3))
+        eng.run_until_drained()
+        assert r.done and len(r.output) == 3
+        assert sorted(eng._free) == [0, 1]
+
     def test_greedy_is_argmax(self):
         logits = jnp.array([[0.1, 2.0, -1.0], [3.0, 0.0, 0.0]])
         out = sample_logits(logits, KEY, temperature=0.0)
