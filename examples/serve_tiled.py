@@ -40,7 +40,7 @@ def main():
         sp = export_serving_params(tm.specs(), sm.specs(), params, pol)
         rows.append((name, serving_bytes(params), serving_bytes(sp)))
         eng = BatchedEngine(sm, sp, ServeConfig(n_slots=2, max_len=48,
-                                                prefill_buckets=(8,)))
+                                                chunk_tokens=8))
         reqs = [eng.submit([3, 1, 4, 1, 5], SamplingParams(max_tokens=8)),
                 eng.submit([2, 7, 1, 8], SamplingParams(max_tokens=8))]
         eng.run_until_drained()

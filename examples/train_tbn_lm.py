@@ -88,7 +88,7 @@ def main():
     print(f"export: {serving_bytes(state.params)/1e6:.1f}MB masters -> "
           f"{serving_bytes(sp)/1e6:.2f}MB packed tiles")
     eng = BatchedEngine(s_model, sp, ServeConfig(
-        n_slots=4, max_len=args.seq + 32, prefill_buckets=(16, 32)))
+        n_slots=4, max_len=args.seq + 32, chunk_tokens=16))
     reqs = [eng.submit([1 + i, 17 * (1 + i) % cfg.vocab],
                        SamplingParams(max_tokens=12)) for i in range(4)]
     eng.run_until_drained()

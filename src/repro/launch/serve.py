@@ -1,7 +1,7 @@
-"""Batched serving driver with packed-tile weights.
+"""Batched serving driver with packed-tile weights and chunked prefill.
 
     python -m repro.launch.serve --arch granite-8b --reduced \\
-        --requests 8 --max-tokens 16
+        --requests 8 --max-tokens 16 --chunk-tokens 32
 
 Tensor-parallel serving shards each layer's packed tile rows over the
 model mesh axis (DESIGN.md §5):
@@ -16,9 +16,12 @@ local testing.)
 Flow: init TRAIN masters (or restore a checkpoint), export the SERVE
 representation (packed tile bits + alpha scalars — repro.serve.weights),
 stand up the slot-based BatchedEngine (mesh-placed when --mesh is given)
-and drain a batch of synthetic prompts. Prints the compression of the
-shipped weights vs the masters, the per-device resident tile bytes, and
-the engine throughput.
+and drain a batch of synthetic prompts, timing every engine tick. Prints
+the compression of the shipped weights vs the masters, the per-device
+resident tile bytes, engine throughput, and a TTFT / inter-token-latency
+report — the tail-latency numbers the chunked-prefill scheduler exists
+to protect (`--chunk-tokens` bounds how much prompt work any one tick
+carries beside the live decodes).
 """
 from __future__ import annotations
 
@@ -43,6 +46,22 @@ from repro.serve.weights import (
 )
 
 
+def latency_report(reqs, tick_ends):
+    """Per-request TTFT and inter-token latencies from the engine's
+    token_steps tick indices + the driver's per-tick wall clock.
+
+    tick_ends[i] is the cumulative wall time at the end of tick i; a
+    token emitted at tick t therefore landed by tick_ends[t]."""
+    ttfts, itls = [], []
+    for r in reqs:
+        if not r.token_steps:
+            continue
+        ttfts.append(tick_ends[r.token_steps[0]])
+        for a, b in zip(r.token_steps, r.token_steps[1:]):
+            itls.append(tick_ends[b] - tick_ends[a])
+    return ttfts, itls
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -53,6 +72,9 @@ def main(argv=None):
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk-tokens", type=int, default=32,
+                    help="prefill chunk width == per-tick token budget "
+                         "(clamped to --max-len)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=None,
                     help="engine-default top-k (per-request params override)")
@@ -85,15 +107,11 @@ def main(argv=None):
     print(f"arch={cfg.name} TBN p={cfg.tbn.p}: masters {master_b/1e6:.2f}MB "
           f"-> shipped {ship_b/1e6:.2f}MB ({master_b/ship_b:.1f}x smaller)")
 
-    # bucket ladder clamped to the cache capacity (ServeConfig rejects
-    # buckets past max_len), with max_len itself as the top rung so every
-    # prompt the decode cache can hold is admissible
-    buckets = tuple(b for b in (16, 64) if b < args.max_len) \
-        + (args.max_len,)
     eng = BatchedEngine(
         s_model, sp,
         ServeConfig(n_slots=args.slots, max_len=args.max_len,
-                    prefill_buckets=buckets, temperature=args.temperature,
+                    chunk_tokens=min(args.chunk_tokens, args.max_len),
+                    temperature=args.temperature,
                     top_k=args.top_k, seed=args.seed),
         mesh=mesh,
     )
@@ -111,14 +129,25 @@ def main(argv=None):
         for _ in range(args.requests)
     ]
     t0 = time.time()
-    ticks = eng.run_until_drained()
-    dt = time.time() - t0
+    tick_ends = []
+    ticks = eng.run_until_drained(
+        on_tick=lambda _: tick_ends.append(time.time() - t0)
+    )
+    dt = tick_ends[-1] if tick_ends else 0.0
     tok = sum(len(r.output) for r in reqs)
     # a ~0s drain (tiny reduced config, everything cached) must not
     # divide-by-zero the throughput line
     rate = f"{tok / dt:.1f} tok/s on CPU" if dt > 1e-9 else "instant drain"
     print(f"{len(reqs)} requests, {tok} tokens in {ticks} engine ticks, "
           f"{dt:.2f}s ({rate})")
+    ttfts, itls = latency_report(reqs, tick_ends)
+    if ttfts:
+        line = (f"TTFT mean {1e3 * np.mean(ttfts):.1f}ms "
+                f"max {1e3 * np.max(ttfts):.1f}ms")
+        if itls:
+            line += (f" | ITL mean {1e3 * np.mean(itls):.1f}ms "
+                     f"max {1e3 * np.max(itls):.1f}ms")
+        print(f"latency (chunk={eng.cfg.chunk_tokens}): {line}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
     return reqs

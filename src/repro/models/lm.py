@@ -206,6 +206,93 @@ class Block:
             x = x + h
         return x, cache
 
+    def extend(self, params, x, cache, *, positions, valid):
+        """Advance a (B, C) column block at per-slot offsets against the
+        decode cache (chunked prefill). ``positions`` (B, C) are absolute
+        token positions; ``valid`` (B, C) marks real columns — padding
+        columns never write a cache row and never advance recurrent state,
+        so a slot moves by exactly its count of valid columns (0 leaves it
+        untouched up to dtype).
+        """
+        h = self.norm1(params["norm1"], x)
+        if self.kind == "attn":
+            if self.cfg.window:
+                h, cache = self._windowed_extend(
+                    params["mixer"], h, cache, positions, valid
+                )
+            elif "ks" in cache:
+                h, cache = self.mixer.extend_quant(
+                    params["mixer"], h, cache, positions, valid
+                )
+            else:
+                h, ck, cv = self.mixer.extend(
+                    params["mixer"], h, cache["k"], cache["v"], positions, valid
+                )
+                cache = {"k": ck, "v": cv}
+        else:
+            h, cache = self.mixer.extend(params["mixer"], h, cache, valid)
+        x = x + h
+        if self.has_ffn:
+            h = self.norm2(params["norm2"], x)
+            if self.use_moe:
+                h, _ = self.ffn(params["ffn"], h)
+            else:
+                h = self.ffn(params["ffn"], h)
+            x = x + h
+        return x, cache
+
+    def _windowed_extend(self, params, x, cache, positions, valid):
+        """Chunked prefill against the sliding-window ring cache.
+
+        Writes cannot be applied before the attend here: a column's write
+        EVICTS the ring entry ``t`` positions back, which earlier columns
+        of the same chunk may still need (it is inside their window). So
+        queries attend the concatenation [old ring ; this chunk's fresh
+        K/V] — in-chunk keys come from the fresh tensors — and the ring is
+        updated afterwards. Ring writes keep one winner per ring slot (the
+        last valid column of each residue class, ``j >= n_new - t``);
+        shadowed and padding columns are dropped via an out-of-bounds
+        index, never an unordered duplicate scatter.
+        """
+        import math as _math
+
+        from repro.nn.attention import _attend_core, make_mask
+
+        mixer: Attention = self.mixer
+        b, c, _ = x.shape
+        t = cache["k"].shape[1]
+        window = self.cfg.window or t + 1
+        q, k, v = mixer._qkv(params, x, None, positions, positions)
+
+        # old-ring key positions, from the PRE-chunk frontier: ring slot j
+        # holds the largest written position p <= lengths-1 with p ≡ j (t)
+        last = positions[:, :1] - 1                  # (B, 1) frontier - 1
+        ring = jnp.arange(t)[None, :]
+        k_pos_old = last - jnp.mod(last - ring, t)   # (B, T); < 0 if empty
+        k_cat = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
+        v_cat = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+        mask_ring = make_mask(
+            positions, k_pos_old, causal=True, window=window,
+            k_valid=k_pos_old >= 0,
+        )
+        mask_chunk = make_mask(
+            positions, positions, causal=True, window=window,
+            k_valid=valid,
+        )
+        mask = jnp.concatenate([mask_ring, mask_chunk], axis=-1)
+        out = _attend_core(
+            mixer._group(q), k_cat, v_cat, mask, 1.0 / _math.sqrt(mixer.hd)
+        )
+        y = mixer.wo(params["wo"], out.reshape(b, c, mixer.n_heads * mixer.hd))
+
+        n_new = jnp.sum(valid, axis=1)
+        win = valid & (jnp.arange(c)[None, :] >= (n_new[:, None] - t))
+        bidx = jnp.arange(b)[:, None]
+        widx = jnp.where(win, positions % t, t)      # t == OOB -> dropped
+        ck = cache["k"].at[bidx, widx].set(k.astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[bidx, widx].set(v.astype(cache["v"].dtype), mode="drop")
+        return y, {"k": ck, "v": cv}
+
     def _windowed_decode(self, params, x, cache, lengths, slot):
         """Sliding-window decode against a ring-buffer cache of size t<=W.
 
@@ -508,29 +595,31 @@ class DecoderLM:
 
         return rec(cache)
 
-    def decode_step(self, params, tokens, caches, lengths):
-        """tokens: (B, 1) -> (logits (B, vocab), new caches)."""
-        x = self.embed(params["embed"], tokens)
+    def _walk_segments(self, params, x, caches, step_fn):
+        """Shared serving segment loop for decode_step/extend.
+
+        ``step_fn(block, layer_params, x, cache) -> (x, cache)`` is applied
+        once per layer. For scanned segments the stacked cache rides in the
+        CARRY and is updated with a dynamic_update_slice at the live layer
+        index: while-loop carries alias in place, so the step holds ONE
+        cache buffer. (As scan xs->ys the cache double-buffers — an extra
+        10.7 GB/device for the 32B config at 32k x 128.)
+        """
         new_caches = []
         for i, seg in enumerate(self.segments):
             p = params[f"seg{i}"]
             cache = caches[i]
             if not seg.scanned:
-                x, cache = seg.block.decode_step(p, x, cache, lengths=lengths)
+                x, cache = step_fn(seg.block, p, x, cache)
             elif self.cfg.force_unroll:
                 per_layer = []
                 for j in range(seg.n):
                     pl = jax.tree.map(lambda v: v[j], p)
                     cl = jax.tree.map(lambda v: v[j], cache)
-                    x, c2 = seg.block.decode_step(pl, x, cl, lengths=lengths)
+                    x, c2 = step_fn(seg.block, pl, x, cl)
                     per_layer.append(c2)
                 cache = jax.tree.map(lambda *ls: jnp.stack(ls), *per_layer)
             else:
-                # The stacked cache rides in the CARRY and is updated with
-                # a dynamic_update_slice at the live layer index: while-loop
-                # carries alias in place, so the decode step holds ONE cache
-                # buffer. (As scan xs->ys the cache double-buffers — an
-                # extra 10.7 GB/device for the 32B config at 32k x 128.)
                 def body(carry, pl):
                     h, full, idx = carry
                     cl = jax.tree.map(
@@ -551,7 +640,7 @@ class DecoderLM:
                     )
                     if needs_barrier:
                         cl = jax.lax.optimization_barrier(cl)
-                    h2, c2 = seg.block.decode_step(pl, h, cl, lengths=lengths)
+                    h2, c2 = step_fn(seg.block, pl, h, cl)
                     full = jax.tree.map(
                         lambda v, n: jax.lax.dynamic_update_index_in_dim(
                             v, n.astype(v.dtype), idx, 0
@@ -564,9 +653,62 @@ class DecoderLM:
                     body, (x, cache, jnp.int32(0)), p
                 )
             new_caches.append(cache)
+        return x, new_caches
+
+    def decode_step(self, params, tokens, caches, lengths):
+        """tokens: (B, 1) -> (logits (B, vocab), new caches)."""
+        x = self.embed(params["embed"], tokens)
+        x, new_caches = self._walk_segments(
+            params, x, caches,
+            lambda blk, pl, h, cl: blk.decode_step(pl, h, cl, lengths=lengths),
+        )
         h = self.final_norm(params["final_norm"], x)
         logits = self.logits(params, h)
         return logits[:, 0], new_caches, lengths + 1
+
+    def extend(self, params, tokens, caches, lengths, n_new):
+        """Chunked-prefill step: advance each slot by its next n_new[b]
+        prompt tokens against the shared decode caches.
+
+        tokens: (B, C) — column j of slot b carries the prompt token at
+        absolute position lengths[b] + j; columns >= n_new[b] are padding
+        (no cache write, no state advance, output discarded). Returns
+        (logits at each slot's LAST VALID column (B, vocab), caches,
+        lengths + n_new); a slot with n_new == 0 is untouched and its
+        logits row is meaningless.
+        """
+        b, c = tokens.shape
+        positions = lengths[:, None] + jnp.arange(c)[None, :]
+        valid = jnp.arange(c)[None, :] < n_new[:, None]
+        x = self.embed(params["embed"], tokens)
+        x, new_caches = self._walk_segments(
+            params, x, caches,
+            lambda blk, pl, h, cl: blk.extend(
+                pl, h, cl, positions=positions, valid=valid
+            ),
+        )
+        idx = jnp.clip(n_new - 1, 0, c - 1)
+        h_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        h = self.final_norm(params["final_norm"], h_last)
+        logits = self.logits(params, h)
+        return logits[:, 0], new_caches, lengths + n_new
+
+    def merge_caches(self, old, new, keep):
+        """Per-slot cache select: rows where ``keep`` (B,) is True take the
+        new cache, others keep the old — the engine uses this to confine a
+        batched decode step to its live-decoding slots (a prefilling
+        neighbor's caches must not see the step's garbage writes)."""
+        merged = []
+        for seg, o, n in zip(self.segments, old, new):
+            ax = 1 if seg.scanned else 0
+
+            def sel(ov, nv, ax=ax):
+                shape = [1] * ov.ndim
+                shape[ax] = keep.shape[0]
+                return jnp.where(keep.reshape(shape), nv.astype(ov.dtype), ov)
+
+            merged.append(jax.tree.map(sel, o, n))
+        return merged
 
 
 @dataclasses.dataclass
@@ -612,5 +754,14 @@ class _PatternBlock:
         for i, b in enumerate(self.blocks):
             x, out[f"b{i}"] = b.decode_step(
                 params[f"b{i}"], x, cache[f"b{i}"], lengths=lengths
+            )
+        return x, out
+
+    def extend(self, params, x, cache, *, positions, valid):
+        out = {}
+        for i, b in enumerate(self.blocks):
+            x, out[f"b{i}"] = b.extend(
+                params[f"b{i}"], x, cache[f"b{i}"],
+                positions=positions, valid=valid,
             )
         return x, out

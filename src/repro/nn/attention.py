@@ -268,6 +268,83 @@ class Attention:
         y = self.wo(params["wo"], out.reshape(b, 1, self.n_heads * self.hd))
         return y, cache_k, cache_v
 
+    def extend(
+        self,
+        params: dict,
+        x: jax.Array,              # (B, C, d)
+        cache_k: jax.Array,        # (B, T, K, hd)
+        cache_v: jax.Array,
+        positions: jax.Array,      # (B, C) absolute position per column
+        valid: jax.Array,          # (B, C) bool, False = padding column
+    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Chunked-prefill step: advance each row by its valid columns.
+
+        Column j of row b carries the token at absolute position
+        positions[b, j]; padding columns (valid False) scatter to an
+        out-of-bounds row index and are DROPPED, so the cache is only ever
+        written at true token offsets. Queries attend causally over the
+        just-updated cache — every key at position <= the query's position
+        has been written (by an earlier tick or this scatter), and the
+        causal mask excludes everything later, so stale rows beyond the
+        frontier are never read by a valid column.
+        """
+        b, c, _ = x.shape
+        t = cache_k.shape[1]
+        q, k, v = self._qkv(params, x, None, positions, positions)
+        bidx = jnp.arange(b)[:, None]
+        widx = jnp.where(valid, positions, t)        # t == out of bounds
+        cache_k = cache_k.at[bidx, widx].set(
+            k.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[bidx, widx].set(
+            v.astype(cache_v.dtype), mode="drop")
+        k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+        mask = make_mask(positions, k_pos, causal=True, window=self.window)
+        scale = 1.0 / math.sqrt(self.hd)
+        out = _attend_core(self._group(q), cache_k, cache_v, mask, scale)
+        y = self.wo(params["wo"], out.reshape(b, c, self.n_heads * self.hd))
+        return y, cache_k, cache_v
+
+    def extend_quant(
+        self,
+        params: dict,
+        x: jax.Array,              # (B, C, d)
+        cache: dict,               # {"k","v" int8, "ks","vs" f32}
+        positions: jax.Array,      # (B, C)
+        valid: jax.Array,          # (B, C)
+    ) -> Tuple[jax.Array, dict]:
+        """Chunked-prefill step against the int8 KV cache: quantize the new
+        rows (per-token, per-head scales — the same per-row quantization a
+        monolithic prefill would apply), drop padding-column writes, attend
+        through the scale-factored path (no dequantized cache tensor)."""
+        b, c, _ = x.shape
+        t = cache["k"].shape[1]
+        q, k, v = self._qkv(params, x, None, positions, positions)
+        kq, ks = quantize_kv(k)                # (B, C, K, hd) int8, (B, C, K)
+        vq, vs = quantize_kv(v)
+        bidx = jnp.arange(b)[:, None]
+        widx = jnp.where(valid, positions, t)
+        cache = {
+            "k": cache["k"].at[bidx, widx].set(kq, mode="drop"),
+            "v": cache["v"].at[bidx, widx].set(vq, mode="drop"),
+            "ks": cache["ks"].at[bidx, widx].set(ks, mode="drop"),
+            "vs": cache["vs"].at[bidx, widx].set(vs, mode="drop"),
+        }
+        cd = v.dtype
+        k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+        mask = make_mask(positions, k_pos, causal=True, window=self.window)
+        qg = self._group(q)                           # (B, C, K, G, hd)
+        scores = jnp.einsum(
+            "bskgh,btkh->bkgst", qg, cache["k"].astype(cd)
+        ).astype(jnp.float32)
+        scores = scores * cache["ks"].transpose(0, 2, 1)[:, :, None, None, :]
+        scores = scores * (1.0 / math.sqrt(self.hd))
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+        pv = probs * cache["vs"].transpose(0, 2, 1)[:, :, None, None, :].astype(cd)
+        out = jnp.einsum("bkgst,btkh->bskgh", pv, cache["v"].astype(cd))
+        y = self.wo(params["wo"], out.reshape(b, c, self.n_heads * self.hd))
+        return y, cache
+
     def decode_step_quant(
         self,
         params: dict,

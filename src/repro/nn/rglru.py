@@ -109,6 +109,50 @@ class RGLRUBlock:
             "conv": jnp.zeros((batch, self.conv_width - 1, self.width), dtype),
         }
 
+    def extend(self, params: dict, u: jax.Array, state: dict, valid: jax.Array):
+        """Chunked-prefill step: u (B, C, d) advances (h, conv window) by
+        each row's count of valid columns.
+
+        Projections and gates run over the whole block (m=C matmul path);
+        only the h recurrence is scanned, with padding columns leaving the
+        carry untouched. The conv at column j reads the slot's stored
+        (w-1)-deep tail plus columns <= j, so valid columns (a prefix)
+        never see padding input.
+        """
+        b, c, _ = u.shape
+        cd = self.ctx.compute_dtype
+        cw = self.conv_width
+        xin = self.in_x(params["in_x"], u)                       # (B, C, w)
+        xcat = jnp.concatenate([state["conv"], xin], axis=1)     # (B, w-1+C, w)
+        xf = xcat.astype(jnp.float32)
+        w = params["conv_w"]
+        xi = sum(
+            xf[:, i : i + c, :] * w[i][None, None, :] for i in range(cw)
+        ) + params["conv_b"]
+        a, bg = self._gates(params, xi)                          # (B, C, w)
+
+        def step(hs, inp):
+            a_t, b_t, v_t = inp
+            hs = jnp.where(v_t[:, None], a_t * hs + b_t, hs)
+            return hs, hs
+
+        h0 = state["h"].astype(jnp.float32)
+        hfin, hs = jax.lax.scan(
+            step, h0,
+            (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bg, 1, 0),
+             jnp.moveaxis(valid, 1, 0)),
+        )
+        hseq = jnp.moveaxis(hs, 0, 1)                            # (B, C, w)
+        gate = jax.nn.gelu(self.in_gate(params["in_gate"], u))
+        y = self.out(params["out"], hseq.astype(cd) * gate)
+        # new conv tail = the w-1 inputs ending at each row's last valid
+        # column: rows [n_new, n_new + w - 2] of xcat (n_new == 0 keeps the
+        # stored tail verbatim)
+        n_new = jnp.sum(valid, axis=1)
+        gi = n_new[:, None] + jnp.arange(cw - 1)[None, :]
+        tail = jnp.take_along_axis(xf, gi[:, :, None], axis=1)
+        return y, {"h": hfin, "conv": tail.astype(state["conv"].dtype)}
+
     def decode_step(self, params: dict, u: jax.Array, state: dict):
         """u: (B, 1, d); returns (y (B,1,d), new state)."""
         cd = self.ctx.compute_dtype

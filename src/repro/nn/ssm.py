@@ -188,6 +188,64 @@ class Mamba2Block:
             "conv": jnp.zeros((batch, self.conv_width - 1, self.d_conv), dtype),
         }
 
+    def extend(self, params: dict, u: jax.Array, state: dict, valid: jax.Array):
+        """Chunked-prefill step: u (B, C, d_model) advances the recurrent
+        state by each row's count of valid columns.
+
+        The in/out projections run once over the whole block (the m=C
+        matmul path); the per-token recurrence is a lax.scan of exactly
+        the ``decode_step`` update, with padding columns (valid False)
+        leaving the (h, conv) carry untouched — so any chunking of the
+        same token stream walks the state through the same sequence of
+        values, which is what the chunk-size parity tests rely on.
+        """
+        b, c, _ = u.shape
+        cd = self.ctx.compute_dtype
+        di, g, n, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        zxbcdt = self.in_proj(params["in_proj"], u)
+        z = zxbcdt[..., :di]
+        xc_new = zxbcdt[..., di : di + self.d_conv]
+        dt_raw = zxbcdt[..., di + self.d_conv :]
+        A = -jnp.exp(params["A_log"])
+        w = params["conv_w"]
+        rep = h // g
+
+        def step(carry, inp):
+            hs, conv = carry
+            xc_t, dt_t, v_t = inp          # (B, d_conv), (B, h), (B,)
+            win = jnp.concatenate([conv, xc_t[:, None, :]], axis=1)
+            xc = jax.nn.silu(
+                jnp.einsum("bwd,wd->bd", win.astype(jnp.float32), w)
+                + params["conv_b"]
+            )
+            x = xc[..., :di].reshape(b, h, self.head_dim)
+            Bm = jnp.repeat(xc[..., di : di + g * n].reshape(b, g, n), rep, axis=1)
+            Cm = jnp.repeat(xc[..., di + g * n :].reshape(b, g, n), rep, axis=1)
+            dt = jax.nn.softplus(dt_t.astype(jnp.float32) + params["dt_bias"])
+            decay = jnp.exp(dt * A)[..., None, None]
+            h_upd = hs * decay + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm, x)
+            y = jnp.einsum("bhn,bhpn->bhp", Cm, h_upd)
+            y = y + params["D"][None, :, None] * x
+            hs = jnp.where(v_t[:, None, None, None], h_upd, hs)
+            conv = jnp.where(v_t[:, None, None], win[:, 1:], conv)
+            return (hs, conv), y.reshape(b, di)
+
+        (hstate, conv), ys = jax.lax.scan(
+            step,
+            (state["h"], state["conv"]),
+            (
+                jnp.moveaxis(xc_new, 1, 0),
+                jnp.moveaxis(dt_raw, 1, 0),
+                jnp.moveaxis(valid, 1, 0),
+            ),
+        )
+        y = jnp.moveaxis(ys, 0, 1).astype(cd) * jax.nn.silu(z)   # (B, C, di)
+        var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+             * params["norm_scale"]).astype(cd)
+        out = self.out_proj(params["out_proj"], y)
+        return out, {"h": hstate, "conv": conv}
+
     def decode_step(self, params: dict, u: jax.Array, state: dict):
         """u: (B, 1, d_model); O(1) recurrent update."""
         b = u.shape[0]

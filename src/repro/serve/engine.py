@@ -1,32 +1,44 @@
-"""Batched serving engine: slot-based continuous batching over
-(prefill, decode_step) with packed-tile weights.
+"""Batched serving engine: slot-based continuous batching with CHUNKED
+prefill fused into the decode tick (Sarathi-style), over packed-tile
+weights.
 
-Design (vLLM-style, adapted to fixed-shape XLA):
+Design (vLLM/Sarathi-style, adapted to fixed-shape XLA):
 
-* ``n_slots`` concurrent sequences share one decode step of static shape
-  (B=n_slots, 1). A request occupies a slot from admission to completion.
-* Admission runs prefill for the incoming prompt (LEFT-padded to a fixed
-  bucket so prefill compiles once per bucket and the last position is the
-  true final prompt token), then *splices* the prompt's caches into the
-  slot's rows of the shared decode cache.
-* Each engine tick = one jitted (decode step + per-slot sampling) for all
-  live slots + host-side bookkeeping (EOS/max_tokens retirement, new
-  admissions). Sampling params live in per-slot ``(n_slots,)`` arrays
-  populated at admission and fed to the tick as runtime values, so every
-  token honors its request's temperature/top-k, nothing recompiles when a
-  new request lands in a slot, and only token ids cross back to host.
-  Dead slots run the same step (masked out) — shapes never change.
-* Weights are SERVE-form (packed tiles + alphas, repro.serve.weights); the
-  model's serve path applies them through the tile-reuse math, so HBM holds
-  q bits per tiled layer, not N.
-* Passing ``mesh=`` places the weights with the serving sharding rules
-  (packed tile rows over the model axis — 1/TP tile bytes per device) and
-  traces prefill/decode under those rules, so the tile-reuse matmuls run
-  tensor-parallel through the shard_map wrappers in kernels/ops.py
-  (DESIGN.md §5). Without a mesh nothing touches device placement APIs.
-
-The engine is exact on CPU with reduced configs (integration tests) and is
-the same code path the dry-run compiles for the production mesh.
+* ``n_slots`` concurrent sequences share the decode caches. A request
+  occupies a slot from admission to completion and moves through two
+  phases: PREFILL (its prompt is streamed into the caches
+  ``chunk_tokens`` columns at a time by a fixed-shape ``model.extend``
+  call at per-slot offsets) then DECODE (one token per tick through the
+  fixed-shape ``(n_slots, 1)`` decode step). Admission is O(1)
+  bookkeeping — no model call — so a long prompt never stalls the tick
+  loop the way the old admission-time monolithic prefill did.
+* Each engine tick = scheduler + at most two jitted calls:
+    1. a token-budget pass hands out ``chunk_tokens`` per tick,
+       decode-priority: every decoding slot is charged 1 token first,
+       the remainder goes to prefilling slots in admission order (the
+       head-of-queue prefill always gets >= 1 so it cannot starve).
+    2. ``_extend`` advances the scheduled prefill chunks (m = chunk rows
+       per slot -> the matmul kernel path),
+    3. ``_decode`` advances the decoding slots (m = n_slots rows -> the
+       matvec kernel path); its writes are confined to decoding slots by
+       a per-slot cache merge, so concurrent prefill state is untouched.
+  Both calls have static shapes — nothing recompiles as requests come
+  and go, and only token ids cross back to host.
+* Sampling runs inside the jitted calls against per-slot ``(n_slots,)``
+  temperature/top-k arrays AND per-slot PRNG keys: token t of request r
+  is sampled with ``fold_in(fold_in(PRNGKey(seed), r.rid), t)``, so a
+  request's tokens are a pure function of (weights, prompt, params,
+  seed, rid) — independent of chunk size, batch neighbors, and
+  scheduling order. That invariant is what the chunked-vs-monolithic
+  parity tests pin down.
+* Prompts are NOT padded into the context: slot positions start at 0 and
+  only true prompt tokens enter the caches (padding columns of a chunk
+  are dropped before the cache write). The old per-bucket left-padded
+  prefill — and its per-admission full-cache splice — is gone; the only
+  compiled prefill shape is the ``(n_slots, chunk_tokens)`` extend.
+* Weights are SERVE-form (packed tiles + alphas, repro.serve.weights);
+  passing ``mesh=`` places them with the serving sharding rules and
+  traces extend/decode under those rules (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -34,18 +46,83 @@ import contextlib
 import dataclasses
 import itertools
 import queue
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import axis_rules, param_shardings
-from repro.serve.sampling import (
-    SamplingParams,
-    sample_logits,
-    sample_logits_batch,
-)
+from repro.serve.sampling import SamplingParams, sample_logits_batch
+
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+def _tick_fns(model):
+    """The three jitted serving entry points for ``model``, built once and
+    cached ON the model object: every engine over the same model (replica
+    pools, re-created engines, the test matrix's chunk-size sweeps) reuses
+    one trace cache instead of recompiling per engine. The functions close
+    over nothing but the model; batch width, chunk width, and — under a
+    mesh — input shardings are ordinary retrace keys."""
+    cached = getattr(model, "_serve_tick_fns", None)
+    if cached is not None:
+        return cached
+
+    def _row_keys(base_keys, counts):
+        return jax.vmap(jax.random.fold_in)(base_keys, counts)
+
+    def _decode_tick(params, tokens, caches, lengths, active,
+                     temps, topks, base_keys, counts):
+        """decode step + per-slot sampling fused under one jit, confined
+        to the ``active`` decoding slots: the (n_slots, vocab) logits
+        never leave the device and prefilling/free slots keep their
+        caches, lengths, and last token bit-identical."""
+        logits, new_caches, new_lengths = model.decode_step(
+            params, tokens, caches, lengths
+        )
+        nxt = sample_logits_batch(
+            logits, _row_keys(base_keys, counts),
+            temperature=temps, top_k=topks,
+        )
+        caches = model.merge_caches(caches, new_caches, active)
+        lengths = jnp.where(active, new_lengths, lengths)
+        nxt = jnp.where(active, nxt, tokens[:, 0])
+        return nxt, caches, lengths
+
+    def _extend_tick(params, block, caches, lengths, n_new,
+                     temps, topks, base_keys, counts):
+        """one chunked-prefill step for every scheduled slot + sampling of
+        each slot's candidate first token (the host keeps it only for
+        slots whose prompt just completed)."""
+        logits, caches, lengths = model.extend(
+            params, block, caches, lengths, n_new
+        )
+        toks = sample_logits_batch(
+            logits, _row_keys(base_keys, counts),
+            temperature=temps, top_k=topks,
+        )
+        return toks, caches, lengths
+
+    def _reset_slot(caches, slot):
+        """Zero one slot's rows across every cache family: recurrent/SSM
+        state MUST start from zeros (extend continues from the slot's
+        state), attention rows are cleared for hygiene."""
+        out = []
+        for seg, c in zip(model.segments, caches):
+            ax = 1 if seg.scanned else 0
+            out.append(jax.tree.map(
+                lambda v: v.at[(slice(None),) * ax + (slot,)].set(
+                    jnp.zeros((), v.dtype)
+                ),
+                c,
+            ))
+        return out
+
+    fns = (jax.jit(_decode_tick), jax.jit(_extend_tick), jax.jit(_reset_slot))
+    model._serve_tick_fns = fns
+    return fns
 
 
 @dataclasses.dataclass
@@ -57,35 +134,34 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: Optional[str] = None  # "eos" | "length" once done
+    admit_step: Optional[int] = None     # engine tick of admission
+    token_steps: List[int] = dataclasses.field(default_factory=list)
+    # engine tick at which each output token was emitted: token_steps[0]
+    # is the TTFT tick; successive gaps are per-token inter-token ticks
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     n_slots: int = 4
     max_len: int = 256                  # cache capacity per slot
-    prefill_buckets: Tuple[int, ...] = (32, 128)
+    chunk_tokens: int = 32              # extend width == per-tick token budget
     temperature: float = 0.0
     top_k: Optional[int] = None
     seed: int = 0
 
     def __post_init__(self):
-        """Fail fast on a bad bucket ladder. An oversized bucket would let
-        ``submit()`` accept a prompt whose prefill cache cannot be spliced
-        into the ``max_len`` decode cache (corruption or a shape error deep
-        inside the tick loop); an empty/unsorted ladder breaks bucketing."""
-        b = tuple(self.prefill_buckets)
-        if not b:
-            raise ValueError("prefill_buckets must be non-empty")
-        if any(x <= 0 for x in b):
-            raise ValueError(f"prefill_buckets must be positive: {b}")
-        if list(b) != sorted(set(b)):
+        """Fail fast on a bad chunk width. chunk_tokens is both the extend
+        call's compiled column count and the per-tick token budget; a
+        non-positive value wedges the scheduler and one past max_len could
+        scatter past the cache."""
+        if self.chunk_tokens <= 0:
             raise ValueError(
-                f"prefill_buckets must be strictly increasing: {b}"
+                f"chunk_tokens must be positive: {self.chunk_tokens}"
             )
-        if b[-1] > self.max_len:
+        if self.chunk_tokens > self.max_len:
             raise ValueError(
-                f"prefill bucket {b[-1]} exceeds max_len {self.max_len}: "
-                "a prompt admitted through it could not fit the decode cache"
+                f"chunk_tokens {self.chunk_tokens} exceeds max_len "
+                f"{self.max_len}: a chunk could not fit the decode cache"
             )
 
 
@@ -112,8 +188,13 @@ class BatchedEngine:
         self._queue: "queue.Queue[Request]" = queue.Queue()
         self._live: Dict[int, Request] = {}      # slot -> request
         self._free = list(range(cfg.n_slots))
-        self._key = jax.random.PRNGKey(cfg.seed)
         self._rid = itertools.count()
+        self._root_key = jax.random.PRNGKey(cfg.seed)
+
+        # per-slot phase machine (host side)
+        self._phase = [None] * cfg.n_slots       # None | PREFILL | DECODE
+        self._offsets = np.zeros((cfg.n_slots,), np.int64)  # prompt consumed
+        self._admit_order: List[int] = []        # prefill scheduling FIFO
 
         cache_dtype = getattr(model.ctx, "compute_dtype", jnp.bfloat16)
         self.caches = model.init_caches(cfg.n_slots, cfg.max_len, cache_dtype)
@@ -121,28 +202,17 @@ class BatchedEngine:
         self.tokens = jnp.zeros((cfg.n_slots, 1), jnp.int32)
         # Per-slot sampling params, populated at admission from the
         # request's resolved SamplingParams (None sentinels -> ServeConfig
-        # defaults). temps/topks ride into the jitted tick as runtime
+        # defaults). temps/topks/keys ride into the jitted calls as runtime
         # arrays; eos ids stay host-side for retirement bookkeeping.
         self.temps = jnp.zeros((cfg.n_slots,), jnp.float32)
         self.topks = jnp.zeros((cfg.n_slots,), jnp.int32)
         self._eos_ids = np.full((cfg.n_slots,), -1, np.int64)
+        # per-slot request key + emitted-token count: token t of a request
+        # samples with fold_in(request_key, t), independent of scheduling
+        self._slot_keys = jnp.zeros((cfg.n_slots, 2), jnp.uint32)
+        self._counts = np.zeros((cfg.n_slots,), np.int64)
 
-        def _tick(params, tokens, caches, lengths, temps, topks, key):
-            """decode step + per-slot sampling fused under one jit: the
-            (n_slots, vocab) logits never leave the device."""
-            logits, caches, lengths = model.decode_step(
-                params, tokens, caches, lengths
-            )
-            nxt = sample_logits_batch(
-                logits, key, temperature=temps, top_k=topks
-            )
-            return nxt, caches, lengths
-
-        self._decode = jax.jit(_tick)
-        self._prefill = {
-            b: jax.jit(lambda p, batch, b=b: model.prefill(p, batch, cfg.max_len))
-            for b in cfg.prefill_buckets
-        }
+        self._decode, self._extend, self._reset = _tick_fns(model)
         self.steps = 0
 
     def _mesh_ctx(self):
@@ -156,10 +226,14 @@ class BatchedEngine:
         self, prompt, params: Optional[SamplingParams] = None
     ) -> Request:
         prompt = np.asarray(prompt, np.int32)
-        # Validate against the bucket ladder HERE, not at admission: a
-        # too-long prompt then fails fast without consuming a slot or
-        # wedging the tick loop mid-admission.
-        self._bucket(len(prompt))
+        # Validate HERE, not at admission: a bad prompt then fails fast
+        # without consuming a slot or wedging the tick loop mid-admission.
+        if prompt.ndim != 1 or len(prompt) == 0:
+            raise ValueError("prompt must be a non-empty 1-D token sequence")
+        if len(prompt) > self.cfg.max_len:
+            raise ValueError(
+                f"prompt len {len(prompt)} exceeds max_len {self.cfg.max_len}"
+            )
         req = Request(
             rid=next(self._rid),
             prompt=prompt,
@@ -167,14 +241,6 @@ class BatchedEngine:
         )
         self._queue.put(req)
         return req
-
-    def _bucket(self, n: int) -> int:
-        for b in self.cfg.prefill_buckets:
-            if n <= b:
-                return b
-        raise ValueError(
-            f"prompt len {n} exceeds largest bucket {self.cfg.prefill_buckets[-1]}"
-        )
 
     def _maybe_retire(self, slot: int, req: Request, tok: int) -> bool:
         """Retire a just-extended request. EOS is checked before the length
@@ -188,6 +254,9 @@ class BatchedEngine:
         req.done = True
         self._live.pop(slot, None)
         self._free.append(slot)
+        self._phase[slot] = None
+        if slot in self._admit_order:
+            self._admit_order.remove(slot)
         # Reset the slot's sampling params: a stale temperature/top-k on a
         # dead slot would keep tripping jnp.any(...) in the batch sampler
         # and defeat its all-greedy / no-top-k fast paths for every later
@@ -195,94 +264,144 @@ class BatchedEngine:
         self.temps = self.temps.at[slot].set(0.0)
         self.topks = self.topks.at[slot].set(0)
         self._eos_ids[slot] = -1
+        self._counts[slot] = 0
         return True
 
     def _admit(self, slot: int, req: Request):
-        n = len(req.prompt)
-        b = self._bucket(n)
-        toks = np.zeros((1, b), np.int32)
-        # LEFT-pad so the last position is the true final prompt token —
-        # left pads attend as ordinary (zero-token) context, which keeps the
-        # prefill a single fixed-shape call per bucket.
-        toks[0, b - n:] = req.prompt
-        logits, caches, _ = self._prefill[b](self.params, {"tokens": toks})
-        # splice the prompt caches into this slot's rows
-        self.caches = jax.tree.map(
-            lambda dst, src: _splice_cache(dst, src, slot), self.caches, caches
-        )
-        self.lengths = self.lengths.at[slot].set(b)
+        """O(1) admission: claim the slot and zero its state — the prompt
+        itself streams in through subsequent extend ticks."""
+        self._live[slot] = req
+        self._phase[slot] = PREFILL
+        self._offsets[slot] = 0
+        self._admit_order.append(slot)
+        req.admit_step = self.steps
+        self.lengths = self.lengths.at[slot].set(0)
+        self.caches = self._reset(self.caches, slot)
         # Resolve the request's sampling params against the engine defaults
         # (is-None sentinels: an explicit temperature=0.0 / top_k=0 wins
         # over a stochastic ServeConfig default) and pin them to the slot —
-        # every subsequent decode tick reads them from the per-slot arrays.
+        # every token of this request reads them from the per-slot arrays.
         res = req.params.resolve(self.cfg.temperature, self.cfg.top_k)
         self.temps = self.temps.at[slot].set(res.temperature)
         self.topks = self.topks.at[slot].set(res.top_k)
         self._eos_ids[slot] = res.eos_id
-        self._key, sub = jax.random.split(self._key)
-        # Prefill-token sampling: the resolved params are static scalars
-        # here, so the scalar sampler applies (same masked logits and key
-        # stream as the batch sampler — tokens are identical).
-        first = sample_logits(
-            logits, sub, temperature=res.temperature, top_k=res.top_k,
+        self._slot_keys = self._slot_keys.at[slot].set(
+            jax.random.fold_in(self._root_key, req.rid)
         )
-        tok = int(first[0])
-        req.output.append(tok)
-        self.tokens = self.tokens.at[slot, 0].set(first[0])
-        self._live[slot] = req
-        # the prefill token itself may already satisfy EOS or max_tokens=1
-        self._maybe_retire(slot, req, tok)
+        self._counts[slot] = 0
 
     # ------------------------------------------------------------------
+    def _schedule_prefill(self, n_decoding: int) -> Dict[int, int]:
+        """Token-budget pass: chunk_tokens per tick, decode-priority.
+
+        Every decoding slot is charged one token up front; what remains
+        goes to prefilling slots in admission order, each capped at the
+        chunk width. The head of the prefill queue always receives at
+        least one token so prefill progresses even when decoding slots
+        consume the whole budget."""
+        c = self.cfg.chunk_tokens
+        budget = c - n_decoding
+        takes: Dict[int, int] = {}
+        first = True
+        for slot in self._admit_order:
+            if self._phase[slot] != PREFILL:
+                continue
+            rem = len(self._live[slot].prompt) - int(self._offsets[slot])
+            floor = 1 if first else 0
+            take = min(c, rem, max(budget, floor))
+            first = False
+            if take <= 0:
+                continue
+            takes[slot] = take
+            budget -= take
+        return takes
+
+    def _run_extend(self, takes: Dict[int, int]):
+        cfg = self.cfg
+        block = np.zeros((cfg.n_slots, cfg.chunk_tokens), np.int32)
+        n_new = np.zeros((cfg.n_slots,), np.int32)
+        for slot, take in takes.items():
+            off = int(self._offsets[slot])
+            block[slot, :take] = self._live[slot].prompt[off:off + take]
+            n_new[slot] = take
+        toks, self.caches, self.lengths = self._extend(
+            self.params, jnp.asarray(block), self.caches, self.lengths,
+            jnp.asarray(n_new), self.temps, self.topks,
+            self._slot_keys, jnp.asarray(self._counts),
+        )
+        toks_host = np.asarray(toks)
+        for slot, take in takes.items():
+            req = self._live[slot]
+            self._offsets[slot] += take
+            if self._offsets[slot] == len(req.prompt):
+                # prompt complete: the chunk's last-column logits are the
+                # request's first sampled token
+                self._phase[slot] = DECODE
+                self._admit_order.remove(slot)
+                tok = int(toks_host[slot])
+                req.output.append(tok)
+                req.token_steps.append(self.steps)
+                self._counts[slot] += 1
+                self.tokens = self.tokens.at[slot, 0].set(tok)
+                self._maybe_retire(slot, req, tok)
+
+    def _run_decode(self, decoding: List[int]):
+        active = np.zeros((self.cfg.n_slots,), bool)
+        active[decoding] = True
+        nxt, self.caches, self.lengths = self._decode(
+            self.params, self.tokens, self.caches, self.lengths,
+            jnp.asarray(active), self.temps, self.topks,
+            self._slot_keys, jnp.asarray(self._counts),
+        )
+        nxt_host = np.asarray(nxt)
+        self.tokens = nxt[:, None]
+        for slot in decoding:
+            req = self._live[slot]
+            tok = int(nxt_host[slot])
+            req.output.append(tok)
+            req.token_steps.append(self.steps)
+            self._counts[slot] += 1
+            self._maybe_retire(slot, req, tok)
+
     def step(self):
-        """One engine tick: admissions + a single batched decode step."""
+        """One engine tick: admissions + scheduled prefill chunks + one
+        batched decode step. Every live decoding slot emits exactly one
+        token per tick regardless of concurrent prefill (the fairness
+        invariant); a prefilling slot emits its first token on the tick
+        its final chunk lands."""
         with self._mesh_ctx():
             while self._free and not self._queue.empty():
                 self._admit(self._free.pop(0), self._queue.get())
             if not self._live:
                 return
-            self._key, sub = jax.random.split(self._key)
-            nxt, self.caches, self.lengths = self._decode(
-                self.params, self.tokens, self.caches, self.lengths,
-                self.temps, self.topks, sub,
-            )
-        nxt_host = np.asarray(nxt)
-        self.tokens = nxt[:, None]
-        for slot, req in list(self._live.items()):
-            tok = int(nxt_host[slot])
-            req.output.append(tok)
-            self._maybe_retire(slot, req, tok)
+            decoding = [s for s in range(self.cfg.n_slots)
+                        if self._phase[s] == DECODE]
+            takes = self._schedule_prefill(len(decoding))
+            if takes:
+                self._run_extend(takes)
+            if decoding:
+                self._run_decode(decoding)
         self.steps += 1
 
-    def run_until_drained(self, max_steps: int = 10_000) -> int:
+    def run_until_drained(self, max_steps: int = 10_000, on_tick=None) -> int:
+        """Step until every submitted request completes; returns the tick
+        count. ``on_tick(engine)`` runs after each tick — drivers hook it
+        for per-tick wall-clock latency accounting without forfeiting the
+        bounded-steps wedge diagnostics below."""
         for i in range(max_steps):
             if self._queue.empty() and not self._live:
                 return i
             self.step()
-        raise RuntimeError("engine did not drain")
-
-
-# ---------------------------------------------------------------------------
-def _splice_cache(dst: jax.Array, src: jax.Array, slot: int) -> jax.Array:
-    """Insert a B=1 prefill cache leaf into row ``slot`` of the engine cache.
-
-    Leaves may carry a leading layer-stack dim: dst (L, B, ...) vs src
-    (L, 1, ...), or be unstacked: dst (B, ...) vs src (1, ...). The batch
-    axis is wherever dst.shape and src.shape first differ.
-    """
-    if dst.ndim != src.ndim:
-        raise ValueError(f"cache rank mismatch {dst.shape} vs {src.shape}")
-    batch_axis = None
-    for i, (d, s) in enumerate(zip(dst.shape, src.shape)):
-        if d != s:
-            batch_axis = i
-            break
-    if batch_axis is None:  # shapes equal (n_slots == 1)
-        return src.astype(dst.dtype)
-    # time axes may also differ (prefill cache padded to max_len already by
-    # model._pad_cache, so only batch should differ)
-    idx = [slice(None)] * dst.ndim
-    idx[batch_axis] = slot
-    return dst.at[tuple(idx)].set(
-        jnp.squeeze(src, axis=batch_axis).astype(dst.dtype)
-    )
+            if on_tick is not None:
+                on_tick(self)
+        slots = ", ".join(
+            f"slot {s}: rid={r.rid} {self._phase[s]}"
+            f"@{int(self._offsets[s])}/{len(r.prompt)}"
+            f" ({len(r.output)}/{r.params.max_tokens} tok)"
+            for s, r in sorted(self._live.items())
+        )
+        raise RuntimeError(
+            f"engine did not drain after {max_steps} steps: "
+            f"{self._queue.qsize()} queued, {len(self._live)} live — "
+            f"{slots or 'no live slots'}"
+        )

@@ -2,12 +2,17 @@
 
 Two entry points:
 
-* ``sample_logits``       — static scalar config, one sampler per jit
-  specialization. Kept for single-stream callers and tests.
-* ``sample_logits_batch`` — per-row ``(B,)`` temperature / top-k arrays as
-  *runtime* values, so a continuous-batching engine can serve slots with
-  different request params from ONE jitted decode tick (no recompile when
-  a new request lands in a slot, and only token ids cross back to host).
+* ``sample_logits``       — static scalar config, one shared key for the
+  whole batch. Kept for single-stream callers and tests.
+* ``sample_logits_batch`` — per-row ``(B,)`` temperature / top-k arrays
+  AND per-row ``(B, 2)`` PRNG keys as *runtime* values, so a
+  continuous-batching engine can serve slots with different request
+  params from ONE jitted tick. Row ``i`` samples exactly what
+  ``sample_logits(logits[i:i+1], keys[i], ...)`` would: the engine keys
+  each row from its request's own key stream (``fold_in(request_key,
+  token_index)``), which makes every request's tokens independent of
+  scheduling order, batch composition, and prefill chunking — the
+  invariant the chunked-vs-monolithic parity tests pin down.
 
 ``SamplingParams`` fields default to ``None`` sentinels meaning "inherit
 the engine default" — an explicit ``temperature=0.0`` (greedy) or
@@ -76,20 +81,32 @@ def sample_logits(
 
 def sample_logits_batch(
     logits: jax.Array,
-    key: jax.Array,
+    keys: jax.Array,
     *,
     temperature: jax.Array,
     top_k: jax.Array,
 ) -> jax.Array:
-    """Row-wise sampling with per-row params as runtime arrays.
+    """Row-wise sampling with per-row params AND per-row keys as runtime
+    arrays.
 
-    logits (B, V); temperature (B,) float (<= 0 -> greedy row); top_k (B,)
-    int32 (0 or >= V -> no restriction). Returns token ids (B,) int32.
-    Greedy rows ignore the key, so greedy requests are deterministic even
-    when batched next to stochastic ones.
+    logits (B, V); keys (B, 2) uint32 — one PRNG key per row; temperature
+    (B,) float (<= 0 -> greedy row); top_k (B,) int32 (0 or >= V -> no
+    restriction). Returns token ids (B,) int32.
+
+    Row i reproduces ``sample_logits(logits[i:i+1], keys[i], ...)``
+    bit-for-bit: the stochastic path is the same Gumbel-argmax that
+    ``jax.random.categorical`` computes, with row i's noise drawn from
+    keys[i] alone. Greedy rows ignore their key entirely, so greedy
+    requests are deterministic even when batched next to stochastic ones.
     """
     lf = logits.astype(jnp.float32)
-    v = lf.shape[-1]
+    b, v = lf.shape
+    if keys.shape[:1] != (b,) or keys.ndim != 2:
+        raise ValueError(
+            f"keys must be one PRNG key per row, shape ({b}, 2); got "
+            f"{keys.shape} — a single shared key no longer identifies "
+            "which request's stream each row consumes"
+        )
     greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
 
     temperature = temperature.astype(jnp.float32)
@@ -118,12 +135,16 @@ def sample_logits_batch(
         masked = jax.lax.cond(
             jnp.any(restrict), _with_topk, lambda s: s, scaled
         )
-        sampled = jax.random.categorical(key, masked, axis=-1)
-        return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)
+        # categorical(key, row) == argmax(row + gumbel(key, row.shape)):
+        # drawing each row's Gumbel noise from its own key keeps rows
+        # independent of their batch neighbors (and of batch position).
+        noise = jax.vmap(lambda kk: jax.random.gumbel(kk, (v,)))(keys)
+        sampled = jnp.argmax(masked + noise, axis=-1).astype(jnp.int32)
+        return jnp.where(temperature > 0.0, sampled, greedy)
 
     # All-greedy batches (the ServeConfig default) skip sampling entirely:
     # the decode tick then costs one argmax, same as before sampling moved
-    # on-device — the sort/categorical only run when a live slot asks.
+    # on-device — the sort/gumbel only run when a live slot asks.
     return jax.lax.cond(
         jnp.any(temperature > 0.0), _stochastic, lambda _: greedy, None
     )

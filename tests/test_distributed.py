@@ -1,13 +1,17 @@
 """Distributed runtime: sharding rules, gradient compression, GPipe.
 
 Multi-device cases run in a subprocess with 8 forced host devices (the
-main pytest process must stay single-device per the dry-run contract)."""
+main pytest process must stay single-device per the dry-run contract).
+They carry the ``subprocess`` marker so CI runs them in their own lane
+(`-m subprocess`) while the tier-1 lane stays fast (`-m "not
+subprocess"`); a plain ``pytest`` still runs everything."""
 import subprocess
 import sys
 import textwrap
 
 import jax
 import numpy as np
+import pytest
 
 
 from repro.distributed.compression import (
@@ -58,6 +62,7 @@ class TestCodecs:
         assert wire_bits("ef_sign", n) < wire_bits("int8", n) < wire_bits("none", n)
 
 
+@pytest.mark.subprocess
 class TestShardingRules:
     def test_divisible_spec_drops_ragged(self):
         run_subprocess("""
@@ -83,6 +88,7 @@ class TestShardingRules:
         """)
 
 
+@pytest.mark.subprocess
 class TestCompressedDP:
     def test_ef_sign_dp_converges(self):
         """Explicit-DP shard_map step with EF-sign reaches the same loss
@@ -121,6 +127,7 @@ class TestCompressedDP:
         """)
 
 
+@pytest.mark.subprocess
 class TestGPipe:
     def test_pipeline_matches_sequential(self):
         """4-stage GPipe output == running the stages sequentially."""
@@ -182,6 +189,7 @@ class TestGPipe:
         """)
 
 
+@pytest.mark.subprocess
 class TestShardedServe:
     def test_tp_logits_parity_and_tile_bytes(self):
         """Tensor-parallel serve (tile rows sharded over a 4-way model
@@ -313,7 +321,7 @@ class TestShardedServe:
         ]:
             eng = BatchedEngine(
                 sm, sp,
-                ServeConfig(n_slots=3, max_len=64, prefill_buckets=(8, 16),
+                ServeConfig(n_slots=3, max_len=64, chunk_tokens=8,
                             temperature=0.7, seed=11),
                 mesh=mesh,
             )
@@ -352,7 +360,7 @@ class TestShardedServe:
         ]:
             eng = BatchedEngine(
                 sm, sp,
-                ServeConfig(n_slots=3, max_len=64, prefill_buckets=(8, 16)),
+                ServeConfig(n_slots=3, max_len=64, chunk_tokens=8),
                 mesh=mesh,
             )
             reqs = [eng.submit(p, SamplingParams(max_tokens=4))
@@ -364,6 +372,7 @@ class TestShardedServe:
         """)
 
 
+@pytest.mark.subprocess
 class TestMultiDeviceTrainStep:
     def test_production_sharded_train_step_runs(self):
         """A reduced arch train step EXECUTES on a (2,4) host mesh with the

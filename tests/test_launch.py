@@ -1,8 +1,16 @@
-"""Launcher CLIs + examples: end-to-end smoke (reduced, CPU)."""
+"""Launcher CLIs + examples: end-to-end smoke (reduced, CPU).
+
+Every test here shells out to a fresh interpreter, so the whole module
+carries the ``subprocess`` marker: CI runs it in the subprocess lane
+(`-m subprocess --durations=15`), keeping the tier-1 lane fast. A plain
+``pytest`` still runs everything."""
 import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.subprocess
 
 
 def run_module(args, timeout=420):
@@ -45,8 +53,11 @@ class TestServeCLI:
     def test_serve_reduced(self):
         out = run_module(
             ["repro.launch.serve", "--arch", "granite-8b", "--reduced",
-             "--requests", "3", "--max-tokens", "4", "--max-len", "48"])
+             "--requests", "3", "--max-tokens", "4", "--max-len", "48",
+             "--chunk-tokens", "8"])
         assert "smaller" in out and "requests" in out
+        # the chunked-prefill driver reports tail latency, not just rate
+        assert "TTFT" in out and "chunk=8" in out
 
 
 class TestDryrunCLI:

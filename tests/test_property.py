@@ -361,6 +361,50 @@ class TestKernelProperties:
             )
 
 
+class TestSamplingRowEquivalence:
+    """The batch sampler must be row-for-row the scalar sampler: row i of
+    ``sample_logits_batch(logits, keys, temps, ks)`` equals
+    ``sample_logits(logits[i:i+1], keys[i], temperature=temps[i],
+    top_k=ks[i])`` — over greedy (t=0) rows and the top-k edge cases
+    k in {0, V-1, V, V+1} (0 = off, >= V = no restriction)."""
+
+    V = 9
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        rows=st.lists(
+            st.tuples(
+                st.sampled_from([0.0, 0.3, 1.0, 2.5]),      # temperature
+                st.sampled_from([0, 1, 3, V - 1, V, V + 1]),  # top_k
+            ),
+            min_size=1, max_size=5,
+        ),
+    )
+    def test_batch_rowwise_equals_scalar(self, seed, rows):
+        import jax.random as jrandom
+
+        from repro.serve.sampling import sample_logits, sample_logits_batch
+
+        b, v = len(rows), self.V
+        logits = jax.random.normal(jax.random.PRNGKey(seed), (b, v)) * 3.0
+        temps = jnp.array([t for t, _ in rows], jnp.float32)
+        ks = jnp.array([k for _, k in rows], jnp.int32)
+        keys = jnp.stack([
+            jrandom.fold_in(jrandom.PRNGKey(seed + 1), i) for i in range(b)
+        ])
+        got = np.asarray(sample_logits_batch(
+            logits, keys, temperature=temps, top_k=ks))
+        for i, (t, k) in enumerate(rows):
+            want = sample_logits(
+                logits[i:i + 1], keys[i], temperature=t, top_k=k)
+            assert int(got[i]) == int(want[0]), (i, t, k, got, want)
+            assert 0 <= int(got[i]) < v
+            if t > 0 and 0 < k < v:
+                topk_ids = np.argsort(-np.asarray(logits[i]))[:k]
+                assert int(got[i]) in topk_ids
+
+
 class TestRowsConstruction:
     @given(aligned_shapes, st.integers(0, 10_000),
            st.sampled_from(["layer", "tile"]),

@@ -99,7 +99,7 @@ class TestEngine:
         sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
         eng = BatchedEngine(
             sm, sp,
-            ServeConfig(n_slots=n_slots, max_len=64, prefill_buckets=(8, 16)),
+            ServeConfig(n_slots=n_slots, max_len=64, chunk_tokens=8),
         )
         return cfg, sm, sp, eng
 
@@ -145,13 +145,16 @@ class TestEngine:
         assert r.output[-1] == eos and len(r.output) <= 32
         assert r.finish_reason == "eos"
 
-    def test_prompt_longer_than_largest_bucket_rejected(self):
-        """An oversized prompt fails fast at submit() and neither consumes
-        a slot nor wedges the tick loop for concurrent requests."""
-        _, _, _, eng = self._engine(n_slots=2)  # buckets (8, 16)
+    def test_prompt_longer_than_max_len_rejected(self):
+        """An oversized (or empty) prompt fails fast at submit() and
+        neither consumes a slot nor wedges the tick loop for concurrent
+        requests."""
+        _, _, _, eng = self._engine(n_slots=2)  # max_len 64
         ok = eng.submit([1, 2, 3], SamplingParams(max_tokens=3))
-        with pytest.raises(ValueError, match="exceeds largest bucket"):
-            eng.submit(list(range(17)), SamplingParams(max_tokens=3))
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            eng.submit(list(range(65)), SamplingParams(max_tokens=3))
+        with pytest.raises(ValueError, match="non-empty"):
+            eng.submit([], SamplingParams(max_tokens=3))
         eng.run_until_drained()
         assert ok.done and len(ok.output) == 3
         assert sorted(eng._free) == [0, 1]      # no slot leaked
@@ -182,9 +185,12 @@ class TestEngine:
         _, _, _, probe_eng = self._engine()
         probe = probe_eng.submit([1, 2], SamplingParams(max_tokens=1))
         probe_eng.run_until_drained()
-        # max_tokens=1 retires at admission, before any decode tick
+        # max_tokens=1 retires on the tick its final prefill chunk lands
+        # (the first token comes from the extend logits) — one tick total,
+        # no decode step ever runs for it
         assert probe.done and len(probe.output) == 1
-        assert probe.finish_reason == "length" and probe_eng.steps == 0
+        assert probe.finish_reason == "length"
+        assert probe_eng.steps == 1 and probe.token_steps == [0]
         eos = probe.output[0]
 
         _, _, _, eng = self._engine()
@@ -209,14 +215,14 @@ class TestPerSlotSampling:
         tp = mod.init_params(tm.specs(), KEY)
         sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
         scfg = ServeConfig(n_slots=n_slots, max_len=64,
-                           prefill_buckets=(8, 16), **serve_over)
+                           chunk_tokens=8, **serve_over)
         return cfg, sm, sp, BatchedEngine(sm, sp, scfg)
 
     def _replay_prefill(self, sm, sp, prompt):
-        """Mirror _admit's left-padded bucket-8 prefill for a replay."""
-        toks = np.zeros((1, 8), np.int32)
-        toks[0, 8 - len(prompt):] = prompt
-        return sm.prefill(sp, {"tokens": jnp.asarray(toks)}, 64)
+        """Monolithic raw-prompt prefill mirroring the chunked engine's
+        context (no padding tokens enter the caches) for a replay."""
+        toks = jnp.asarray([prompt], jnp.int32)
+        return sm.prefill(sp, {"tokens": toks}, 64)
 
     def test_greedy_request_deterministic_on_sampling_engine(self):
         """SamplingParams(temperature=0.0) on a stochastic-default engine:
@@ -306,20 +312,52 @@ class TestPerSlotSampling:
         assert all(int(e) == -1 for e in eng._eos_ids)
 
 
-class TestServeConfigValidation:
-    def test_oversized_bucket_rejected_at_construction(self):
-        with pytest.raises(ValueError, match="exceeds max_len"):
-            ServeConfig(max_len=32, prefill_buckets=(32, 128))
+class TestDrainDiagnostics:
+    def test_drain_failure_reports_queue_and_slot_state(self):
+        """A wedged (or merely under-budgeted) drain must say WHERE the
+        engine stopped: queued count, live count, and each live slot's
+        phase@offset — not a bare "engine did not drain"."""
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=4))
+        eng.submit([1, 2, 3, 4, 5, 6], SamplingParams(max_tokens=50))
+        eng.submit([7, 8], SamplingParams(max_tokens=2))  # stays queued
+        with pytest.raises(RuntimeError) as ei:
+            eng.run_until_drained(max_steps=3)
+        msg = str(ei.value)
+        assert "after 3 steps" in msg
+        assert "1 queued" in msg and "1 live" in msg
+        # per-slot phase/offset: the 6-token prompt finished its chunked
+        # prefill (6/6) and is mid-decode
+        assert "slot 0" in msg and "decode@6/6" in msg
+        assert "/50 tok" in msg
 
-    def test_empty_and_unsorted_ladders_rejected(self):
-        with pytest.raises(ValueError, match="non-empty"):
-            ServeConfig(prefill_buckets=())
-        with pytest.raises(ValueError, match="strictly increasing"):
-            ServeConfig(max_len=256, prefill_buckets=(128, 32))
-        with pytest.raises(ValueError, match="strictly increasing"):
-            ServeConfig(max_len=256, prefill_buckets=(32, 32))
+    def test_drain_failure_reports_prefill_offset(self):
+        """A slot stuck mid-prefill reports prefill@consumed/total."""
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=4))
+        eng.submit(list(np.arange(1, 21)), SamplingParams(max_tokens=4))
+        with pytest.raises(RuntimeError, match=r"prefill@8/20"):
+            eng.run_until_drained(max_steps=2)
+
+
+class TestServeConfigValidation:
+    def test_oversized_chunk_rejected_at_construction(self):
+        """A chunk wider than the cache capacity could scatter past the
+        decode cache — rejected before any engine exists."""
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            ServeConfig(max_len=32, chunk_tokens=128)
+
+    def test_nonpositive_chunk_rejected(self):
         with pytest.raises(ValueError, match="positive"):
-            ServeConfig(max_len=256, prefill_buckets=(0, 32))
+            ServeConfig(max_len=256, chunk_tokens=0)
+        with pytest.raises(ValueError, match="positive"):
+            ServeConfig(max_len=256, chunk_tokens=-4)
 
 
 class TestInt8KV:
@@ -363,12 +401,23 @@ class TestSampling:
         from repro.serve.sampling import sample_logits_batch
 
         got_b = sample_logits_batch(
-            logits, KEY, temperature=jnp.array([1.0]),
+            logits, KEY[None], temperature=jnp.array([1.0]),
             top_k=jnp.array([100], jnp.int32))
         want_b = sample_logits_batch(
-            logits, KEY, temperature=jnp.array([1.0]),
+            logits, KEY[None], temperature=jnp.array([1.0]),
             top_k=jnp.array([0], jnp.int32))
         np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+    def test_batch_sampler_rejects_shared_key(self):
+        """A single shared key is ambiguous under per-request key streams:
+        the batch sampler demands one key per row."""
+        from repro.serve.sampling import sample_logits_batch
+
+        logits = jnp.zeros((2, 4))
+        with pytest.raises(ValueError, match="one PRNG key per row"):
+            sample_logits_batch(
+                logits, KEY, temperature=jnp.zeros((2,)),
+                top_k=jnp.zeros((2,), jnp.int32))
 
     def test_oversized_topk_request_serves_without_wedging(self):
         """A stochastic request with top_k >= vocab must not crash
@@ -378,7 +427,7 @@ class TestSampling:
         tp = mod.init_params(tm.specs(), KEY)
         sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
         eng = BatchedEngine(sm, sp, ServeConfig(
-            n_slots=2, max_len=64, prefill_buckets=(8, 16)))
+            n_slots=2, max_len=64, chunk_tokens=8))
         r = eng.submit([1, 2], SamplingParams(
             temperature=1.0, top_k=cfg.vocab + 100, max_tokens=3))
         eng.run_until_drained()
