@@ -87,8 +87,10 @@ def main():
                                state.params, cfg.tbn)
     print(f"export: {serving_bytes(state.params)/1e6:.1f}MB masters -> "
           f"{serving_bytes(sp)/1e6:.2f}MB packed tiles")
-    eng = BatchedEngine(s_model, sp, ServeConfig(
-        n_slots=4, max_len=args.seq + 32, chunk_tokens=16))
+    page = 16                          # KV pool page size; max_len must be
+    eng = BatchedEngine(s_model, sp, ServeConfig(  # a whole page multiple
+        n_slots=4, max_len=-(-(args.seq + 32) // page) * page,
+        chunk_tokens=16, page_tokens=page))
     reqs = [eng.submit([1 + i, 17 * (1 + i) % cfg.vocab],
                        SamplingParams(max_tokens=12)) for i in range(4)]
     eng.run_until_drained()

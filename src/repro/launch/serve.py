@@ -75,6 +75,20 @@ def main(argv=None):
     ap.add_argument("--chunk-tokens", type=int, default=32,
                     help="prefill chunk width == per-tick token budget "
                          "(clamped to --max-len)")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="attention KV pool page size (must divide "
+                         "--max-len)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="KV pool capacity in pages (default: the "
+                         "dense-equivalent slots * max_len / page_tokens)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="radix-trie shared-prefix reuse across admissions "
+                         "(--no-prefix-cache disables)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common tokens to every prompt "
+                         "(a synthetic system prompt — makes the prefix "
+                         "cache line non-trivial)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=None,
                     help="engine-default top-k (per-request params override)")
@@ -83,6 +97,13 @@ def main(argv=None):
                     help="DPxTP serving mesh, e.g. 1x4 (default single device)")
     args = ap.parse_args(argv)
     mesh = parse_mesh_arg(args.mesh)
+    if args.shared_prefix + 12 > args.max_len:
+        # 12 = the max random tail length below; fail before minutes of
+        # model build/compile, not at the first submit()
+        raise SystemExit(
+            f"--shared-prefix {args.shared_prefix} + tail (<=12) exceeds "
+            f"--max-len {args.max_len}"
+        )
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -112,7 +133,10 @@ def main(argv=None):
         ServeConfig(n_slots=args.slots, max_len=args.max_len,
                     chunk_tokens=min(args.chunk_tokens, args.max_len),
                     temperature=args.temperature,
-                    top_k=args.top_k, seed=args.seed),
+                    top_k=args.top_k, seed=args.seed,
+                    page_tokens=args.page_tokens,
+                    pool_pages=args.pool_pages,
+                    prefix_cache=args.prefix_cache),
         mesh=mesh,
     )
     if mesh is not None:
@@ -123,9 +147,13 @@ def main(argv=None):
               f"{worst/1e6:.3f}MB max/device "
               f"({total_tile/max(worst, 1):.1f}x sharding)")
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab, size=args.shared_prefix)
     reqs = [
-        eng.submit(rng.integers(0, cfg.vocab, size=rng.integers(3, 12)),
-                   SamplingParams(max_tokens=args.max_tokens))
+        eng.submit(
+            np.concatenate([
+                shared, rng.integers(0, cfg.vocab, size=rng.integers(3, 12))
+            ]).astype(np.int32),
+            SamplingParams(max_tokens=args.max_tokens))
         for _ in range(args.requests)
     ]
     t0 = time.time()
@@ -148,6 +176,18 @@ def main(argv=None):
             line += (f" | ITL mean {1e3 * np.mean(itls):.1f}ms "
                      f"max {1e3 * np.max(itls):.1f}ms")
         print(f"latency (chunk={eng.cfg.chunk_tokens}): {line}")
+    st = eng.stats()
+    if eng.cfg.prefix_cache:
+        line = (f"hit rate {100 * st['hit_rate']:.0f}% "
+                f"({st['prefix_hits']}/{st['admitted']} admissions), "
+                f"{st['prefill_tokens_skipped']}/{st['prompt_tokens']} "
+                f"prefill tokens skipped")
+        if "pool_pages" in st:
+            line += (f", pool {st['pages_in_use']}/{st['pool_pages']} pages "
+                     f"({100 * st['page_utilization']:.0f}%)")
+        print(f"prefix cache (page={eng.cfg.page_tokens}): {line}")
+    else:
+        print("prefix cache: disabled (--prefix-cache to enable)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
     return reqs

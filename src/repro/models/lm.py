@@ -38,6 +38,28 @@ def _norm(cfg: ArchConfig, ctx: ModelContext, dim: int, name: str):
     return cls(dim, ctx, name=name)
 
 
+def _paged_attn(blk) -> bool:
+    """Full-attention blocks page their K/V through the serving pool;
+    windowed rings and recurrent state stay per-slot (they are bounded
+    already and snapshot at prefix boundaries instead — DESIGN §6.2)."""
+    return blk.kind == "attn" and not blk.cfg.window
+
+
+def _map_block_cache(blk, fn, *subtrees):
+    """Apply ``fn(leaf_block, *cache_subtrees)`` per leaf block, recursing
+    through pattern super-blocks (whose cache is a {"b{i}": ...} dict) —
+    the shared spine for every per-slot cache operation that must know
+    which FAMILY a subtree belongs to (paged pool vs slot rows)."""
+    if blk.kind == "pattern":
+        return {
+            f"b{i}": _map_block_cache(
+                b, fn, *(t[f"b{i}"] for t in subtrees)
+            )
+            for i, b in enumerate(blk.blocks)
+        }
+    return fn(blk, *subtrees)
+
+
 @dataclasses.dataclass
 class Block:
     """One residual block: (attn|rec|ssm) + (mlp|moe), pre-norm."""
@@ -111,22 +133,34 @@ class Block:
         return x, aux
 
     # ---------------- serving ----------------
-    def init_cache(self, batch: int, max_len: int, dtype):
+    def init_cache(self, batch: int, max_len: int, dtype,
+                   page_tokens: Optional[int] = None,
+                   n_pages: Optional[int] = None):
+        """Decode-cache allocation. With ``page_tokens``/``n_pages`` the
+        full-attention K/V (and int8 scale) caches come up in POOL form —
+        ``(n_pages, page_tokens, ...)`` pages addressed through the
+        engine's page table — instead of dense ``(batch, max_len, ...)``
+        slot rows. Windowed rings and recurrent state keep their per-slot
+        layout either way."""
         if self.kind == "attn":
             hd = self.mixer.hd
             window = self.cfg.window
-            t = min(max_len, window) if window else max_len
             kv = self.cfg.n_kv
+            if page_tokens is not None and not window:
+                lead = (n_pages, page_tokens)
+            else:
+                t = min(max_len, window) if window else max_len
+                lead = (batch, t)
             if self.cfg.kv_dtype == "int8" and not window:
                 return {
-                    "k": jnp.zeros((batch, t, kv, hd), jnp.int8),
-                    "v": jnp.zeros((batch, t, kv, hd), jnp.int8),
-                    "ks": jnp.zeros((batch, t, kv), jnp.float32),
-                    "vs": jnp.zeros((batch, t, kv), jnp.float32),
+                    "k": jnp.zeros((*lead, kv, hd), jnp.int8),
+                    "v": jnp.zeros((*lead, kv, hd), jnp.int8),
+                    "ks": jnp.zeros((*lead, kv), jnp.float32),
+                    "vs": jnp.zeros((*lead, kv), jnp.float32),
                 }
             return {
-                "k": jnp.zeros((batch, t, kv, hd), dtype),
-                "v": jnp.zeros((batch, t, kv, hd), dtype),
+                "k": jnp.zeros((*lead, kv, hd), dtype),
+                "v": jnp.zeros((*lead, kv, hd), dtype),
             }
         return self.mixer.init_state(batch)
 
@@ -175,7 +209,8 @@ class Block:
             tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
         return {"h": hstates[:, -1], "conv": tail}
 
-    def decode_step(self, params, x, cache, *, lengths):
+    def decode_step(self, params, x, cache, *, lengths,
+                    page_table=None, active=None):
         aux = None
         h = self.norm1(params["norm1"], x)
         if self.kind == "attn":
@@ -187,11 +222,13 @@ class Block:
                 cache = {"k": ck, "v": cv}
             elif "ks" in cache:
                 h, cache = self.mixer.decode_step_quant(
-                    params["mixer"], h, cache, lengths
+                    params["mixer"], h, cache, lengths,
+                    page_table=page_table, active=active,
                 )
             else:
                 h, ck, cv = self.mixer.decode_step(
-                    params["mixer"], h, cache["k"], cache["v"], lengths
+                    params["mixer"], h, cache["k"], cache["v"], lengths,
+                    page_table=page_table, active=active,
                 )
                 cache = {"k": ck, "v": cv}
         else:
@@ -206,13 +243,14 @@ class Block:
             x = x + h
         return x, cache
 
-    def extend(self, params, x, cache, *, positions, valid):
+    def extend(self, params, x, cache, *, positions, valid, page_table=None):
         """Advance a (B, C) column block at per-slot offsets against the
         decode cache (chunked prefill). ``positions`` (B, C) are absolute
         token positions; ``valid`` (B, C) marks real columns — padding
         columns never write a cache row and never advance recurrent state,
         so a slot moves by exactly its count of valid columns (0 leaves it
-        untouched up to dtype).
+        untouched up to dtype). ``page_table`` routes full-attention K/V
+        writes through the paged pool.
         """
         h = self.norm1(params["norm1"], x)
         if self.kind == "attn":
@@ -222,11 +260,13 @@ class Block:
                 )
             elif "ks" in cache:
                 h, cache = self.mixer.extend_quant(
-                    params["mixer"], h, cache, positions, valid
+                    params["mixer"], h, cache, positions, valid,
+                    page_table=page_table,
                 )
             else:
                 h, ck, cv = self.mixer.extend(
-                    params["mixer"], h, cache["k"], cache["v"], positions, valid
+                    params["mixer"], h, cache["k"], cache["v"], positions,
+                    valid, page_table=page_table,
                 )
                 cache = {"k": ck, "v": cv}
         else:
@@ -516,16 +556,112 @@ class DecoderLM:
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
-    def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                    page_tokens: Optional[int] = None,
+                    n_pages: Optional[int] = None):
+        """Decode caches for ``batch`` slots. With ``page_tokens``/
+        ``n_pages`` the full-attention families allocate POOL form (one
+        page index space shared by every layer — the engine's single page
+        table addresses them all); other families are per-slot either
+        way."""
         caches = []
         for seg in self.segments:
-            c = seg.block.init_cache(batch, max_len, dtype)
+            c = seg.block.init_cache(
+                batch, max_len, dtype,
+                page_tokens=page_tokens, n_pages=n_pages,
+            )
             if seg.scanned:
                 c = jax.tree.map(
                     lambda v: jnp.broadcast_to(v[None], (seg.n, *v.shape)), c
                 )
             caches.append(c)
         return caches
+
+    # ---- per-slot cache surgery (engine-side bookkeeping helpers) ----
+    def _leaf_blocks(self):
+        for seg in self.segments:
+            stack = [seg.block]
+            while stack:
+                b = stack.pop()
+                if b.kind == "pattern":
+                    stack.extend(b.blocks)
+                else:
+                    yield b
+
+    @property
+    def has_full_attn(self) -> bool:
+        """Any full-attention layer -> the engine stands up a page pool."""
+        return any(_paged_attn(b) for b in self._leaf_blocks())
+
+    @property
+    def has_recurrent_state(self) -> bool:
+        """Any cache family that cannot be paged (SSM / RG-LRU carries,
+        windowed rings) -> prefix reuse needs boundary snapshots."""
+        return any(not _paged_attn(b) for b in self._leaf_blocks())
+
+    def reset_slot_caches(self, caches, slot, paged: bool = False):
+        """Zero one slot's rows across the per-slot cache families:
+        recurrent/SSM state MUST restart from zeros (extend continues from
+        the slot's carry), windowed rings are cleared for hygiene. Paged
+        pool leaves are left alone — their pages are shared or about to be
+        remapped, and stale rows are position-masked."""
+        out = []
+        for seg, c in zip(self.segments, caches):
+            ax = 1 if seg.scanned else 0
+
+            def per_block(blk, ct, ax=ax):
+                if paged and _paged_attn(blk):
+                    return ct
+                return jax.tree.map(
+                    lambda v: v.at[(slice(None),) * ax + (slot,)].set(
+                        jnp.zeros((), v.dtype)
+                    ),
+                    ct,
+                )
+
+            out.append(_map_block_cache(seg.block, per_block, c))
+        return out
+
+    def snapshot_slot_caches(self, caches, slot):
+        """One slot's NON-PAGED cache state as a standalone pytree — the
+        prefix trie pins this at page boundaries. Full-attention entries
+        are None (their prefix lives in pool pages); recurrent mixers own
+        their slice semantics (ssm/rglru ``snapshot_state``); windowed
+        rings copy the slot's ring rows."""
+        snaps = []
+        for seg, c in zip(self.segments, caches):
+            ax = 1 if seg.scanned else 0
+
+            def per_block(blk, ct, ax=ax):
+                if blk.kind in ("rec", "ssm"):
+                    return blk.mixer.snapshot_state(ct, slot, axis=ax)
+                if blk.kind == "attn" and blk.cfg.window:
+                    return mod.slice_slot_rows(ct, slot, ax)
+                return None
+
+            snaps.append(_map_block_cache(seg.block, per_block, c))
+        return snaps
+
+    def restore_slot_caches(self, caches, slot, snaps):
+        """Map a pinned snapshot back into a slot (prefix-hit admission).
+        None entries (full-attention families) pass through — the page
+        table, not the pool contents, carries their prefix."""
+        out = []
+        for seg, c, s in zip(self.segments, caches, snaps):
+            ax = 1 if seg.scanned else 0
+            if s is None:
+                out.append(c)
+                continue
+
+            def per_block(blk, ct, st, ax=ax):
+                if st is None:
+                    return ct
+                if blk.kind in ("rec", "ssm"):
+                    return blk.mixer.restore_state(ct, slot, st, axis=ax)
+                return mod.set_slot_rows(ct, slot, st, ax)
+
+            out.append(_map_block_cache(seg.block, per_block, c, s))
+        return out
 
     def prefill(self, params, batch, max_len: int):
         """Run the prompt, return (last-position logits, caches, lengths)."""
@@ -655,18 +791,28 @@ class DecoderLM:
             new_caches.append(cache)
         return x, new_caches
 
-    def decode_step(self, params, tokens, caches, lengths):
-        """tokens: (B, 1) -> (logits (B, vocab), new caches)."""
+    def decode_step(self, params, tokens, caches, lengths,
+                    page_table=None, active=None):
+        """tokens: (B, 1) -> (logits (B, vocab), new caches).
+
+        ``page_table`` (B, npp) routes full-attention K/V through the
+        paged pool; ``active`` (B,) confines those pool writes to live
+        decoding slots (per-slot families are confined by the engine's
+        merge instead)."""
         x = self.embed(params["embed"], tokens)
         x, new_caches = self._walk_segments(
             params, x, caches,
-            lambda blk, pl, h, cl: blk.decode_step(pl, h, cl, lengths=lengths),
+            lambda blk, pl, h, cl: blk.decode_step(
+                pl, h, cl, lengths=lengths,
+                page_table=page_table, active=active,
+            ),
         )
         h = self.final_norm(params["final_norm"], x)
         logits = self.logits(params, h)
         return logits[:, 0], new_caches, lengths + 1
 
-    def extend(self, params, tokens, caches, lengths, n_new):
+    def extend(self, params, tokens, caches, lengths, n_new,
+               page_table=None):
         """Chunked-prefill step: advance each slot by its next n_new[b]
         prompt tokens against the shared decode caches.
 
@@ -675,7 +821,8 @@ class DecoderLM:
         (no cache write, no state advance, output discarded). Returns
         (logits at each slot's LAST VALID column (B, vocab), caches,
         lengths + n_new); a slot with n_new == 0 is untouched and its
-        logits row is meaningless.
+        logits row is meaningless. ``page_table`` routes full-attention
+        K/V through the paged pool.
         """
         b, c = tokens.shape
         positions = lengths[:, None] + jnp.arange(c)[None, :]
@@ -684,7 +831,8 @@ class DecoderLM:
         x, new_caches = self._walk_segments(
             params, x, caches,
             lambda blk, pl, h, cl: blk.extend(
-                pl, h, cl, positions=positions, valid=valid
+                pl, h, cl, positions=positions, valid=valid,
+                page_table=page_table,
             ),
         )
         idx = jnp.clip(n_new - 1, 0, c - 1)
@@ -693,21 +841,34 @@ class DecoderLM:
         logits = self.logits(params, h)
         return logits[:, 0], new_caches, lengths + n_new
 
-    def merge_caches(self, old, new, keep):
+    def merge_caches(self, old, new, keep, paged: bool = False):
         """Per-slot cache select: rows where ``keep`` (B,) is True take the
         new cache, others keep the old — the engine uses this to confine a
         batched decode step to its live-decoding slots (a prefilling
-        neighbor's caches must not see the step's garbage writes)."""
+        neighbor's caches must not see the step's garbage writes).
+
+        Paged pool leaves have no slot axis to select on; their writes
+        were already confined in-kernel (the ``active`` mask drops an
+        inactive slot's scatter), so with ``paged`` the full-attention
+        families take the new pool wholesale."""
         merged = []
         for seg, o, n in zip(self.segments, old, new):
             ax = 1 if seg.scanned else 0
 
-            def sel(ov, nv, ax=ax):
-                shape = [1] * ov.ndim
-                shape[ax] = keep.shape[0]
-                return jnp.where(keep.reshape(shape), nv.astype(ov.dtype), ov)
+            def per_block(blk, ov_tree, nv_tree, ax=ax):
+                if paged and _paged_attn(blk):
+                    return nv_tree
 
-            merged.append(jax.tree.map(sel, o, n))
+                def sel(ov, nv, ax=ax):
+                    shape = [1] * ov.ndim
+                    shape[ax] = keep.shape[0]
+                    return jnp.where(
+                        keep.reshape(shape), nv.astype(ov.dtype), ov
+                    )
+
+                return jax.tree.map(sel, ov_tree, nv_tree)
+
+            merged.append(_map_block_cache(seg.block, per_block, o, n))
         return merged
 
 
@@ -737,9 +898,11 @@ class _PatternBlock:
             aux += a
         return x, aux
 
-    def init_cache(self, batch, max_len, dtype):
+    def init_cache(self, batch, max_len, dtype, page_tokens=None,
+                   n_pages=None):
         return {
-            f"b{i}": b.init_cache(batch, max_len, dtype)
+            f"b{i}": b.init_cache(batch, max_len, dtype,
+                                  page_tokens=page_tokens, n_pages=n_pages)
             for i, b in enumerate(self.blocks)
         }
 
@@ -749,19 +912,21 @@ class _PatternBlock:
             x, caches[f"b{i}"] = b.prefill(params[f"b{i}"], x, positions=positions)
         return x, caches
 
-    def decode_step(self, params, x, cache, *, lengths):
+    def decode_step(self, params, x, cache, *, lengths,
+                    page_table=None, active=None):
         out = {}
         for i, b in enumerate(self.blocks):
             x, out[f"b{i}"] = b.decode_step(
-                params[f"b{i}"], x, cache[f"b{i}"], lengths=lengths
+                params[f"b{i}"], x, cache[f"b{i}"], lengths=lengths,
+                page_table=page_table, active=active,
             )
         return x, out
 
-    def extend(self, params, x, cache, *, positions, valid):
+    def extend(self, params, x, cache, *, positions, valid, page_table=None):
         out = {}
         for i, b in enumerate(self.blocks):
             x, out[f"b{i}"] = b.extend(
                 params[f"b{i}"], x, cache[f"b{i}"],
-                positions=positions, valid=valid,
+                positions=positions, valid=valid, page_table=page_table,
             )
         return x, out

@@ -49,6 +49,55 @@ def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
     return (q.astype(dtype) * scale[..., None].astype(dtype))
 
 
+# ---------------------------------------------------------------------------
+# Paged KV-cache translation (serve/kvpool.py holds the host-side pool).
+# A paged cache leaf is (n_pages, page_tokens, ...) instead of the dense
+# (n_slots, max_len, ...); the int32 page table (n_slots, max_len // pt)
+# maps a slot's absolute token positions onto pool pages. Both helpers are
+# plain XLA gather/scatter so the jitted serving tick stays one trace —
+# shapes depend only on (pool, table) shapes, never on runtime content.
+# ---------------------------------------------------------------------------
+def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Per-slot contiguous cache view through the page table.
+
+    pool (n_pages, pt, ...) + page_table (B, npp) -> (B, npp * pt, ...),
+    where row p of slot b's view is the cache entry for absolute position
+    p — exactly the dense layout the attend math expects, so the paged
+    and dense paths share every mask and einsum bit-for-bit. Rows beyond
+    the slot's frontier read whatever the mapped (or stale) page holds;
+    the causal/validity masks already exclude them, identically to the
+    dense path's zero-initialized rows."""
+    n_pages, pt = pool.shape[:2]
+    flat = pool.reshape(n_pages * pt, *pool.shape[2:])
+    idx = page_table[:, :, None] * pt + jnp.arange(pt)[None, None, :]
+    return flat[idx.reshape(page_table.shape[0], -1)]
+
+
+def scatter_pages(
+    pool: jax.Array,
+    page_table: jax.Array,
+    positions: jax.Array,      # (B, C) absolute token positions
+    values: jax.Array,         # (B, C, ...) rows to write
+    valid: jax.Array,          # (B, C) bool; False columns never write
+) -> jax.Array:
+    """Write cache rows at absolute positions through the page table.
+
+    Invalid columns — padding, inactive slots, and positions past the
+    table's reach — scatter to one past the flat pool and are DROPPED
+    (the same out-of-bounds idiom the dense extend uses), so a shared
+    prefix page can never be written by accident: the engine only maps
+    writable positions onto private pages."""
+    n_pages, pt = pool.shape[:2]
+    npp = page_table.shape[1]
+    flat = pool.reshape(n_pages * pt, *pool.shape[2:])
+    pidx = positions // pt
+    page = jnp.take_along_axis(page_table, jnp.clip(pidx, 0, npp - 1), axis=1)
+    ok = valid & (pidx < npp) & (positions >= 0)
+    idx = jnp.where(ok, page * pt + positions % pt, n_pages * pt)
+    flat = flat.at[idx].set(values.astype(flat.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
 def _attend_core(
     q: jax.Array,          # (B, S, K, G, hd) grouped queries
     k: jax.Array,          # (B, T, K, hd)
@@ -247,24 +296,42 @@ class Attention:
         self,
         params: dict,
         x: jax.Array,              # (B, 1, d)
-        cache_k: jax.Array,        # (B, T, K, hd)
+        cache_k: jax.Array,        # (B, T, K, hd) dense | (P, pt, K, hd) paged
         cache_v: jax.Array,
         lengths: jax.Array,        # (B,) tokens already in cache
+        page_table: Optional[jax.Array] = None,   # (B, npp) -> paged layout
+        active: Optional[jax.Array] = None,       # (B,) paged write mask
     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """One-token step. With ``page_table`` the caches are pool form:
+        the new K/V row scatters through the table (inactive slots drop
+        their write — the paged pool cannot be un-written by a post-hoc
+        per-slot merge the way dense slot rows can) and the attend runs
+        over the gathered per-slot view, which is laid out exactly like
+        the dense cache so masks and math are unchanged."""
         b = x.shape[0]
-        t = cache_k.shape[1]
         positions = lengths[:, None]                    # new token position
         q, k, v = self._qkv(params, x, None, positions, positions)
-        idx = jnp.arange(b)
-        cache_k = cache_k.at[idx, lengths].set(k[:, 0])
-        cache_v = cache_v.at[idx, lengths].set(v[:, 0])
+        if page_table is None:
+            idx = jnp.arange(b)
+            cache_k = cache_k.at[idx, lengths].set(k[:, 0])
+            cache_v = cache_v.at[idx, lengths].set(v[:, 0])
+            view_k, view_v = cache_k, cache_v
+        else:
+            ok = jnp.ones((b,), bool) if active is None else active
+            cache_k = scatter_pages(cache_k, page_table, positions, k,
+                                    ok[:, None])
+            cache_v = scatter_pages(cache_v, page_table, positions, v,
+                                    ok[:, None])
+            view_k = gather_pages(cache_k, page_table)
+            view_v = gather_pages(cache_v, page_table)
+        t = view_k.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
         mask = make_mask(
             positions, k_pos, causal=True, window=self.window,
             k_valid=k_pos <= lengths[:, None],
         )
         scale = 1.0 / math.sqrt(self.hd)
-        out = _attend_core(self._group(q), cache_k, cache_v, mask, scale)
+        out = _attend_core(self._group(q), view_k, view_v, mask, scale)
         y = self.wo(params["wo"], out.reshape(b, 1, self.n_heads * self.hd))
         return y, cache_k, cache_v
 
@@ -276,6 +343,7 @@ class Attention:
         cache_v: jax.Array,
         positions: jax.Array,      # (B, C) absolute position per column
         valid: jax.Array,          # (B, C) bool, False = padding column
+        page_table: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """Chunked-prefill step: advance each row by its valid columns.
 
@@ -286,21 +354,33 @@ class Attention:
         just-updated cache — every key at position <= the query's position
         has been written (by an earlier tick or this scatter), and the
         causal mask excludes everything later, so stale rows beyond the
-        frontier are never read by a valid column.
+        frontier are never read by a valid column. With ``page_table`` the
+        caches are pool form and positions translate through the table;
+        on a prefix hit the engine starts `positions` at the page-aligned
+        boundary, so shared pages (all < boundary) are read, never hit by
+        this scatter.
         """
         b, c, _ = x.shape
-        t = cache_k.shape[1]
         q, k, v = self._qkv(params, x, None, positions, positions)
-        bidx = jnp.arange(b)[:, None]
-        widx = jnp.where(valid, positions, t)        # t == out of bounds
-        cache_k = cache_k.at[bidx, widx].set(
-            k.astype(cache_k.dtype), mode="drop")
-        cache_v = cache_v.at[bidx, widx].set(
-            v.astype(cache_v.dtype), mode="drop")
+        if page_table is None:
+            t = cache_k.shape[1]
+            bidx = jnp.arange(b)[:, None]
+            widx = jnp.where(valid, positions, t)    # t == out of bounds
+            cache_k = cache_k.at[bidx, widx].set(
+                k.astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[bidx, widx].set(
+                v.astype(cache_v.dtype), mode="drop")
+            view_k, view_v = cache_k, cache_v
+        else:
+            cache_k = scatter_pages(cache_k, page_table, positions, k, valid)
+            cache_v = scatter_pages(cache_v, page_table, positions, v, valid)
+            view_k = gather_pages(cache_k, page_table)
+            view_v = gather_pages(cache_v, page_table)
+        t = view_k.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
         mask = make_mask(positions, k_pos, causal=True, window=self.window)
         scale = 1.0 / math.sqrt(self.hd)
-        out = _attend_core(self._group(q), cache_k, cache_v, mask, scale)
+        out = _attend_core(self._group(q), view_k, view_v, mask, scale)
         y = self.wo(params["wo"], out.reshape(b, c, self.n_heads * self.hd))
         return y, cache_k, cache_v
 
@@ -311,37 +391,55 @@ class Attention:
         cache: dict,               # {"k","v" int8, "ks","vs" f32}
         positions: jax.Array,      # (B, C)
         valid: jax.Array,          # (B, C)
+        page_table: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, dict]:
         """Chunked-prefill step against the int8 KV cache: quantize the new
         rows (per-token, per-head scales — the same per-row quantization a
         monolithic prefill would apply), drop padding-column writes, attend
-        through the scale-factored path (no dequantized cache tensor)."""
+        through the scale-factored path (no dequantized cache tensor). The
+        codes AND scales page together (one table drives all four pools),
+        so a shared int8 prefix replays bit-identical codes."""
         b, c, _ = x.shape
-        t = cache["k"].shape[1]
         q, k, v = self._qkv(params, x, None, positions, positions)
         kq, ks = quantize_kv(k)                # (B, C, K, hd) int8, (B, C, K)
         vq, vs = quantize_kv(v)
-        bidx = jnp.arange(b)[:, None]
-        widx = jnp.where(valid, positions, t)
-        cache = {
-            "k": cache["k"].at[bidx, widx].set(kq, mode="drop"),
-            "v": cache["v"].at[bidx, widx].set(vq, mode="drop"),
-            "ks": cache["ks"].at[bidx, widx].set(ks, mode="drop"),
-            "vs": cache["vs"].at[bidx, widx].set(vs, mode="drop"),
-        }
+        if page_table is None:
+            t = cache["k"].shape[1]
+            bidx = jnp.arange(b)[:, None]
+            widx = jnp.where(valid, positions, t)
+            cache = {
+                "k": cache["k"].at[bidx, widx].set(kq, mode="drop"),
+                "v": cache["v"].at[bidx, widx].set(vq, mode="drop"),
+                "ks": cache["ks"].at[bidx, widx].set(ks, mode="drop"),
+                "vs": cache["vs"].at[bidx, widx].set(vs, mode="drop"),
+            }
+            vk, vv, vks, vvs = (cache["k"], cache["v"],
+                                cache["ks"], cache["vs"])
+        else:
+            cache = {
+                "k": scatter_pages(cache["k"], page_table, positions, kq, valid),
+                "v": scatter_pages(cache["v"], page_table, positions, vq, valid),
+                "ks": scatter_pages(cache["ks"], page_table, positions, ks, valid),
+                "vs": scatter_pages(cache["vs"], page_table, positions, vs, valid),
+            }
+            vk = gather_pages(cache["k"], page_table)
+            vv = gather_pages(cache["v"], page_table)
+            vks = gather_pages(cache["ks"], page_table)
+            vvs = gather_pages(cache["vs"], page_table)
         cd = v.dtype
+        t = vk.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
         mask = make_mask(positions, k_pos, causal=True, window=self.window)
         qg = self._group(q)                           # (B, C, K, G, hd)
         scores = jnp.einsum(
-            "bskgh,btkh->bkgst", qg, cache["k"].astype(cd)
+            "bskgh,btkh->bkgst", qg, vk.astype(cd)
         ).astype(jnp.float32)
-        scores = scores * cache["ks"].transpose(0, 2, 1)[:, :, None, None, :]
+        scores = scores * vks.transpose(0, 2, 1)[:, :, None, None, :]
         scores = scores * (1.0 / math.sqrt(self.hd))
         scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(cd)
-        pv = probs * cache["vs"].transpose(0, 2, 1)[:, :, None, None, :].astype(cd)
-        out = jnp.einsum("bkgst,btkh->bskgh", pv, cache["v"].astype(cd))
+        pv = probs * vvs.transpose(0, 2, 1)[:, :, None, None, :].astype(cd)
+        out = jnp.einsum("bkgst,btkh->bskgh", pv, vv.astype(cd))
         y = self.wo(params["wo"], out.reshape(b, c, self.n_heads * self.hd))
         return y, cache
 
@@ -351,23 +449,44 @@ class Attention:
         x: jax.Array,              # (B, 1, d)
         cache: dict,               # {"k","v" int8, "ks","vs" f32}
         lengths: jax.Array,
+        page_table: Optional[jax.Array] = None,
+        active: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, dict]:
         """Decode against an int8-quantized KV cache: quantize only the new
         token's row, dequantize per layer as a transient for the attend."""
         b = x.shape[0]
-        t = cache["k"].shape[1]
         positions = lengths[:, None]
         q, k, v = self._qkv(params, x, None, positions, positions)
         kq, ks = quantize_kv(k[:, 0])          # (B, K, hd) int8, (B, K)
         vq, vs = quantize_kv(v[:, 0])
-        idx = jnp.arange(b)
-        cache = {
-            "k": cache["k"].at[idx, lengths].set(kq),
-            "v": cache["v"].at[idx, lengths].set(vq),
-            "ks": cache["ks"].at[idx, lengths].set(ks),
-            "vs": cache["vs"].at[idx, lengths].set(vs),
-        }
+        if page_table is None:
+            idx = jnp.arange(b)
+            cache = {
+                "k": cache["k"].at[idx, lengths].set(kq),
+                "v": cache["v"].at[idx, lengths].set(vq),
+                "ks": cache["ks"].at[idx, lengths].set(ks),
+                "vs": cache["vs"].at[idx, lengths].set(vs),
+            }
+            vk, vv, vks, vvs = (cache["k"], cache["v"],
+                                cache["ks"], cache["vs"])
+        else:
+            ok = (jnp.ones((b,), bool) if active is None else active)[:, None]
+            cache = {
+                "k": scatter_pages(cache["k"], page_table, positions,
+                                   kq[:, None], ok),
+                "v": scatter_pages(cache["v"], page_table, positions,
+                                   vq[:, None], ok),
+                "ks": scatter_pages(cache["ks"], page_table, positions,
+                                    ks[:, None], ok),
+                "vs": scatter_pages(cache["vs"], page_table, positions,
+                                    vs[:, None], ok),
+            }
+            vk = gather_pages(cache["k"], page_table)
+            vv = gather_pages(cache["v"], page_table)
+            vks = gather_pages(cache["ks"], page_table)
+            vvs = gather_pages(cache["vs"], page_table)
         cd = v.dtype
+        t = vk.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
         mask = make_mask(
             positions, k_pos, causal=True, window=self.window,
@@ -380,13 +499,13 @@ class Attention:
         # scale multiplies live on the (B, K, G, 1, T)-sized tensors.
         qg = self._group(q)                           # (B, 1, K, G, hd)
         scores = jnp.einsum(
-            "bskgh,btkh->bkgst", qg, cache["k"].astype(cd)
+            "bskgh,btkh->bkgst", qg, vk.astype(cd)
         ).astype(jnp.float32)
-        scores = scores * cache["ks"].transpose(0, 2, 1)[:, :, None, None, :]
+        scores = scores * vks.transpose(0, 2, 1)[:, :, None, None, :]
         scores = scores * (1.0 / math.sqrt(self.hd))
         scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(cd)
-        pv = probs * cache["vs"].transpose(0, 2, 1)[:, :, None, None, :].astype(cd)
-        out = jnp.einsum("bkgst,btkh->bskgh", pv, cache["v"].astype(cd))
+        pv = probs * vvs.transpose(0, 2, 1)[:, :, None, None, :].astype(cd)
+        out = jnp.einsum("bkgst,btkh->bskgh", pv, vv.astype(cd))
         y = self.wo(params["wo"], out.reshape(b, 1, self.n_heads * self.hd))
         return y, cache

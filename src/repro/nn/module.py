@@ -25,6 +25,26 @@ import numpy as np
 Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
 
 
+# ---------------------------------------------------------------------------
+# Per-slot state slicing, shared by every serving cache family that keeps a
+# slot axis (SSM / RG-LRU carries, windowed-attention rings): one
+# implementation of "one slot's rows as a standalone pytree" and its
+# inverse, so slot-axis handling cannot diverge between families.
+# ``axis`` is the slot axis (1 under a stacked layer scan).
+# ---------------------------------------------------------------------------
+def slice_slot_rows(tree, slot, axis: int = 0):
+    return jax.tree.map(lambda v: v[(slice(None),) * axis + (slot,)], tree)
+
+
+def set_slot_rows(tree, slot, rows, axis: int = 0):
+    return jax.tree.map(
+        lambda v, s: v.at[(slice(None),) * axis + (slot,)].set(
+            s.astype(v.dtype)
+        ),
+        tree, rows,
+    )
+
+
 def kaiming(scale: float = 1.0, fan_axis: int = -1) -> Initializer:
     def init(key, shape, dtype):
         fan_in = shape[fan_axis] if len(shape) else 1

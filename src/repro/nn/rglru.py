@@ -109,6 +109,20 @@ class RGLRUBlock:
             "conv": jnp.zeros((batch, self.conv_width - 1, self.width), dtype),
         }
 
+    def snapshot_state(self, state: dict, slot, axis: int = 0) -> dict:
+        """One slot's (h, conv window) carry as a standalone pytree — what
+        the serving prefix trie pins at a page boundary so an identical
+        prompt prefix resumes the recurrence without replaying it.
+        ``axis`` is the slot axis (1 under a stacked layer scan)."""
+        return mod.slice_slot_rows(state, slot, axis)
+
+    def restore_state(self, state: dict, slot, snap: dict,
+                      axis: int = 0) -> dict:
+        """Write a pinned snapshot into a slot's rows (prefix-hit
+        admission): h resumes mid-sequence and the conv window replays
+        the boundary's last (w-1) pre-conv inputs."""
+        return mod.set_slot_rows(state, slot, snap, axis)
+
     def extend(self, params: dict, u: jax.Array, state: dict, valid: jax.Array):
         """Chunked-prefill step: u (B, C, d) advances (h, conv window) by
         each row's count of valid columns.

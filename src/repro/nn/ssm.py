@@ -188,6 +188,21 @@ class Mamba2Block:
             "conv": jnp.zeros((batch, self.conv_width - 1, self.d_conv), dtype),
         }
 
+    def snapshot_state(self, state: dict, slot, axis: int = 0) -> dict:
+        """One slot's (h, conv) carry as a standalone pytree. Unlike the
+        attention families there is no per-token cache to page: the SSM
+        state at a prefix boundary IS the whole prefix, so the serving
+        prefix trie (serve/prefix.py) pins exactly this snapshot at each
+        page boundary. ``axis`` is the slot axis (1 under a stacked layer
+        scan)."""
+        return mod.slice_slot_rows(state, slot, axis)
+
+    def restore_state(self, state: dict, slot, snap: dict,
+                      axis: int = 0) -> dict:
+        """Map a pinned snapshot back into a slot's rows — the O(1)
+        prefix-hit admission for the recurrent family (no re-prefill)."""
+        return mod.set_slot_rows(state, slot, snap, axis)
+
     def extend(self, params: dict, u: jax.Array, state: dict, valid: jax.Array):
         """Chunked-prefill step: u (B, C, d_model) advances the recurrent
         state by each row's count of valid columns.

@@ -1,4 +1,6 @@
 from repro.serve.engine import BatchedEngine, Request, ServeConfig
+from repro.serve.kvpool import KVPool
+from repro.serve.prefix import PrefixTrie
 from repro.serve.sampling import sample_logits
 from repro.serve.weights import (
     export_serving_params,
@@ -9,6 +11,8 @@ from repro.serve.weights import (
 
 __all__ = [
     "BatchedEngine",
+    "KVPool",
+    "PrefixTrie",
     "Request",
     "ServeConfig",
     "sample_logits",

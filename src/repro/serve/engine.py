@@ -36,6 +36,20 @@ Design (vLLM/Sarathi-style, adapted to fixed-shape XLA):
   are dropped before the cache write). The old per-bucket left-padded
   prefill — and its per-admission full-cache splice — is gone; the only
   compiled prefill shape is the ``(n_slots, chunk_tokens)`` extend.
+* Attention K/V lives in a PAGED POOL (serve/kvpool.py): fixed
+  ``page_tokens`` pages, a free-list allocator with per-page refcounts,
+  and one int32 page table ``(n_slots, max_len // page_tokens)`` that
+  every full-attention layer reads — the jitted tick gathers a per-slot
+  contiguous view and scatters new rows through the table, so shapes
+  stay static and the compiled functions are unchanged as pages move.
+  With ``prefix_cache`` a radix trie over prompt token ids
+  (serve/prefix.py) pins completed page runs plus recurrent-state
+  snapshots at page boundaries; admission maps the longest cached
+  prefix into the slot in O(1) and chunked prefill starts at the first
+  uncached token. Retirement publishes the finished prompt's pages back
+  into the trie; LRU leaf eviction reclaims pages when the pool runs
+  dry. Tokens are byte-identical with the cache on or off (the prefix
+  parity wall in tests/test_prefix_cache.py).
 * Weights are SERVE-form (packed tiles + alphas, repro.serve.weights);
   passing ``mesh=`` places them with the serving sharding rules and
   traces extend/decode under those rules (DESIGN.md §5).
@@ -53,6 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import axis_rules, param_shardings
+from repro.serve.kvpool import KVPool
+from repro.serve.prefix import PrefixTrie
 from repro.serve.sampling import SamplingParams, sample_logits_batch
 
 PREFILL = "prefill"
@@ -60,12 +76,13 @@ DECODE = "decode"
 
 
 def _tick_fns(model):
-    """The three jitted serving entry points for ``model``, built once and
+    """The jitted serving entry points for ``model``, built once and
     cached ON the model object: every engine over the same model (replica
     pools, re-created engines, the test matrix's chunk-size sweeps) reuses
     one trace cache instead of recompiling per engine. The functions close
-    over nothing but the model; batch width, chunk width, and — under a
-    mesh — input shardings are ordinary retrace keys."""
+    over nothing but the model; batch width, chunk width, page-table
+    width, and — under a mesh — input shardings are ordinary retrace
+    keys."""
     cached = getattr(model, "_serve_tick_fns", None)
     if cached is not None:
         return cached
@@ -74,30 +91,33 @@ def _tick_fns(model):
         return jax.vmap(jax.random.fold_in)(base_keys, counts)
 
     def _decode_tick(params, tokens, caches, lengths, active,
-                     temps, topks, base_keys, counts):
+                     temps, topks, base_keys, counts, ptab):
         """decode step + per-slot sampling fused under one jit, confined
         to the ``active`` decoding slots: the (n_slots, vocab) logits
         never leave the device and prefilling/free slots keep their
-        caches, lengths, and last token bit-identical."""
+        caches, lengths, and last token bit-identical. Paged pool writes
+        are confined in-kernel by ``active``; per-slot families by the
+        merge."""
         logits, new_caches, new_lengths = model.decode_step(
-            params, tokens, caches, lengths
+            params, tokens, caches, lengths,
+            page_table=ptab, active=active,
         )
         nxt = sample_logits_batch(
             logits, _row_keys(base_keys, counts),
             temperature=temps, top_k=topks,
         )
-        caches = model.merge_caches(caches, new_caches, active)
+        caches = model.merge_caches(caches, new_caches, active, paged=True)
         lengths = jnp.where(active, new_lengths, lengths)
         nxt = jnp.where(active, nxt, tokens[:, 0])
         return nxt, caches, lengths
 
     def _extend_tick(params, block, caches, lengths, n_new,
-                     temps, topks, base_keys, counts):
+                     temps, topks, base_keys, counts, ptab):
         """one chunked-prefill step for every scheduled slot + sampling of
         each slot's candidate first token (the host keeps it only for
         slots whose prompt just completed)."""
         logits, caches, lengths = model.extend(
-            params, block, caches, lengths, n_new
+            params, block, caches, lengths, n_new, page_table=ptab
         )
         toks = sample_logits_batch(
             logits, _row_keys(base_keys, counts),
@@ -106,21 +126,22 @@ def _tick_fns(model):
         return toks, caches, lengths
 
     def _reset_slot(caches, slot):
-        """Zero one slot's rows across every cache family: recurrent/SSM
-        state MUST start from zeros (extend continues from the slot's
-        state), attention rows are cleared for hygiene."""
-        out = []
-        for seg, c in zip(model.segments, caches):
-            ax = 1 if seg.scanned else 0
-            out.append(jax.tree.map(
-                lambda v: v.at[(slice(None),) * ax + (slot,)].set(
-                    jnp.zeros((), v.dtype)
-                ),
-                c,
-            ))
-        return out
+        """Zero one slot's rows across the per-slot cache families
+        (recurrent/SSM state MUST start from zeros); paged pool leaves
+        pass through — their pages are shared or about to be remapped."""
+        return model.reset_slot_caches(caches, slot, paged=True)
 
-    fns = (jax.jit(_decode_tick), jax.jit(_extend_tick), jax.jit(_reset_slot))
+    def _snapshot_slot(caches, slot):
+        """One slot's recurrent-family state (prefix-trie snapshot)."""
+        return model.snapshot_slot_caches(caches, slot)
+
+    def _restore_slot(caches, slot, snaps):
+        """Prefix-hit admission: write a pinned snapshot into a slot."""
+        return model.restore_slot_caches(caches, slot, snaps)
+
+    fns = (jax.jit(_decode_tick), jax.jit(_extend_tick),
+           jax.jit(_reset_slot), jax.jit(_snapshot_slot),
+           jax.jit(_restore_slot))
     model._serve_tick_fns = fns
     return fns
 
@@ -138,6 +159,8 @@ class Request:
     token_steps: List[int] = dataclasses.field(default_factory=list)
     # engine tick at which each output token was emitted: token_steps[0]
     # is the TTFT tick; successive gaps are per-token inter-token ticks
+    prefix_hit_tokens: int = 0           # prompt tokens served from the
+    # prefix cache at admission (page-aligned; 0 on a cold miss)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,12 +171,29 @@ class ServeConfig:
     temperature: float = 0.0
     top_k: Optional[int] = None
     seed: int = 0
+    page_tokens: int = 16               # attention KV pool page size
+    pool_pages: Optional[int] = None    # pool capacity; default = the
+    # dense-equivalent n_slots * (max_len // page_tokens)
+    prefix_cache: bool = False          # radix-trie shared-prefix reuse
+    prefix_nodes: int = 512             # trie node cap (snapshots hold
+    # real device memory for the recurrent families)
 
     def __post_init__(self):
-        """Fail fast on a bad chunk width. chunk_tokens is both the extend
-        call's compiled column count and the per-tick token budget; a
-        non-positive value wedges the scheduler and one past max_len could
-        scatter past the cache."""
+        """Fail fast on an impossible engine shape.
+
+        n_slots/max_len: a zero-slot engine wedges the scheduler silently
+        (every submit queues forever) and a zero-length cache can hold no
+        token. chunk_tokens is both the extend call's compiled column
+        count and the per-tick token budget; non-positive wedges the
+        scheduler, past max_len could scatter past the cache.
+        page_tokens must divide max_len so the paged gather view is
+        EXACTLY the dense (max_len,) layout — that equality is what makes
+        paged-vs-dense tokens byte-identical. pool_pages below one slot's
+        worth could never complete a full-length sequence."""
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1: {self.n_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1: {self.max_len}")
         if self.chunk_tokens <= 0:
             raise ValueError(
                 f"chunk_tokens must be positive: {self.chunk_tokens}"
@@ -162,6 +202,27 @@ class ServeConfig:
             raise ValueError(
                 f"chunk_tokens {self.chunk_tokens} exceeds max_len "
                 f"{self.max_len}: a chunk could not fit the decode cache"
+            )
+        if self.page_tokens <= 0:
+            raise ValueError(
+                f"page_tokens must be positive: {self.page_tokens}"
+            )
+        if self.max_len % self.page_tokens:
+            raise ValueError(
+                f"page_tokens {self.page_tokens} must divide max_len "
+                f"{self.max_len}: the per-slot page-table view must be "
+                f"exactly the dense cache layout"
+            )
+        if self.pool_pages is not None:
+            if self.pool_pages < self.max_len // self.page_tokens:
+                raise ValueError(
+                    f"pool_pages {self.pool_pages} is below one slot's "
+                    f"worth ({self.max_len // self.page_tokens} pages): "
+                    f"no sequence could reach max_len"
+                )
+        if self.prefix_nodes < 1:
+            raise ValueError(
+                f"prefix_nodes must be >= 1: {self.prefix_nodes}"
             )
 
 
@@ -196,8 +257,41 @@ class BatchedEngine:
         self._offsets = np.zeros((cfg.n_slots,), np.int64)  # prompt consumed
         self._admit_order: List[int] = []        # prefill scheduling FIFO
 
+        # paged attention KV pool + per-slot page tables (host-managed;
+        # the table rides into the jitted calls as a runtime int32 array)
+        self.pt = cfg.page_tokens
+        self.npp = cfg.max_len // self.pt        # pages per slot
+        self._paged = model.has_full_attn
+        n_pages = cfg.pool_pages or cfg.n_slots * self.npp
+        self.pool = KVPool(n_pages, self.pt) if self._paged else None
+        self._ptab = np.zeros((cfg.n_slots, self.npp), np.int32)
+        self._n_mapped = np.zeros((cfg.n_slots,), np.int64)  # pages held
+
+        # shared-prefix radix trie + per-slot boundary snapshots
+        self.trie = (
+            PrefixTrie(self.pt, pool=self.pool, max_nodes=cfg.prefix_nodes)
+            if cfg.prefix_cache else None
+        )
+        self._stateful = model.has_recurrent_state
+        self._snaps: List[Dict[int, object]] = [
+            {} for _ in range(cfg.n_slots)
+        ]
+        # page boundaries of the slot's prompt that must be snapshotted
+        # (their trie node is missing or snapshotless); computed once at
+        # admission so prefill neither pauses at nor captures boundaries
+        # the trie already covers
+        self._need_snaps: List[set] = [set() for _ in range(cfg.n_slots)]
+        self._stats = {
+            "admitted": 0, "prefix_hits": 0, "prefix_tokens": 0,
+            "prompt_tokens": 0,
+        }
+
         cache_dtype = getattr(model.ctx, "compute_dtype", jnp.bfloat16)
-        self.caches = model.init_caches(cfg.n_slots, cfg.max_len, cache_dtype)
+        self.caches = model.init_caches(
+            cfg.n_slots, cfg.max_len, cache_dtype,
+            page_tokens=self.pt if self._paged else None,
+            n_pages=n_pages if self._paged else None,
+        )
         self.lengths = jnp.zeros((cfg.n_slots,), jnp.int32)
         self.tokens = jnp.zeros((cfg.n_slots, 1), jnp.int32)
         # Per-slot sampling params, populated at admission from the
@@ -212,7 +306,8 @@ class BatchedEngine:
         self._slot_keys = jnp.zeros((cfg.n_slots, 2), jnp.uint32)
         self._counts = np.zeros((cfg.n_slots,), np.int64)
 
-        self._decode, self._extend, self._reset = _tick_fns(model)
+        (self._decode, self._extend, self._reset,
+         self._snapshot, self._restore) = _tick_fns(model)
         self.steps = 0
 
     def _mesh_ctx(self):
@@ -244,14 +339,40 @@ class BatchedEngine:
 
     def _maybe_retire(self, slot: int, req: Request, tok: int) -> bool:
         """Retire a just-extended request. EOS is checked before the length
-        cap so a stop token arriving exactly at max_tokens reports "eos"."""
+        cap so a stop token arriving exactly at max_tokens reports "eos";
+        the cache-capacity cap retires a sequence whose NEXT decode step
+        would write K/V past max_len — every emitted token attended a
+        complete cache, instead of silently dropping the newest rows and
+        generating from a truncated context. Retirement publishes the
+        finished prompt's complete pages (and boundary snapshots) into
+        the prefix trie, then drops the slot's page references — shared
+        pages survive through the trie's pin."""
         if tok == int(self._eos_ids[slot]):
             req.finish_reason = "eos"
         elif len(req.output) >= req.params.max_tokens:
             req.finish_reason = "length"
+        elif len(req.prompt) + len(req.output) > self.cfg.max_len:
+            req.finish_reason = "length"
         else:
             return False
         req.done = True
+        if self.trie is not None:
+            n_pub = len(req.prompt) // self.pt
+            if n_pub:
+                pages = (
+                    [int(self._ptab[slot, i]) for i in range(n_pub)]
+                    if self.pool is not None else None
+                )
+                self.trie.insert(
+                    req.prompt[: n_pub * self.pt], pages,
+                    self._snaps[slot], now=self.steps,
+                )
+        if self.pool is not None:
+            for i in range(int(self._n_mapped[slot])):
+                self.pool.release(int(self._ptab[slot, i]))
+            self._n_mapped[slot] = 0
+        self._snaps[slot] = {}
+        self._need_snaps[slot] = set()
         self._live.pop(slot, None)
         self._free.append(slot)
         self._phase[slot] = None
@@ -268,15 +389,45 @@ class BatchedEngine:
         return True
 
     def _admit(self, slot: int, req: Request):
-        """O(1) admission: claim the slot and zero its state — the prompt
-        itself streams in through subsequent extend ticks."""
+        """O(1) admission: claim the slot, zero its per-slot state, and —
+        with the prefix cache on — map the longest trie-pinned prefix in:
+        the matched page run lands in the slot's page table (refcounted,
+        no K/V copy) and the deepest boundary snapshot restores the
+        recurrent families, so chunked prefill starts at the first
+        UNCACHED token."""
         self._live[slot] = req
         self._phase[slot] = PREFILL
-        self._offsets[slot] = 0
         self._admit_order.append(slot)
         req.admit_step = self.steps
-        self.lengths = self.lengths.at[slot].set(0)
+        boundary, path = 0, []
+        if self.trie is not None:
+            path = self.trie.match(
+                req.prompt, require_snapshot=self._stateful, now=self.steps
+            )
+            boundary = len(path) * self.pt
+        self._stats["admitted"] += 1
+        self._stats["prompt_tokens"] += len(req.prompt)
+        if boundary:
+            self._stats["prefix_hits"] += 1
+            self._stats["prefix_tokens"] += boundary
+        req.prefix_hit_tokens = boundary
+        if self.pool is not None:
+            for i, node in enumerate(path):
+                self.pool.retain(node.page)
+                self._ptab[slot, i] = node.page
+            self._n_mapped[slot] = len(path)
+        self._snaps[slot] = {}
+        self._need_snaps[slot] = (
+            self._boundaries_needing_snapshots(req.prompt)
+            if self.trie is not None and self._stateful else set()
+        )
+        self._offsets[slot] = boundary
+        self.lengths = self.lengths.at[slot].set(boundary)
         self.caches = self._reset(self.caches, slot)
+        if boundary and self._stateful:
+            self.caches = self._restore(
+                self.caches, slot, path[-1].snapshot
+            )
         # Resolve the request's sampling params against the engine defaults
         # (is-None sentinels: an explicit temperature=0.0 / top_k=0 wins
         # over a stochastic ServeConfig default) and pin them to the slot —
@@ -291,6 +442,50 @@ class BatchedEngine:
         self._counts[slot] = 0
 
     # ------------------------------------------------------------------
+    def _boundaries_needing_snapshots(self, prompt) -> set:
+        """Page boundaries of ``prompt`` whose trie node is missing (or
+        snapshotless, e.g. republished after eviction) — the only places
+        prefill must pause at and capture recurrent state. Once the walk
+        falls off the trie every deeper boundary needs one."""
+        need, node = set(), self.trie.root
+        for i in range(len(prompt) // self.pt):
+            if node is not None:
+                key = tuple(int(t) for t in
+                            prompt[i * self.pt:(i + 1) * self.pt])
+                node = node.children.get(key)
+            if node is None or node.snapshot is None:
+                need.add((i + 1) * self.pt)
+        return need
+
+    def _alloc_page(self) -> int:
+        """Take a page from the pool, evicting LRU trie leaves on demand.
+        A trie eviction drops the trie's reference; the loop keeps going
+        because a page shared with a live slot does not free until that
+        slot retires."""
+        pid = self.pool.alloc()
+        while pid is None:
+            if self.trie is None or not self.trie.evict_one():
+                raise RuntimeError(
+                    f"KV page pool exhausted ({self.pool.n_pages} pages, "
+                    f"0 free, {len(self.trie) if self.trie else 0} trie "
+                    f"nodes): raise pool_pages"
+                )
+            pid = self.pool.alloc()
+        return pid
+
+    def _ensure_pages(self, slot: int, last_pos: int):
+        """Grow the slot's page table to cover ``last_pos``: fresh private
+        pages for everything past the mapped prefix. Positions past the
+        table's reach (length overruns) are left to the scatter's drop —
+        identical to the dense cache's out-of-bounds behavior."""
+        if self.pool is None:
+            return
+        need = min(last_pos // self.pt, self.npp - 1)
+        while self._n_mapped[slot] <= need:
+            pid = self._alloc_page()
+            self._ptab[slot, self._n_mapped[slot]] = pid
+            self._n_mapped[slot] += 1
+
     def _schedule_prefill(self, n_decoding: int) -> Dict[int, int]:
         """Token-budget pass: chunk_tokens per tick, decode-priority.
 
@@ -298,7 +493,17 @@ class BatchedEngine:
         goes to prefilling slots in admission order, each capped at the
         chunk width. The head of the prefill queue always receives at
         least one token so prefill progresses even when decoding slots
-        consume the whole budget."""
+        consume the whole budget.
+
+        With the prefix cache on a STATEFUL model (recurrent carries or
+        windowed rings), a chunk additionally never crosses a page
+        boundary that still NEEDS a snapshot (``_need_snaps``, computed
+        at admission): the recurrent state right after the chunk then
+        sits at exactly the boundary the trie pins. Boundaries the trie
+        already covers don't pause the chunk, so a warm repeat of a
+        shared prompt prefills at full chunk width. Stateless (pure
+        full-attention) models never cap — their pages are position-
+        addressed, chunk splits don't matter."""
         c = self.cfg.chunk_tokens
         budget = c - n_decoding
         takes: Dict[int, int] = {}
@@ -306,9 +511,13 @@ class BatchedEngine:
         for slot in self._admit_order:
             if self._phase[slot] != PREFILL:
                 continue
-            rem = len(self._live[slot].prompt) - int(self._offsets[slot])
+            off = int(self._offsets[slot])
+            rem = len(self._live[slot].prompt) - off
             floor = 1 if first else 0
             take = min(c, rem, max(budget, floor))
+            ahead = [b for b in self._need_snaps[slot] if b > off]
+            if ahead:
+                take = min(take, min(ahead) - off)
             first = False
             if take <= 0:
                 continue
@@ -324,15 +533,25 @@ class BatchedEngine:
             off = int(self._offsets[slot])
             block[slot, :take] = self._live[slot].prompt[off:off + take]
             n_new[slot] = take
+            self._ensure_pages(slot, off + take - 1)
         toks, self.caches, self.lengths = self._extend(
             self.params, jnp.asarray(block), self.caches, self.lengths,
             jnp.asarray(n_new), self.temps, self.topks,
             self._slot_keys, jnp.asarray(self._counts),
+            jnp.asarray(self._ptab),
         )
         toks_host = np.asarray(toks)
         for slot, take in takes.items():
             req = self._live[slot]
             self._offsets[slot] += take
+            off_new = int(self._offsets[slot])
+            if off_new in self._need_snaps[slot]:
+                # prefill just landed on a boundary the trie is missing:
+                # pin the recurrent state HERE so the published (or
+                # snapshot-backfilled) node can restore it
+                self._snaps[slot][off_new] = self._snapshot(
+                    self.caches, slot
+                )
             if self._offsets[slot] == len(req.prompt):
                 # prompt complete: the chunk's last-column logits are the
                 # request's first sampled token
@@ -348,10 +567,16 @@ class BatchedEngine:
     def _run_decode(self, decoding: List[int]):
         active = np.zeros((self.cfg.n_slots,), bool)
         active[decoding] = True
+        for slot in decoding:
+            req = self._live[slot]
+            pos = len(req.prompt) + len(req.output) - 1  # row this step writes
+            if pos < self.cfg.max_len:
+                self._ensure_pages(slot, pos)
         nxt, self.caches, self.lengths = self._decode(
             self.params, self.tokens, self.caches, self.lengths,
             jnp.asarray(active), self.temps, self.topks,
             self._slot_keys, jnp.asarray(self._counts),
+            jnp.asarray(self._ptab),
         )
         nxt_host = np.asarray(nxt)
         self.tokens = nxt[:, None]
@@ -382,6 +607,21 @@ class BatchedEngine:
             if decoding:
                 self._run_decode(decoding)
         self.steps += 1
+
+    def stats(self) -> Dict[str, object]:
+        """Prefix-cache and pool health counters for the serve CLI's
+        latency report (and tests): admission hit rate, prefill tokens
+        the cache skipped, page-pool utilization, trie size/evictions."""
+        s = dict(self._stats)
+        s["hit_rate"] = s["prefix_hits"] / max(s["admitted"], 1)
+        s["prefill_tokens_skipped"] = s.pop("prefix_tokens")
+        if self.pool is not None:
+            s["pool_pages"] = self.pool.n_pages
+            s["pages_in_use"] = self.pool.used_pages
+            s["page_utilization"] = self.pool.used_pages / self.pool.n_pages
+        s["trie_nodes"] = len(self.trie) if self.trie is not None else 0
+        s["evictions"] = self.trie.evictions if self.trie is not None else 0
+        return s
 
     def run_until_drained(self, max_steps: int = 10_000, on_tick=None) -> int:
         """Step until every submitted request completes; returns the tick

@@ -1,0 +1,89 @@
+"""Block-paged KV-cache pool: host-side page accounting for the engine.
+
+The serving attention caches are no longer dense per-slot ``(max_len,)``
+row blocks but a POOL of fixed-size pages (``page_tokens`` cache rows
+each) shared by every full-attention layer: page id ``i`` addresses the
+same physical page index in every layer's pool tensor, so one int32 page
+table ``(n_slots, max_len // page_tokens)`` translates a slot's absolute
+token positions for the whole stack (vLLM-style block tables, adapted to
+fixed-shape XLA — the jitted tick gathers a per-slot contiguous view and
+scatters new rows through the table; see ``nn.attention.gather_pages``).
+
+This module is the HOST side only: a free-list allocator with per-page
+refcounts. Copy-on-write degenerates to never-copy by construction —
+only COMPLETE pages are ever shared (the prefix trie pins page-aligned
+runs, and a slot admitted on a prefix hit starts writing at the page
+boundary), so a shared page is read-only for its whole lifetime and
+sharing is pure refcounting:
+
+    * a slot mapping a page (its own fresh page, or a trie hit) holds
+      one reference until retirement;
+    * the prefix trie holds one reference per node it pins;
+    * a page returns to the free list when the last reference drops.
+
+Device tensors never move: mapping a cached prefix into a slot is O(1)
+page-table bookkeeping, no K/V bytes are copied.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class KVPool:
+    """Refcounted free-list allocator over ``n_pages`` KV pages."""
+
+    def __init__(self, n_pages: int, page_tokens: int):
+        if n_pages <= 0:
+            raise ValueError(f"n_pages must be positive: {n_pages}")
+        if page_tokens <= 0:
+            raise ValueError(f"page_tokens must be positive: {page_tokens}")
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        self.refcounts = np.zeros((n_pages,), np.int64)
+        # LIFO free list: a just-freed page is reused first, keeping the
+        # working set of touched pages (and their cache lines) small
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+
+    # ------------------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """Take a free page (refcount 1), or None when the pool is empty
+        — the caller decides whether to evict or fail."""
+        if not self._free:
+            return None
+        pid = self._free.pop()
+        assert self.refcounts[pid] == 0, f"free page {pid} had references"
+        self.refcounts[pid] = 1
+        return pid
+
+    def retain(self, pid: int) -> None:
+        """Add a reference to a live page (prefix-hit mapping, trie pin)."""
+        if self.refcounts[pid] <= 0:
+            raise ValueError(f"retain of unreferenced page {pid}")
+        self.refcounts[pid] += 1
+
+    def release(self, pid: int) -> None:
+        """Drop one reference; the page returns to the free list at zero."""
+        if self.refcounts[pid] <= 0:
+            raise ValueError(f"release of unreferenced page {pid}")
+        self.refcounts[pid] -= 1
+        if self.refcounts[pid] == 0:
+            self._free.append(pid)
+
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def check(self) -> None:
+        """Invariants the property tests pin: refcounts never negative,
+        free list and referenced pages exactly partition the pool."""
+        assert np.all(self.refcounts >= 0)
+        assert len(set(self._free)) == len(self._free)
+        assert int(np.sum(self.refcounts > 0)) + len(self._free) == self.n_pages
+        assert all(self.refcounts[p] == 0 for p in self._free)

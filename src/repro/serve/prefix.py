@@ -1,0 +1,180 @@
+"""Radix trie over prompt token ids: shared-prefix reuse for the engine.
+
+Nodes live at PAGE granularity: each non-root node is one
+``page_tokens``-token edge, so a node at depth d pins the cache state of
+the prefix ``tokens[: d * page_tokens]`` — two resources, one per cache
+family class:
+
+  * ``page``     — the attention-pool page id holding that page's K/V
+                   rows in every full-attention layer (refcounted by the
+                   :class:`~repro.serve.kvpool.KVPool`; the trie holds
+                   one reference per pinned node). ``None`` for models
+                   with no full-attention layers.
+  * ``snapshot`` — a pytree of the RECURRENT cache families' per-slot
+                   state at exactly the page boundary: SSM ``(h, conv)``
+                   carries, RG-LRU ``(h, conv)`` carries, and windowed-
+                   attention ring contents. ``None`` for stateless
+                   (pure full-attention) models, where the pages alone
+                   reconstruct the prefix.
+
+Admission matches the longest pinned prefix (page-aligned, and capped at
+``len(prompt) - 1`` so at least one prompt token always runs through the
+model to produce first-token logits), maps the matched page run into the
+slot's page table, and restores the deepest matched snapshot — all O(1)
+in prefix length, no re-prefill, no K/V copy. Retirement publishes the
+finished prompt's complete pages back as new nodes.
+
+Eviction is LRU over LEAF nodes only (an inner node's children address
+cache state that extends it, so the path must die bottom-up). Evicting a
+node drops the trie's page reference; the page returns to the pool once
+no live slot maps it. The node count is capped (``max_nodes``) because
+recurrent snapshots hold real device memory, and the engine also evicts
+on demand when the page pool runs dry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serve.kvpool import KVPool
+
+
+@dataclasses.dataclass(eq=False)
+class PrefixNode:
+    key: Tuple[int, ...]                 # this node's page_tokens token ids
+    parent: Optional["PrefixNode"]
+    depth: int                           # pages from root (root = 0)
+    page: Optional[int] = None           # attention pool page id
+    snapshot: Any = None                 # recurrent-state pytree at boundary
+    last_used: int = 0
+    children: Dict[Tuple[int, ...], "PrefixNode"] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class PrefixTrie:
+    def __init__(self, page_tokens: int, pool: Optional[KVPool] = None,
+                 max_nodes: int = 512):
+        if page_tokens <= 0:
+            raise ValueError(f"page_tokens must be positive: {page_tokens}")
+        if max_nodes < 1:
+            raise ValueError(f"max_nodes must be >= 1: {max_nodes}")
+        self.pt = page_tokens
+        self.pool = pool
+        self.max_nodes = max_nodes
+        self.root = PrefixNode(key=(), parent=None, depth=0)
+        self._nodes: List[PrefixNode] = []     # every non-root node
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    # ------------------------------------------------------------------
+    def match(self, tokens, *, require_snapshot: bool = False,
+              now: int = 0) -> List[PrefixNode]:
+        """Longest pinned page-aligned prefix of ``tokens``, as the node
+        path from the shallowest matched page down.
+
+        Capped at ``(len(tokens) - 1) // page_tokens`` pages so a full
+        match still leaves >= 1 token to prefill (the logits source for
+        the request's first sampled token). With ``require_snapshot`` the
+        walk answers with the deepest node that actually HAS a snapshot
+        (a republished inner node can lack one) — shallower snapshotless
+        nodes on the path are fine, the restore only reads the last."""
+        toks = [int(t) for t in tokens]
+        n_max = (len(toks) - 1) // self.pt
+        node, path = self.root, []
+        for i in range(n_max):
+            child = node.children.get(tuple(toks[i * self.pt:(i + 1) * self.pt]))
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        best = len(path) - 1
+        while best >= 0 and require_snapshot and path[best].snapshot is None:
+            best -= 1
+        path = path[: best + 1]
+        for n in path:
+            n.last_used = now
+        return path
+
+    # ------------------------------------------------------------------
+    def insert(self, tokens, pages: Optional[List[int]],
+               snapshots: Dict[int, Any], *, now: int = 0) -> int:
+        """Publish a finished prompt's complete pages.
+
+        ``tokens`` must be page-aligned (the caller truncates to whole
+        pages); ``pages[i]`` is the slot's pool page holding page i (the
+        trie RETAINS it — the caller keeps its own reference and releases
+        it as usual), ``snapshots[boundary]`` the recurrent-state pytree
+        captured when prefill crossed ``boundary`` tokens. Existing nodes
+        keep their page (first publisher wins; the newcomer's pages
+        simply drop with its slot) but a missing SNAPSHOT is backfilled —
+        a node republished after eviction would otherwise stay
+        snapshotless forever and permanently cap the stateful match
+        depth at its boundary. Returns the number of new nodes."""
+        if len(tokens) % self.pt:
+            raise ValueError(
+                f"insert of {len(tokens)} tokens is not page-aligned "
+                f"(page_tokens={self.pt})"
+            )
+        toks = [int(t) for t in tokens]
+        node, created = self.root, 0
+        protect = set()
+        for i in range(len(toks) // self.pt):
+            key = tuple(toks[i * self.pt:(i + 1) * self.pt])
+            child = node.children.get(key)
+            if child is None:
+                if len(self._nodes) >= self.max_nodes and not self.evict_one(
+                    exclude=protect | {node}
+                ):
+                    break                      # cap hit, nothing evictable
+                child = PrefixNode(
+                    key=key, parent=node, depth=node.depth + 1,
+                    page=pages[i] if pages else None,
+                    snapshot=snapshots.get((i + 1) * self.pt),
+                    last_used=now,
+                )
+                if child.page is not None:
+                    self.pool.retain(child.page)
+                node.children[key] = child
+                self._nodes.append(child)
+                created += 1
+            else:
+                child.last_used = now
+                if child.snapshot is None:
+                    child.snapshot = snapshots.get((i + 1) * self.pt)
+            protect.add(child)
+            node = child
+        return created
+
+    # ------------------------------------------------------------------
+    def evict_one(self, exclude=()) -> bool:
+        """Detach the least-recently-used LEAF (bottom-up death), release
+        its page reference and drop its snapshot. Returns False when no
+        leaf is evictable."""
+        victim = None
+        for n in self._nodes:
+            if n.children or n in exclude:
+                continue
+            if victim is None or n.last_used < victim.last_used:
+                victim = n
+        if victim is None:
+            return False
+        victim.parent.children.pop(victim.key)
+        self._nodes.remove(victim)
+        if victim.page is not None:
+            self.pool.release(victim.page)
+        victim.snapshot = None
+        self.evictions += 1
+        return True
+
+    def clear(self) -> None:
+        while self.evict_one():
+            pass
+
+    def held_pages(self) -> List[int]:
+        return [n.page for n in self._nodes if n.page is not None]

@@ -1,0 +1,288 @@
+"""Prefix-cache parity wall: with the radix-trie prefix cache ENABLED,
+emitted tokens are byte-identical to the cache-disabled engine across
+cold-miss, warm-hit, partial-hit, and post-eviction admissions — greedy
+and seeded stochastic, on all three decode-cache families plus int8 KV.
+
+Why parity holds by construction: a trie hit maps PAGE-ALIGNED prefix
+state that an identical token stream produced — attention pages hold the
+K/V rows positions 0..boundary-1 would have gotten (K/V at position p
+depends only on tokens <= p), recurrent snapshots hold the carry at
+exactly ``boundary`` tokens (chunk scheduling never crosses a page
+boundary on stateful models, so the snapshot is taken at the boundary,
+not near it) — and sampling keys only on (seed, rid, t), never on how
+the cache content was obtained.
+
+Plus pool accounting: pages never leak across admissions, trie eviction
+reclaims them under pressure, and ``BatchedEngine.stats()`` reports the
+hits the scheduler actually served.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.nn import module as mod
+from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.serve.engine import BatchedEngine, ServeConfig
+from repro.serve.sampling import SamplingParams
+from repro.serve.weights import export_serving_params
+
+KEY = jax.random.PRNGKey(0)
+
+FAMILY_ARCHS = [
+    "granite-8b",          # full attention -> paged pool pages
+    "recurrentgemma-2b",   # windowed ring + RG-LRU -> boundary snapshots
+    "mamba2-370m",         # SSM (h, conv) -> boundary snapshots
+]
+
+# page_tokens=4 below: the 14-token prompt publishes 3 complete pages and
+# a warm re-admission may match at most (14-1)//4 = 3 of them
+PROMPT = [3, 9, 4, 11, 7, 2, 5, 1, 8, 6, 10, 12, 0, 13]
+PARTIAL = PROMPT[:4] + [12, 3, 9, 1, 7]      # shares exactly page 0
+OTHER = [5, 5, 2, 8, 1, 9, 4, 4, 6, 2]       # diverges at token 0
+
+
+@functools.lru_cache(maxsize=None)
+def build_serve(arch, **cfg_over):
+    cfg = get_config(arch).reduced()
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    tm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN,
+                                       compute_dtype=jnp.float32))
+    sm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
+                                       compute_dtype=jnp.float32,
+                                       use_pallas=False))
+    tp = mod.init_params(tm.specs(), KEY)
+    sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+    return cfg, sm, sp
+
+
+def drain_sequence(sm, sp, prompts, *, prefix_cache, seed=0,
+                   temperature=0.0, top_k=0, max_tokens=5, **cfg_over):
+    """Submit+drain each prompt in order on ONE engine (so later prompts
+    see what earlier ones published) and return (engine, token lists).
+    Request ids follow submission order, so the same sequence on a
+    cache-off engine samples with identical per-request key streams."""
+    eng = BatchedEngine(sm, sp, ServeConfig(
+        n_slots=2, max_len=64, chunk_tokens=8, page_tokens=4,
+        prefix_cache=prefix_cache, seed=seed, **cfg_over))
+    outs = []
+    for p in prompts:
+        r = eng.submit(p, SamplingParams(
+            temperature=temperature, top_k=top_k, max_tokens=max_tokens))
+        eng.run_until_drained()
+        outs.append(r.output)
+    return eng, outs
+
+
+class TestPrefixParityWall:
+    """Token parity ON vs OFF over the full admission matrix: request 0 is
+    the cold miss (and the publisher), request 1 the warm hit, request 2
+    the partial hit, request 3 an unrelated miss."""
+
+    SEQUENCE = [PROMPT, PROMPT, PARTIAL, OTHER]
+
+    @pytest.mark.parametrize("arch", FAMILY_ARCHS)
+    def test_greedy_cold_warm_partial_parity(self, arch):
+        cfg, sm, sp = build_serve(arch)
+        on_eng, on = drain_sequence(sm, sp, self.SEQUENCE, prefix_cache=True)
+        _, off = drain_sequence(sm, sp, self.SEQUENCE, prefix_cache=False)
+        assert on == off, (arch, on, off)
+        st = on_eng.stats()
+        assert st["prefix_hits"] == 2                     # warm + partial
+        # warm hit maps 3 pages (12 tokens), partial hit page 0 (4 tokens)
+        assert st["prefill_tokens_skipped"] == 16
+        assert on_eng.trie is not None and len(on_eng.trie) > 0
+
+    @pytest.mark.parametrize("arch", FAMILY_ARCHS)
+    def test_seeded_stochastic_parity(self, arch):
+        """Sampling keys on (seed, rid, t) only — a hit must replay the
+        exact stochastic stream the cold path would have produced."""
+        cfg, sm, sp = build_serve(arch)
+        _, on = drain_sequence(sm, sp, self.SEQUENCE, prefix_cache=True,
+                               seed=3, temperature=1.0, top_k=5,
+                               max_tokens=7)
+        _, off = drain_sequence(sm, sp, self.SEQUENCE, prefix_cache=False,
+                                seed=3, temperature=1.0, top_k=5,
+                                max_tokens=7)
+        assert on == off, (arch, on, off)
+
+    def test_int8_kv_parity(self):
+        """Quantized family: codes AND scales page together, so a shared
+        prefix replays bit-identical int8 codes."""
+        cfg, sm, sp = build_serve("granite-8b", kv_dtype="int8")
+        on_eng, on = drain_sequence(sm, sp, self.SEQUENCE, prefix_cache=True)
+        _, off = drain_sequence(sm, sp, self.SEQUENCE, prefix_cache=False)
+        assert on == off, (on, off)
+        assert on_eng.stats()["prefix_hits"] == 2
+
+    @pytest.mark.parametrize("arch", FAMILY_ARCHS)
+    def test_post_eviction_parity(self, arch):
+        """After the trie is forcibly drained, a re-admission is a cold
+        miss again — and still emits the same tokens."""
+        cfg, sm, sp = build_serve(arch)
+        eng, outs = drain_sequence(sm, sp, [PROMPT, PROMPT],
+                                   prefix_cache=True)
+        assert eng.stats()["prefix_hits"] == 1
+        eng.trie.clear()                                  # evict everything
+        assert len(eng.trie) == 0
+        r = eng.submit(PROMPT, SamplingParams(max_tokens=5))
+        eng.run_until_drained()
+        assert r.prefix_hit_tokens == 0                   # cold again
+        assert r.output == outs[0], (arch, r.output, outs[0])
+        if eng.pool is not None:
+            eng.pool.check()
+
+    @pytest.mark.parametrize("arch", ["mamba2-370m"])
+    def test_stateful_warm_hit_prefills_at_full_chunk_width(self, arch):
+        """Boundary capping only pauses at boundaries the trie is
+        MISSING: a cold stateful prefill steps one page per tick (each
+        boundary snapshotted), but a warm full-hit repeat has nothing to
+        snapshot and lands its whole tail in one chunk."""
+        cfg, sm, sp = build_serve(arch)
+        prompt = [int(x) % cfg.vocab for x in range(40)]   # 10 pages of 4
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=16, page_tokens=4,
+            prefix_cache=True))
+        a = eng.submit(prompt, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        assert a.token_steps[0] - a.admit_step + 1 == 10   # page-capped
+        b = eng.submit(prompt, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        assert b.prefix_hit_tokens == 36                   # (40-1)//4 pages
+        assert b.token_steps[0] - b.admit_step + 1 == 1    # uncapped tail
+        assert b.output == a.output
+
+    def test_snapshot_backfill_on_republish(self):
+        """A node republished without a snapshot (possible after an
+        eviction raced a live slot) must regain one on the next publish
+        that carries it — otherwise stateful match depth is capped at
+        that boundary forever."""
+        from repro.serve.prefix import PrefixTrie
+
+        trie = PrefixTrie(2, pool=None, max_nodes=8)
+        seq = [1, 2, 3, 4]
+        trie.insert(seq, None, {}, now=0)        # snapshotless republish
+        assert trie.match(seq + [9], require_snapshot=True) == []
+        trie.insert(seq, None, {2: "snapA", 4: "snapB"}, now=1)
+        path = trie.match(seq + [9], require_snapshot=True)
+        assert len(path) == 2 and path[-1].snapshot == "snapB"
+
+    def test_warm_hit_skips_prefill_work(self):
+        """The point of the cache: a warm admission runs measurably fewer
+        prefill ticks. 14-token prompt, chunk 8: cold = 2 extend ticks;
+        warm maps 12 tokens and finishes prefill in 1."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=8, page_tokens=4,
+            prefix_cache=True))
+        a = eng.submit(PROMPT, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        cold_ttft_ticks = a.token_steps[0] - a.admit_step
+        b = eng.submit(PROMPT, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        warm_ttft_ticks = b.token_steps[0] - b.admit_step
+        assert b.prefix_hit_tokens == 12
+        assert warm_ttft_ticks < cold_ttft_ticks
+        assert b.output == a.output
+
+
+class TestPoolAccounting:
+    def test_no_leaked_pages_after_drain(self):
+        """After every request retires, the only page references left are
+        the trie's pins — releasing those returns the pool to fully
+        free."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng, _ = drain_sequence(sm, sp, [PROMPT, PROMPT, PARTIAL, OTHER],
+                                prefix_cache=True)
+        eng.pool.check()
+        assert eng.pool.used_pages == len(eng.trie.held_pages())
+        eng.trie.clear()
+        eng.pool.check()
+        assert eng.pool.used_pages == 0
+        assert eng.pool.free_pages == eng.pool.n_pages
+
+    def test_no_leaked_pages_without_prefix_cache(self):
+        cfg, sm, sp = build_serve("granite-8b")
+        eng, _ = drain_sequence(sm, sp, [PROMPT, OTHER], prefix_cache=False)
+        eng.pool.check()
+        assert eng.pool.used_pages == 0
+
+    def test_trie_eviction_reclaims_pages_under_pressure(self):
+        """A pool sized for one slot: the second prompt's pages can only
+        come from evicting the first prompt's published nodes — the
+        engine must do that transparently and still drain."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=8, page_tokens=4,
+            pool_pages=16, prefix_cache=True))      # == one slot's worth
+        a = eng.submit([int(x) % cfg.vocab for x in range(1, 61)],
+                       SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        assert len(eng.trie) == 15                  # 15 published pages
+        b = eng.submit([int(x) % cfg.vocab for x in range(70, 130)],
+                       SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        assert a.done and b.done
+        assert eng.trie.evictions > 0
+        eng.pool.check()
+
+    def test_pool_exhaustion_without_trie_raises(self):
+        """No prefix cache -> nothing to evict: concurrent prompts that
+        genuinely overcommit the pool fail loudly, naming the fix."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=2, max_len=64, chunk_tokens=8, page_tokens=16,
+            pool_pages=4, prefix_cache=False))      # one slot's worth
+        # long decode keeps the first slot's 3 pages pinned while the
+        # second prefills — a genuine concurrent overcommit
+        eng.submit(list(range(1, 41)), SamplingParams(max_tokens=20))
+        eng.submit(list(range(1, 41)), SamplingParams(max_tokens=20))
+        with pytest.raises(RuntimeError, match="pool exhausted"):
+            eng.run_until_drained()
+
+    def test_shared_pages_survive_trie_eviction_while_slot_lives(self):
+        """Evicting a node whose pages a live slot still maps must not
+        free those pages out from under the slot — the refcount keeps
+        them until retirement."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=8, page_tokens=4,
+            prefix_cache=True))
+        a = eng.submit(PROMPT, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        b = eng.submit(PROMPT, SamplingParams(max_tokens=8))
+        eng.step()                                 # b live, pages mapped
+        held = int(eng._n_mapped[0])
+        assert held >= 3                           # the warm-hit mapping
+        eng.trie.clear()                           # drop every trie pin
+        for i in range(held):
+            pid = int(eng._ptab[0, i])
+            assert eng.pool.refcounts[pid] >= 1    # slot's ref survives
+        eng.run_until_drained()
+        assert b.output[:2] == a.output            # same greedy stream
+        eng.pool.check()
+
+
+class TestStats:
+    def test_stats_shape_and_ranges(self):
+        cfg, sm, sp = build_serve("granite-8b")
+        eng, _ = drain_sequence(sm, sp, [PROMPT, PROMPT], prefix_cache=True)
+        st = eng.stats()
+        assert st["admitted"] == 2
+        assert st["hit_rate"] == 0.5
+        assert st["prefill_tokens_skipped"] == 12
+        assert st["prompt_tokens"] == 2 * len(PROMPT)
+        assert 0.0 <= st["page_utilization"] <= 1.0
+        assert st["pages_in_use"] <= st["pool_pages"]
+        assert st["evictions"] == 0
+
+    def test_stats_without_prefix_cache(self):
+        cfg, sm, sp = build_serve("granite-8b")
+        eng, _ = drain_sequence(sm, sp, [PROMPT], prefix_cache=False)
+        st = eng.stats()
+        assert st["prefix_hits"] == 0 and st["hit_rate"] == 0.0
+        assert st["trie_nodes"] == 0 and st["evictions"] == 0

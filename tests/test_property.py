@@ -5,6 +5,8 @@ hypothesis is a dev-only dependency (requirements-dev.txt / the ``dev``
 extra); the whole module is skipped when it is not installed so the tier-1
 command still passes from a clean checkout.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -403,6 +405,188 @@ class TestSamplingRowEquivalence:
             if t > 0 and 0 < k < v:
                 topk_ids = np.argsort(-np.asarray(logits[i]))[:k]
                 assert int(got[i]) in topk_ids
+
+
+class TestKVPoolInvariants:
+    """Fuzz the page pool's refcount machinery against a shadow model:
+    refcounts never go negative, double-frees are impossible, and the
+    free list + referenced pages always partition the pool exactly."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        n_pages=st.integers(1, 12),
+        ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 10_000)),
+                     max_size=60),
+    )
+    def test_pool_refcount_invariants(self, n_pages, ops):
+        from repro.serve.kvpool import KVPool
+
+        pool = KVPool(n_pages, page_tokens=4)
+        live = {}                                  # pid -> expected refcount
+        for op, pick in ops:
+            if op == 0:                            # alloc
+                pid = pool.alloc()
+                if live and len(live) == n_pages:
+                    assert pid is None
+                else:
+                    assert pid is not None and pid not in live
+                    live[pid] = 1
+            elif op == 1 and live:                 # retain a live page
+                pid = sorted(live)[pick % len(live)]
+                pool.retain(pid)
+                live[pid] += 1
+            elif op == 2 and live:                 # release a live page
+                pid = sorted(live)[pick % len(live)]
+                pool.release(pid)
+                live[pid] -= 1
+                if live[pid] == 0:
+                    del live[pid]
+            pool.check()
+            assert pool.used_pages == len(live)
+        for pid, rc in list(live.items()):
+            for _ in range(rc):
+                pool.release(pid)
+        pool.check()
+        assert pool.free_pages == pool.n_pages
+        # operating on a dead page must fail loudly, not corrupt state
+        if n_pages:
+            with pytest.raises(ValueError):
+                pool.release(0)
+            pool.check()
+
+
+class TestPrefixTrieRoundTrip:
+    """Insert/match/evict round-trips on random token sequences: a match
+    returns exactly the longest inserted page run (capped one token short
+    of the prompt), the trie's page pins account for every used page, and
+    evicting everything returns the pool to fully free."""
+
+    seqs = st.lists(
+        st.lists(st.integers(0, 5), min_size=1, max_size=14),
+        min_size=1, max_size=5,
+    )
+
+    @settings(max_examples=50, deadline=None)
+    @given(seqs=seqs, pt=st.sampled_from([2, 3, 4]))
+    def test_insert_match_roundtrip(self, seqs, pt):
+        from repro.serve.kvpool import KVPool
+        from repro.serve.prefix import PrefixTrie
+
+        pool = KVPool(64, pt)
+        trie = PrefixTrie(pt, pool=pool, max_nodes=64)
+        for i, seq in enumerate(seqs):
+            n_pub = len(seq) // pt
+            pages = [pool.alloc() for _ in range(n_pub)]
+            trie.insert(seq[: n_pub * pt], pages, {}, now=i)
+            for p in pages:                        # the "slot" retires
+                pool.release(p)
+            pool.check()
+        assert pool.used_pages == len(trie.held_pages())
+        for seq in seqs:
+            path = trie.match(seq)
+            # the sequence's own insert pinned len(seq)//pt pages; the
+            # match is additionally capped at (len(seq)-1)//pt so at
+            # least one token always remains to prefill
+            assert len(path) == (len(seq) - 1) // pt
+            got = [t for n in path for t in n.key]
+            assert got == [int(t) for t in seq[: len(path) * pt]]
+        trie.clear()
+        pool.check()
+        assert pool.free_pages == pool.n_pages and len(trie) == 0
+
+    @settings(max_examples=40, deadline=None)
+    @given(seq=st.lists(st.integers(0, 5), min_size=4, max_size=16),
+           snap_at=st.integers(0, 4), pt=st.sampled_from([2, 4]))
+    def test_snapshot_gated_match_depth(self, seq, snap_at, pt):
+        """require_snapshot answers with the deepest node that HAS one —
+        snapshotless deeper nodes must not be matched (a recurrent model
+        could not restore state there)."""
+        from repro.serve.prefix import PrefixTrie
+
+        trie = PrefixTrie(pt, pool=None, max_nodes=64)
+        n_pub = len(seq) // pt
+        snaps = {(snap_at + 1) * pt: object()} if snap_at < n_pub else {}
+        trie.insert(seq[: n_pub * pt], None, snaps, now=0)
+        path = trie.match(seq, require_snapshot=True)
+        n_match_cap = (len(seq) - 1) // pt
+        want = (snap_at + 1
+                if (snap_at < n_pub and snap_at + 1 <= n_match_cap) else 0)
+        assert len(path) == want
+        assert len(trie.match(seq)) == n_match_cap  # pages-only unchanged
+
+    @settings(max_examples=30, deadline=None)
+    @given(seqs=seqs, pt=st.sampled_from([2, 4]), cap=st.integers(1, 4))
+    def test_eviction_is_leaf_only_and_bounded(self, seqs, pt, cap):
+        """The node cap holds through arbitrary inserts, and eviction
+        never orphans a child (leaves die first)."""
+        from repro.serve.kvpool import KVPool
+        from repro.serve.prefix import PrefixTrie
+
+        pool = KVPool(64, pt)
+        trie = PrefixTrie(pt, pool=pool, max_nodes=cap)
+        for i, seq in enumerate(seqs):
+            n_pub = len(seq) // pt
+            pages = [pool.alloc() for _ in range(n_pub)]
+            trie.insert(seq[: n_pub * pt], pages, {}, now=i)
+            for p in pages:
+                pool.release(p)
+            assert len(trie) <= cap
+            for n in trie._nodes:                  # no orphans
+                assert n.parent is trie.root or n.parent in trie._nodes
+            pool.check()
+        trie.clear()
+        assert pool.free_pages == pool.n_pages
+
+
+@functools.lru_cache(maxsize=1)
+def _leak_test_engine_build():
+    from repro.configs import build_model, get_config
+    from repro.nn import module as mod
+    from repro.nn.context import SERVE, TRAIN, ModelContext
+    from repro.serve.weights import export_serving_params
+
+    cfg = get_config("granite-8b").reduced()
+    tm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN,
+                                       compute_dtype=jnp.float32))
+    sm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
+                                       compute_dtype=jnp.float32,
+                                       use_pallas=False))
+    tp = mod.init_params(tm.specs(), jax.random.PRNGKey(0))
+    sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+    return cfg, sm, sp
+
+
+class TestEnginePageLeaks:
+    """End-to-end pool accounting: after ``run_until_drained`` on random
+    workloads the only page references left are the trie's pins."""
+
+    @settings(max_examples=5, deadline=None)
+    @given(
+        prompts=st.lists(
+            st.lists(st.integers(0, 20), min_size=1, max_size=20),
+            min_size=1, max_size=3,
+        ),
+        prefix_cache=st.booleans(),
+    )
+    def test_no_leaked_pages_after_run_until_drained(self, prompts,
+                                                     prefix_cache):
+        from repro.serve.engine import BatchedEngine, ServeConfig
+        from repro.serve.sampling import SamplingParams
+
+        cfg, sm, sp = _leak_test_engine_build()
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=2, max_len=32, chunk_tokens=8, page_tokens=4,
+            prefix_cache=prefix_cache))
+        for p in prompts:
+            eng.submit(p, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        eng.pool.check()
+        held = len(eng.trie.held_pages()) if eng.trie is not None else 0
+        assert eng.pool.used_pages == held
+        if eng.trie is not None:
+            eng.trie.clear()
+            eng.pool.check()
+            assert eng.pool.used_pages == 0
 
 
 class TestRowsConstruction:

@@ -179,6 +179,17 @@ class TestEngine:
         assert peak <= 2
         assert all(r.finish_reason == "length" for r in reqs)
 
+    def test_decode_retires_at_cache_capacity(self):
+        """A sequence reaching max_len retires with finish_reason="length"
+        instead of decoding on against a cache whose newest K/V rows are
+        silently dropped: prompt 60 + cache 64 leaves exactly 5 tokens
+        (the extend token + 4 decodes writing rows 60..63)."""
+        _, _, _, eng = self._engine()                     # max_len 64
+        r = eng.submit(list(range(1, 61)), SamplingParams(max_tokens=20))
+        eng.run_until_drained()
+        assert r.done and r.finish_reason == "length"
+        assert len(r.output) == 64 - 60 + 1
+
     def test_eos_vs_max_tokens_retirement_ordering(self):
         """When the stop token lands exactly on the max_tokens boundary the
         EOS check wins — finish_reason must say "eos", not "length"."""
@@ -358,6 +369,36 @@ class TestServeConfigValidation:
             ServeConfig(max_len=256, chunk_tokens=0)
         with pytest.raises(ValueError, match="positive"):
             ServeConfig(max_len=256, chunk_tokens=-4)
+
+    def test_zero_slots_rejected(self):
+        """n_slots=0 used to wedge the scheduler silently (every submit
+        queues forever, run_until_drained spins to max_steps)."""
+        with pytest.raises(ValueError, match="n_slots"):
+            ServeConfig(n_slots=0)
+        with pytest.raises(ValueError, match="n_slots"):
+            ServeConfig(n_slots=-1)
+
+    def test_zero_max_len_rejected(self):
+        with pytest.raises(ValueError, match="max_len"):
+            ServeConfig(max_len=0, chunk_tokens=1)
+
+    def test_page_tokens_must_be_positive_and_divide_max_len(self):
+        with pytest.raises(ValueError, match="page_tokens"):
+            ServeConfig(max_len=64, chunk_tokens=8, page_tokens=0)
+        with pytest.raises(ValueError, match="divide max_len"):
+            ServeConfig(max_len=64, chunk_tokens=8, page_tokens=24)
+        ServeConfig(max_len=64, chunk_tokens=8, page_tokens=16)  # ok
+
+    def test_pool_below_one_slot_rejected(self):
+        """A pool smaller than one slot's page count could never complete
+        a full-length sequence."""
+        with pytest.raises(ValueError, match="pool_pages"):
+            ServeConfig(max_len=64, chunk_tokens=8, page_tokens=16,
+                        pool_pages=3)
+
+    def test_prefix_nodes_floor(self):
+        with pytest.raises(ValueError, match="prefix_nodes"):
+            ServeConfig(prefix_nodes=0)
 
 
 class TestInt8KV:
