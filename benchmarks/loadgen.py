@@ -1,0 +1,166 @@
+"""Seeded traffic generator + replay harness for the serving front-end.
+
+Produces a DETERMINISTIC request schedule from a single integer seed:
+Poisson arrivals (exponential inter-arrival gaps at the target QPS),
+prompt/output lengths drawn from weighted discrete mixes, and an
+optional shared-prefix population (a fraction of requests re-use one of
+``n_prefix_groups`` common prefixes — the traffic shape the radix-trie
+prefix cache exists for). Same ``LoadSpec`` -> byte-identical schedule,
+every time, on every host: the schedule is pure ``numpy.random.default_rng``
+state, no wall clock anywhere (tests/test_loadgen.py pins this).
+
+``replay`` then plays a schedule against a live ``EngineServer`` over
+the real HTTP/SSE wire (repro.serve.client), honouring each request's
+arrival offset, and returns per-request latency records — TTFT measured
+submit->first-token-event and ITLs as gaps between token events — which
+``summarize`` folds into the p50/p99 table the load benchmark reports.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# (value, weight) pairs; weights need not sum to 1 (normalised at draw)
+Mix = Tuple[Tuple[int, float], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSpec:
+    """Everything that determines a traffic trace, and nothing else."""
+    qps: float = 16.0
+    n_requests: int = 32
+    seed: int = 0
+    vocab: int = 256
+    prompt_mix: Mix = ((6, 0.5), (12, 0.35), (20, 0.15))
+    output_mix: Mix = ((4, 0.5), (8, 0.3), (12, 0.2))
+    shared_prefix_ratio: float = 0.0   # fraction drawing a shared prefix
+    shared_prefix_len: int = 0
+    n_prefix_groups: int = 1
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+
+    def __post_init__(self):
+        if self.qps <= 0:
+            raise ValueError(f"qps must be > 0, got {self.qps}")
+        if not 0.0 <= self.shared_prefix_ratio <= 1.0:
+            raise ValueError("shared_prefix_ratio must be in [0, 1]")
+        if self.shared_prefix_ratio > 0 and self.shared_prefix_len <= 0:
+            raise ValueError("shared_prefix_len must be > 0 when "
+                             "shared_prefix_ratio > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class TimedRequest:
+    index: int
+    at_s: float                 # arrival offset from trace start
+    prompt: Tuple[int, ...]
+    max_tokens: int
+    seed: int                   # per-request sampling seed (rid-invariant)
+    prefix_group: Optional[int]  # which shared prefix, None = unique prompt
+
+    def payload(self, spec: LoadSpec) -> dict:
+        """The POST /generate body for this request."""
+        body = {"prompt": list(self.prompt), "max_tokens": self.max_tokens,
+                "temperature": spec.temperature, "seed": self.seed}
+        if spec.top_k is not None:
+            body["top_k"] = spec.top_k
+        return body
+
+
+def _pick(rng: np.random.Generator, mix: Mix) -> int:
+    values = np.array([v for v, _ in mix])
+    weights = np.array([w for _, w in mix], dtype=np.float64)
+    return int(rng.choice(values, p=weights / weights.sum()))
+
+
+def generate(spec: LoadSpec) -> List[TimedRequest]:
+    """One deterministic trace. Single rng, fixed draw order."""
+    rng = np.random.default_rng(spec.seed)
+    gaps = rng.exponential(1.0 / spec.qps, size=spec.n_requests)
+    arrivals = np.cumsum(gaps)
+    prefixes = [
+        tuple(int(t) for t in rng.integers(0, spec.vocab,
+                                           size=spec.shared_prefix_len))
+        for _ in range(spec.n_prefix_groups)
+    ]
+    out: List[TimedRequest] = []
+    for i in range(spec.n_requests):
+        plen = _pick(rng, spec.prompt_mix)
+        max_tokens = _pick(rng, spec.output_mix)
+        group = None
+        if rng.random() < spec.shared_prefix_ratio:
+            group = int(rng.integers(0, spec.n_prefix_groups))
+        tail = tuple(int(t) for t in rng.integers(0, spec.vocab, size=plen))
+        prompt = (prefixes[group] + tail) if group is not None else tail
+        out.append(TimedRequest(
+            index=i, at_s=float(arrivals[i]), prompt=prompt,
+            max_tokens=max_tokens, seed=int(rng.integers(0, 2**31 - 1)),
+            prefix_group=group))
+    return out
+
+
+async def replay(host: str, port: int, spec: LoadSpec,
+                 schedule: Optional[Sequence[TimedRequest]] = None,
+                 *, speed: float = 1.0) -> List[dict]:
+    """Play a trace against a live server; one record per request.
+
+    Each request sleeps until its scheduled arrival (scaled by ``speed``:
+    2.0 = replay twice as fast), then rides the real SSE wire. TTFT and
+    ITLs come from client-side event receive timestamps, so they include
+    everything a user would see: queueing, prefill, detokenize backlog,
+    and the write path.
+    """
+    from repro.serve.client import sse_generate
+
+    t0 = time.perf_counter()
+
+    async def one(req: TimedRequest) -> dict:
+        delay = req.at_s / speed - (time.perf_counter() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        submit = time.perf_counter()
+        status, events, times = await sse_generate(
+            host, port, req.payload(spec))
+        tok_times = [t for e, t in zip(events, times) if "token" in e]
+        done = next((e for e in events if e.get("done")), None)
+        return dict(
+            index=req.index,
+            status=status,
+            tokens=[e["token"] for e in events if "token" in e],
+            text=done.get("text") if done else None,
+            finish_reason=done.get("finish_reason") if done else None,
+            ttft_s=(tok_times[0] - submit) if tok_times else None,
+            itls_s=[b - a for a, b in zip(tok_times, tok_times[1:])],
+            end_s=time.perf_counter() - t0,
+        )
+
+    return list(await asyncio.gather(*(one(r) for r in (
+        schedule if schedule is not None else generate(spec)))))
+
+
+def summarize(results: Sequence[dict]) -> dict:
+    """Fold replay records into the p50/p99 + sustained-rate row."""
+    ok = [r for r in results if r["status"] == 200]
+    ttfts = [r["ttft_s"] for r in ok if r["ttft_s"] is not None]
+    itls = [g for r in ok for g in r["itls_s"]]
+    n_tokens = sum(len(r["tokens"]) for r in ok)
+    span = max((r["end_s"] for r in ok), default=0.0)
+
+    def pct(xs, q):
+        return round(1e3 * float(np.percentile(xs, q)), 2) if xs else None
+
+    return dict(
+        requests=len(results),
+        completed=len(ok),
+        rejected=sum(1 for r in results if r["status"] == 429),
+        tokens=n_tokens,
+        ttft_p50_ms=pct(ttfts, 50),
+        ttft_p99_ms=pct(ttfts, 99),
+        itl_p50_ms=pct(itls, 50),
+        itl_p99_ms=pct(itls, 99),
+        sustained_tok_s=round(n_tokens / span, 1) if span > 1e-9 else None,
+    )

@@ -26,6 +26,7 @@ BENCHES = [
     "table5_timeseries",
     "table6_mcu",
     "table7_inference_memory",
+    "table7_load_serving",
     "fig6_layer_size",
     "fig7_hparams",
 ]

@@ -3,6 +3,17 @@
     python -m repro.launch.serve --arch granite-8b --reduced \\
         --requests 8 --max-tokens 16 --chunk-tokens 32
 
+Or boot the async HTTP/SSE front-end instead of draining a synthetic
+batch (``POST /generate``, ``GET /stats``, ``GET /healthz``; Ctrl-C to
+stop):
+
+    python -m repro.launch.serve --arch granite-8b --reduced \\
+        --serve --port 8000
+
+``--aot`` (default on in ``--serve`` mode) AOT-compiles the decode and
+extend tick executables at startup so the FIRST request pays no
+trace/compile inside its TTFT; ``--no-aot`` measures the difference.
+
 Tensor-parallel serving shards each layer's packed tile rows over the
 model mesh axis (DESIGN.md §5):
 
@@ -95,6 +106,19 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="1x1",
                     help="DPxTP serving mesh, e.g. 1x4 (default single device)")
+    ap.add_argument("--serve", action="store_true",
+                    help="boot the async HTTP/SSE front-end instead of "
+                         "draining a synthetic batch")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port (0 = OS-assigned, printed at startup)")
+    ap.add_argument("--max-queued", type=int, default=64,
+                    help="admission-queue capacity; a full queue returns "
+                         "HTTP 429 (--serve mode)")
+    ap.add_argument("--aot", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="AOT-compile the tick executables at startup "
+                         "(default: on with --serve, off otherwise)")
     args = ap.parse_args(argv)
     mesh = parse_mesh_arg(args.mesh)
     if args.shared_prefix + 12 > args.max_len:
@@ -128,6 +152,7 @@ def main(argv=None):
     print(f"arch={cfg.name} TBN p={cfg.tbn.p}: masters {master_b/1e6:.2f}MB "
           f"-> shipped {ship_b/1e6:.2f}MB ({master_b/ship_b:.1f}x smaller)")
 
+    aot = args.aot if args.aot is not None else args.serve
     eng = BatchedEngine(
         s_model, sp,
         ServeConfig(n_slots=args.slots, max_len=args.max_len,
@@ -136,9 +161,31 @@ def main(argv=None):
                     top_k=args.top_k, seed=args.seed,
                     page_tokens=args.page_tokens,
                     pool_pages=args.pool_pages,
-                    prefix_cache=args.prefix_cache),
+                    prefix_cache=args.prefix_cache,
+                    max_queued=args.max_queued if args.serve else None),
         mesh=mesh,
     )
+    if args.serve:
+        import asyncio
+
+        from repro.serve.server import ServerConfig, run_server
+
+        def _ready(_srv, port):
+            # the readiness line subprocess harnesses wait for
+            print(f"serving on http://{args.host}:{port} "
+                  f"(aot={'on' if aot else 'off'})", flush=True)
+
+        try:
+            asyncio.run(run_server(
+                eng, ServerConfig(host=args.host, port=args.port),
+                aot=aot, ready=_ready))
+        except KeyboardInterrupt:
+            pass
+        print("server closed")
+        return []
+    if aot:
+        t = eng.warmup()
+        print(f"AOT warmup: {', '.join(f'{k} {v:.2f}s' for k, v in t.items())}")
     if mesh is not None:
         total_tile = tile_serving_bytes(sp)
         per_dev = per_device_tile_bytes(eng.params)

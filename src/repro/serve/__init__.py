@@ -1,7 +1,14 @@
-from repro.serve.engine import BatchedEngine, Request, ServeConfig
+from repro.serve.detok import DetokenizeWorker, PieceCodec, decode_all
+from repro.serve.engine import (
+    AdmissionQueueFull,
+    BatchedEngine,
+    Request,
+    ServeConfig,
+)
 from repro.serve.kvpool import KVPool
 from repro.serve.prefix import PrefixTrie
-from repro.serve.sampling import sample_logits
+from repro.serve.sampling import SamplingParams, sample_logits
+from repro.serve.server import EngineServer, ServerConfig, run_server
 from repro.serve.weights import (
     export_serving_params,
     per_device_tile_bytes,
@@ -10,11 +17,19 @@ from repro.serve.weights import (
 )
 
 __all__ = [
+    "AdmissionQueueFull",
     "BatchedEngine",
+    "DetokenizeWorker",
+    "EngineServer",
     "KVPool",
+    "PieceCodec",
     "PrefixTrie",
     "Request",
+    "SamplingParams",
     "ServeConfig",
+    "ServerConfig",
+    "decode_all",
+    "run_server",
     "sample_logits",
     "export_serving_params",
     "per_device_tile_bytes",

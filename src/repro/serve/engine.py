@@ -56,11 +56,12 @@ Design (vLLM/Sarathi-style, adapted to fixed-shape XLA):
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import itertools
 import queue
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,29 @@ from repro.serve.sampling import SamplingParams, sample_logits_batch
 
 PREFILL = "prefill"
 DECODE = "decode"
+
+# Trace probe: each jitted tick function bumps its counter when its
+# PYTHON body runs — i.e. exactly when jax traces (or retraces) it.
+# Executing a cached executable (or an AOT-compiled one) never runs the
+# body, so a stable counter across a tick is a machine-checkable "this
+# tick compiled nothing" — the property ``BatchedEngine.warmup`` exists
+# to establish for the first real request (tests/test_warmup.py).
+TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+class AdmissionQueueFull(RuntimeError):
+    """Typed backpressure signal: ``submit`` on an engine whose bounded
+    admission queue (``ServeConfig.max_queued``) is at capacity. The
+    serving front-end maps this to HTTP 429 instead of letting requests
+    pile up unboundedly behind the tick loop."""
+
+    def __init__(self, queued: int, capacity: int):
+        super().__init__(
+            f"admission queue full: {queued} queued >= max_queued "
+            f"{capacity} — retry later or raise max_queued"
+        )
+        self.queued = queued
+        self.capacity = capacity
 
 
 def _tick_fns(model):
@@ -98,6 +122,7 @@ def _tick_fns(model):
         caches, lengths, and last token bit-identical. Paged pool writes
         are confined in-kernel by ``active``; per-slot families by the
         merge."""
+        TRACE_COUNTS["decode_tick"] += 1
         logits, new_caches, new_lengths = model.decode_step(
             params, tokens, caches, lengths,
             page_table=ptab, active=active,
@@ -116,6 +141,7 @@ def _tick_fns(model):
         """one chunked-prefill step for every scheduled slot + sampling of
         each slot's candidate first token (the host keeps it only for
         slots whose prompt just completed)."""
+        TRACE_COUNTS["extend_tick"] += 1
         logits, caches, lengths = model.extend(
             params, block, caches, lengths, n_new, page_table=ptab
         )
@@ -129,14 +155,17 @@ def _tick_fns(model):
         """Zero one slot's rows across the per-slot cache families
         (recurrent/SSM state MUST start from zeros); paged pool leaves
         pass through — their pages are shared or about to be remapped."""
+        TRACE_COUNTS["reset_slot"] += 1
         return model.reset_slot_caches(caches, slot, paged=True)
 
     def _snapshot_slot(caches, slot):
         """One slot's recurrent-family state (prefix-trie snapshot)."""
+        TRACE_COUNTS["snapshot_slot"] += 1
         return model.snapshot_slot_caches(caches, slot)
 
     def _restore_slot(caches, slot, snaps):
         """Prefix-hit admission: write a pinned snapshot into a slot."""
+        TRACE_COUNTS["restore_slot"] += 1
         return model.restore_slot_caches(caches, slot, snaps)
 
     fns = (jax.jit(_decode_tick), jax.jit(_extend_tick),
@@ -154,7 +183,7 @@ class Request:
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    finish_reason: Optional[str] = None  # "eos" | "length" once done
+    finish_reason: Optional[str] = None  # "eos" | "length" | "aborted"
     admit_step: Optional[int] = None     # engine tick of admission
     token_steps: List[int] = dataclasses.field(default_factory=list)
     # engine tick at which each output token was emitted: token_steps[0]
@@ -177,6 +206,10 @@ class ServeConfig:
     prefix_cache: bool = False          # radix-trie shared-prefix reuse
     prefix_nodes: int = 512             # trie node cap (snapshots hold
     # real device memory for the recurrent families)
+    max_queued: Optional[int] = None    # admission-queue capacity; a full
+    # queue makes submit() raise AdmissionQueueFull (typed backpressure —
+    # the HTTP front-end's 429) instead of queueing unboundedly. None
+    # keeps the historical unbounded queue for batch drivers.
 
     def __post_init__(self):
         """Fail fast on an impossible engine shape.
@@ -223,6 +256,11 @@ class ServeConfig:
         if self.prefix_nodes < 1:
             raise ValueError(
                 f"prefix_nodes must be >= 1: {self.prefix_nodes}"
+            )
+        if self.max_queued is not None and self.max_queued < 1:
+            raise ValueError(
+                f"max_queued must be >= 1 (or None for unbounded): "
+                f"{self.max_queued}"
             )
 
 
@@ -283,8 +321,19 @@ class BatchedEngine:
         self._need_snaps: List[set] = [set() for _ in range(cfg.n_slots)]
         self._stats = {
             "admitted": 0, "prefix_hits": 0, "prefix_tokens": 0,
-            "prompt_tokens": 0,
+            "prompt_tokens": 0, "tokens_out": 0, "aborted": 0,
+            "rejected": 0, "peak_queue_depth": 0,
+            "preempt_free_ticks": 0, "work_ticks": 0,
         }
+
+        # Streaming hooks: the front-end registers these to learn about
+        # tokens the instant the tick emits them (on_token runs in
+        # whatever thread drives step(); it must be cheap and non-blocking
+        # — the server's implementation just enqueues onto the detokenize
+        # backlog). on_finish fires exactly once per request, including
+        # aborts.
+        self.on_token: Optional[Callable[[Request, int], None]] = None
+        self.on_finish: Optional[Callable[[Request], None]] = None
 
         cache_dtype = getattr(model.ctx, "compute_dtype", jnp.bfloat16)
         self.caches = model.init_caches(
@@ -308,6 +357,10 @@ class BatchedEngine:
 
         (self._decode, self._extend, self._reset,
          self._snapshot, self._restore) = _tick_fns(model)
+        # AOT-compiled executables keyed by tick-fn name, filled by
+        # warmup(): call sites prefer these over the lazily-traced jit
+        # wrappers so a warmed engine's first real tick runs zero traces.
+        self._aot: Dict[str, object] = {}
         self.steps = 0
 
     def _mesh_ctx(self):
@@ -315,6 +368,86 @@ class BatchedEngine:
         if self.mesh is None:
             return contextlib.nullcontext()
         return axis_rules(self.mesh)
+
+    # ------------------------------------------------------------------
+    def warmup(self) -> Dict[str, float]:
+        """Ahead-of-time compile every tick executable for THIS engine's
+        shapes (``jax.jit(...).lower(...).compile()`` per entry point), so
+        the first real request never pays a trace+compile inside its TTFT.
+
+        The engine has exactly two hot compiled shapes — the
+        ``(n_slots, 1)`` decode tick and the ``(n_slots, chunk_tokens)``
+        extend tick — plus the per-slot reset that admission runs, and
+        (prefix cache on a stateful model) the snapshot/restore pair.
+        Warmup lowers each against the live engine state arrays, which
+        are byte-for-byte the avals the real ticks will pass, and stores
+        the compiled executables in ``self._aot``; the tick call sites
+        prefer those over the lazily-traced jit wrappers, so a warmed
+        engine's first tick runs ZERO new traces (the ``TRACE_COUNTS``
+        probe in tests/test_warmup.py pins this).
+
+        Returns per-entry-point compile seconds. Raises ``RuntimeError``
+        naming the entry point and its scheduler-side shapes when a
+        lower/compile fails — a warmup that silently half-succeeds would
+        just move the first trace stall back into serving."""
+        import time
+
+        cfg = self.cfg
+        active = jnp.asarray(np.zeros((cfg.n_slots,), bool))
+        counts = jnp.asarray(self._counts)
+        ptab = jnp.asarray(self._ptab)
+        block = jnp.asarray(np.zeros((cfg.n_slots, cfg.chunk_tokens),
+                                     np.int32))
+        n_new = jnp.asarray(np.zeros((cfg.n_slots,), np.int32))
+        plans = [
+            ("decode_tick", self._decode,
+             (self.params, self.tokens, self.caches, self.lengths, active,
+              self.temps, self.topks, self._slot_keys, counts, ptab),
+             f"tokens int32[{cfg.n_slots},1], ptab int32[{cfg.n_slots},"
+             f"{self.npp}]"),
+            ("extend_tick", self._extend,
+             (self.params, block, self.caches, self.lengths, n_new,
+              self.temps, self.topks, self._slot_keys, counts, ptab),
+             f"block int32[{cfg.n_slots},{cfg.chunk_tokens}], ptab "
+             f"int32[{cfg.n_slots},{self.npp}]"),
+            ("reset_slot", self._reset, (self.caches, 0),
+             f"slot int32[], {cfg.n_slots}-slot caches"),
+        ]
+        if self.trie is not None and self._stateful:
+            plans.append(("snapshot_slot", self._snapshot, (self.caches, 0),
+                          f"slot int32[], {cfg.n_slots}-slot caches"))
+        timings: Dict[str, float] = {}
+        with self._mesh_ctx():
+            for name, fn, args, desc in plans:
+                t0 = time.perf_counter()
+                try:
+                    self._aot[name] = fn.lower(*args).compile()
+                except Exception as e:
+                    raise RuntimeError(
+                        f"AOT warmup failed for '{name}' ({desc}): {e}"
+                    ) from e
+                timings[name] = time.perf_counter() - t0
+            if "snapshot_slot" in self._aot:
+                # restore's input signature includes the snapshot pytree;
+                # one warm snapshot execution (on the zeroed caches, result
+                # discarded) yields exactly the avals admission will pass
+                snaps = self._aot["snapshot_slot"](self.caches, 0)
+                t0 = time.perf_counter()
+                try:
+                    self._aot["restore_slot"] = self._restore.lower(
+                        self.caches, 0, snaps).compile()
+                except Exception as e:
+                    raise RuntimeError(
+                        f"AOT warmup failed for 'restore_slot' (slot "
+                        f"int32[], {len(jax.tree_util.tree_leaves(snaps))}"
+                        f"-leaf snapshot): {e}"
+                    ) from e
+                timings["restore_slot"] = time.perf_counter() - t0
+        return timings
+
+    @property
+    def aot_warm(self) -> bool:
+        return bool(self._aot)
 
     # ------------------------------------------------------------------
     def submit(
@@ -329,6 +462,11 @@ class BatchedEngine:
             raise ValueError(
                 f"prompt len {len(prompt)} exceeds max_len {self.cfg.max_len}"
             )
+        if (self.cfg.max_queued is not None
+                and self._queue.qsize() >= self.cfg.max_queued):
+            self._stats["rejected"] += 1
+            raise AdmissionQueueFull(self._queue.qsize(),
+                                     self.cfg.max_queued)
         req = Request(
             rid=next(self._rid),
             prompt=prompt,
@@ -367,6 +505,15 @@ class BatchedEngine:
                     req.prompt[: n_pub * self.pt], pages,
                     self._snaps[slot], now=self.steps,
                 )
+        self._release_slot(slot)
+        if self.on_finish is not None:
+            self.on_finish(req)
+        return True
+
+    def _release_slot(self, slot: int):
+        """Return a slot (and every page it maps) to the free pools: the
+        shared tail of retirement and abort. Shared pages survive through
+        the trie's pin — only this slot's references drop."""
         if self.pool is not None:
             for i in range(int(self._n_mapped[slot])):
                 self.pool.release(int(self._ptab[slot, i]))
@@ -386,7 +533,45 @@ class BatchedEngine:
         self.topks = self.topks.at[slot].set(0)
         self._eos_ids[slot] = -1
         self._counts[slot] = 0
+
+    def abort(self, req: Request) -> bool:
+        """Cancel a request, queued or live: its slot and pages free
+        immediately, nothing is published to the prefix trie (an aborted
+        prompt may have prefilled only partially — publishing a
+        half-written page run would poison later prefix hits), and
+        ``on_finish`` fires with ``finish_reason == "aborted"``.
+
+        NOT thread-safe against a concurrent ``step()`` — the caller
+        (the server's shutdown path) must stop the tick loop first.
+        Returns False if the request already finished."""
+        if req.done:
+            return False
+        req.done = True
+        req.finish_reason = "aborted"
+        self._stats["aborted"] += 1
+        for slot, r in list(self._live.items()):
+            if r is req:
+                self._release_slot(slot)
+                break
+        # a queued (never-admitted) request is skipped lazily: the
+        # admission loop drops done requests as they surface
+        if self.on_finish is not None:
+            self.on_finish(req)
         return True
+
+    def abort_all(self) -> int:
+        """Abort every queued and live request (server shutdown); returns
+        how many actually transitioned."""
+        n = 0
+        for r in list(self._live.values()):
+            n += bool(self.abort(r))
+        while not self._queue.empty():
+            try:
+                r = self._queue.get_nowait()
+            except queue.Empty:      # pragma: no cover - single-consumer
+                break
+            n += bool(self.abort(r))
+        return n
 
     def _admit(self, slot: int, req: Request):
         """O(1) admission: claim the slot, zero its per-slot state, and —
@@ -423,9 +608,10 @@ class BatchedEngine:
         )
         self._offsets[slot] = boundary
         self.lengths = self.lengths.at[slot].set(boundary)
-        self.caches = self._reset(self.caches, slot)
+        self.caches = self._aot.get("reset_slot", self._reset)(
+            self.caches, slot)
         if boundary and self._stateful:
-            self.caches = self._restore(
+            self.caches = self._aot.get("restore_slot", self._restore)(
                 self.caches, slot, path[-1].snapshot
             )
         # Resolve the request's sampling params against the engine defaults
@@ -436,8 +622,14 @@ class BatchedEngine:
         self.temps = self.temps.at[slot].set(res.temperature)
         self.topks = self.topks.at[slot].set(res.top_k)
         self._eos_ids[slot] = res.eos_id
+        # An explicit per-request seed roots the key stream at
+        # PRNGKey(seed) — rid-independent, so a stochastic request replays
+        # identically no matter what admission order a concurrent
+        # front-end produced. Without one, the historical rid-derived
+        # stream keeps batch drivers reproducible per (engine seed, rid).
         self._slot_keys = self._slot_keys.at[slot].set(
-            jax.random.fold_in(self._root_key, req.rid)
+            jax.random.PRNGKey(res.seed) if res.seed is not None
+            else jax.random.fold_in(self._root_key, req.rid)
         )
         self._counts[slot] = 0
 
@@ -534,7 +726,8 @@ class BatchedEngine:
             block[slot, :take] = self._live[slot].prompt[off:off + take]
             n_new[slot] = take
             self._ensure_pages(slot, off + take - 1)
-        toks, self.caches, self.lengths = self._extend(
+        toks, self.caches, self.lengths = self._aot.get(
+            "extend_tick", self._extend)(
             self.params, jnp.asarray(block), self.caches, self.lengths,
             jnp.asarray(n_new), self.temps, self.topks,
             self._slot_keys, jnp.asarray(self._counts),
@@ -549,9 +742,8 @@ class BatchedEngine:
                 # prefill just landed on a boundary the trie is missing:
                 # pin the recurrent state HERE so the published (or
                 # snapshot-backfilled) node can restore it
-                self._snaps[slot][off_new] = self._snapshot(
-                    self.caches, slot
-                )
+                self._snaps[slot][off_new] = self._aot.get(
+                    "snapshot_slot", self._snapshot)(self.caches, slot)
             if self._offsets[slot] == len(req.prompt):
                 # prompt complete: the chunk's last-column logits are the
                 # request's first sampled token
@@ -561,7 +753,10 @@ class BatchedEngine:
                 req.output.append(tok)
                 req.token_steps.append(self.steps)
                 self._counts[slot] += 1
+                self._stats["tokens_out"] += 1
                 self.tokens = self.tokens.at[slot, 0].set(tok)
+                if self.on_token is not None:
+                    self.on_token(req, tok)
                 self._maybe_retire(slot, req, tok)
 
     def _run_decode(self, decoding: List[int]):
@@ -572,7 +767,8 @@ class BatchedEngine:
             pos = len(req.prompt) + len(req.output) - 1  # row this step writes
             if pos < self.cfg.max_len:
                 self._ensure_pages(slot, pos)
-        nxt, self.caches, self.lengths = self._decode(
+        nxt, self.caches, self.lengths = self._aot.get(
+            "decode_tick", self._decode)(
             self.params, self.tokens, self.caches, self.lengths,
             jnp.asarray(active), self.temps, self.topks,
             self._slot_keys, jnp.asarray(self._counts),
@@ -586,6 +782,9 @@ class BatchedEngine:
             req.output.append(tok)
             req.token_steps.append(self.steps)
             self._counts[slot] += 1
+            self._stats["tokens_out"] += 1
+            if self.on_token is not None:
+                self.on_token(req, tok)
             self._maybe_retire(slot, req, tok)
 
     def step(self):
@@ -596,22 +795,40 @@ class BatchedEngine:
         its final chunk lands."""
         with self._mesh_ctx():
             while self._free and not self._queue.empty():
-                self._admit(self._free.pop(0), self._queue.get())
+                req = self._queue.get()
+                if req.done:        # aborted while still queued
+                    continue
+                self._admit(self._free.pop(0), req)
+            depth = self._queue.qsize()
+            if depth > self._stats["peak_queue_depth"]:
+                self._stats["peak_queue_depth"] = depth
             if not self._live:
                 return
             decoding = [s for s in range(self.cfg.n_slots)
                         if self._phase[s] == DECODE]
+            dec_reqs = [(self._live[s], len(self._live[s].output))
+                        for s in decoding]
             takes = self._schedule_prefill(len(decoding))
             if takes:
                 self._run_extend(takes)
             if decoding:
                 self._run_decode(decoding)
+            # preempt-free accounting: a work tick is clean iff every slot
+            # that entered it decoding emitted exactly one token. Today's
+            # scheduler guarantees this (the fairness wall); the counter
+            # exists so a future preempting scheduler SHOWS what it spent.
+            self._stats["work_ticks"] += 1
+            if all(len(r.output) == n + 1 for r, n in dec_reqs):
+                self._stats["preempt_free_ticks"] += 1
         self.steps += 1
 
     def stats(self) -> Dict[str, object]:
-        """Prefix-cache and pool health counters for the serve CLI's
-        latency report (and tests): admission hit rate, prefill tokens
-        the cache skipped, page-pool utilization, trie size/evictions."""
+        """Engine health counters for the serve CLI / HTTP ``/stats``
+        endpoint (and tests): admission hit rate, prefill tokens the
+        prefix cache skipped, page-pool utilization, queue pressure
+        (current + peak depth, typed rejects), throughput (tokens out,
+        work ticks), the preempt-free tick rate, and whether the tick
+        executables are AOT-warm."""
         s = dict(self._stats)
         s["hit_rate"] = s["prefix_hits"] / max(s["admitted"], 1)
         s["prefill_tokens_skipped"] = s.pop("prefix_tokens")
@@ -621,6 +838,14 @@ class BatchedEngine:
             s["page_utilization"] = self.pool.used_pages / self.pool.n_pages
         s["trie_nodes"] = len(self.trie) if self.trie is not None else 0
         s["evictions"] = self.trie.evictions if self.trie is not None else 0
+        s["queue_depth"] = self._queue.qsize()
+        s["live_slots"] = len(self._live)
+        s["free_slots"] = len(self._free)
+        s["ticks"] = self.steps
+        s["preempt_free_tick_rate"] = (
+            s["preempt_free_ticks"] / max(s["work_ticks"], 1)
+        )
+        s["aot_warm"] = self.aot_warm
         return s
 
     def run_until_drained(self, max_steps: int = 10_000, on_tick=None) -> int:

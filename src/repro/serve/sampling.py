@@ -34,6 +34,12 @@ class SamplingParams:
     top_k: Optional[int] = None          # None -> engine default; 0 -> off
     max_tokens: int = 64
     eos_id: int = -1                     # -1 -> never stops on a token
+    seed: Optional[int] = None           # explicit per-request PRNG seed:
+    # the request's key stream becomes PRNGKey(seed) instead of
+    # fold_in(engine_root, rid), so a stochastic request's tokens no
+    # longer depend on WHICH rid the admission order handed it — the
+    # property a concurrent streaming front-end needs for reproducible
+    # sampling (greedy requests never consume their key either way)
 
     def resolve(
         self, default_temperature: float, default_top_k: Optional[int]
@@ -47,16 +53,51 @@ class SamplingParams:
             temperature=float(t),
             top_k=int(k) if k is not None else 0,
             eos_id=int(self.eos_id),
+            seed=int(self.seed) if self.seed is not None else None,
         )
+
+    # ---- HTTP handoff -------------------------------------------------
+    _JSON_FIELDS = ("temperature", "top_k", "max_tokens", "eos_id", "seed")
+
+    @classmethod
+    def from_json(cls, body: dict) -> "SamplingParams":
+        """Build params from a decoded request body, ignoring non-sampling
+        keys (``prompt``, ``stream``, ...) so one body dict serves both
+        the HTTP layer and the engine. Unknown *sampling-looking* typos
+        are NOT guessed at — only the documented field names bind."""
+        kw = {}
+        for f in cls._JSON_FIELDS:
+            if body.get(f) is not None:
+                kw[f] = body[f]
+        if "temperature" in kw:
+            kw["temperature"] = float(kw["temperature"])
+        for f in ("top_k", "max_tokens", "eos_id", "seed"):
+            if f in kw:
+                kw[f] = int(kw[f])
+        return cls(**kw)
+
+    def to_json(self) -> dict:
+        """The inverse handoff (client helpers, loadgen replay): only
+        non-default fields are emitted so a replayed request is exactly
+        the submitted one."""
+        out = {}
+        for f in self._JSON_FIELDS:
+            v = getattr(self, f)
+            if v is not None and v != getattr(type(self)(), f):
+                out[f] = v
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
 class ResolvedSampling:
-    """Concrete per-request sampler state (no sentinels): what the engine
-    stores in its per-slot arrays. ``top_k == 0`` means no restriction."""
+    """Concrete per-request sampler state (no sentinels except ``seed``):
+    what the engine stores in its per-slot arrays. ``top_k == 0`` means no
+    restriction; ``seed is None`` means the engine derives the request key
+    from its rid."""
     temperature: float
     top_k: int
     eos_id: int
+    seed: Optional[int] = None
 
 
 def sample_logits(

@@ -1,0 +1,147 @@
+"""Loadgen determinism + statistical smoke (benchmarks/loadgen.py).
+
+The load benchmark's credibility rests on the trace being (a) exactly
+reproducible from its seed and (b) actually Poisson at the requested
+rate — a generator that silently produced uniform gaps would understate
+tail latency (no bursts), and one that drifted per-host would make the
+AOT on/off comparison incomparable.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from benchmarks.loadgen import LoadSpec, TimedRequest, generate, summarize
+
+
+class TestDeterminism:
+    def test_same_seed_identical_schedule(self):
+        spec = LoadSpec(qps=20.0, n_requests=64, seed=7,
+                        shared_prefix_ratio=0.5, shared_prefix_len=6,
+                        n_prefix_groups=3)
+        a, b = generate(spec), generate(spec)
+        assert a == b  # frozen dataclasses: full field-wise equality
+        # and a fresh spec object with the same fields is the same trace
+        assert generate(dataclasses.replace(spec)) == a
+
+    def test_different_seed_different_schedule(self):
+        a = generate(LoadSpec(seed=0, n_requests=16))
+        b = generate(LoadSpec(seed=1, n_requests=16))
+        assert [r.prompt for r in a] != [r.prompt for r in b]
+        assert [r.at_s for r in a] != [r.at_s for r in b]
+
+    def test_per_request_seeds_unique_and_stable(self):
+        reqs = generate(LoadSpec(seed=3, n_requests=32))
+        seeds = [r.seed for r in reqs]
+        assert len(set(seeds)) == len(seeds)
+        assert seeds == [r.seed for r in generate(LoadSpec(seed=3,
+                                                           n_requests=32))]
+
+
+class TestPoissonShape:
+    def test_interarrival_rate_and_cv(self):
+        """n=2000 gaps: mean within 10% of 1/qps, CV ~ 1 (exponential)."""
+        qps = 50.0
+        reqs = generate(LoadSpec(qps=qps, n_requests=2000, seed=0))
+        at = np.array([r.at_s for r in reqs])
+        gaps = np.diff(np.concatenate([[0.0], at]))
+        assert gaps.min() > 0
+        mean = gaps.mean()
+        assert abs(mean - 1.0 / qps) < 0.10 / qps, mean
+        cv = gaps.std() / mean
+        assert 0.9 < cv < 1.1, cv  # exponential => CV = 1
+
+    def test_arrivals_monotone(self):
+        at = [r.at_s for r in generate(LoadSpec(qps=5.0, n_requests=100))]
+        assert at == sorted(at)
+
+
+class TestMixes:
+    def test_lengths_drawn_from_mixes(self):
+        spec = LoadSpec(n_requests=200, seed=1,
+                        prompt_mix=((4, 1.0), (9, 1.0)),
+                        output_mix=((3, 1.0), (7, 1.0)))
+        reqs = generate(spec)
+        assert {len(r.prompt) for r in reqs} == {4, 9}
+        assert {r.max_tokens for r in reqs} == {3, 7}
+
+    def test_shared_prefix_population(self):
+        spec = LoadSpec(n_requests=400, seed=2, shared_prefix_ratio=0.5,
+                        shared_prefix_len=8, n_prefix_groups=2)
+        reqs = generate(spec)
+        grouped = [r for r in reqs if r.prefix_group is not None]
+        # binomial(400, .5): +-5 sigma band
+        assert 150 < len(grouped) < 250, len(grouped)
+        # every grouped request actually starts with its group's prefix,
+        # and the two groups have distinct prefixes
+        prefixes = {}
+        for r in grouped:
+            prefixes.setdefault(r.prefix_group, r.prompt[:8])
+            assert r.prompt[:8] == prefixes[r.prefix_group]
+        assert len(set(prefixes.values())) == 2
+
+    def test_all_shared_when_ratio_one(self):
+        reqs = generate(LoadSpec(n_requests=32, shared_prefix_ratio=1.0,
+                                 shared_prefix_len=4))
+        assert all(r.prefix_group is not None for r in reqs)
+
+    def test_vocab_bound(self):
+        reqs = generate(LoadSpec(n_requests=64, vocab=17, seed=5,
+                                 shared_prefix_ratio=0.5,
+                                 shared_prefix_len=4))
+        for r in reqs:
+            assert all(0 <= t < 17 for t in r.prompt)
+
+
+class TestPayloadAndSpec:
+    def test_payload_fields(self):
+        spec = LoadSpec(n_requests=1, temperature=1.0, top_k=8)
+        (req,) = generate(spec)
+        body = req.payload(spec)
+        assert body["prompt"] == list(req.prompt)
+        assert body["max_tokens"] == req.max_tokens
+        assert body["temperature"] == 1.0
+        assert body["top_k"] == 8
+        assert body["seed"] == req.seed
+        # greedy spec omits top_k
+        g = LoadSpec(n_requests=1)
+        assert "top_k" not in generate(g)[0].payload(g)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            LoadSpec(qps=0.0)
+        with pytest.raises(ValueError):
+            LoadSpec(shared_prefix_ratio=1.5)
+        with pytest.raises(ValueError):
+            LoadSpec(shared_prefix_ratio=0.5, shared_prefix_len=0)
+
+
+class TestSummarize:
+    def test_percentiles_and_rate(self):
+        results = [
+            dict(index=0, status=200, tokens=[1, 2, 3], ttft_s=0.010,
+                 itls_s=[0.002, 0.004], end_s=0.5),
+            dict(index=1, status=200, tokens=[4, 5], ttft_s=0.030,
+                 itls_s=[0.006], end_s=1.0),
+            dict(index=2, status=429, tokens=[], ttft_s=None,
+                 itls_s=[], end_s=0.1),
+        ]
+        s = summarize(results)
+        assert s["requests"] == 3 and s["completed"] == 2
+        assert s["rejected"] == 1
+        assert s["tokens"] == 5
+        assert s["ttft_p50_ms"] == pytest.approx(20.0)
+        assert s["itl_p50_ms"] == pytest.approx(4.0)
+        assert s["sustained_tok_s"] == pytest.approx(5.0)
+        # p99 keys exist (CI asserts on the bench JSON having them)
+        assert "ttft_p99_ms" in s and "itl_p99_ms" in s
+
+    def test_empty(self):
+        s = summarize([])
+        assert s["completed"] == 0 and s["ttft_p99_ms"] is None
+
+    def test_timed_request_frozen(self):
+        (req,) = generate(LoadSpec(n_requests=1))
+        assert isinstance(req, TimedRequest)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            req.at_s = 0.0

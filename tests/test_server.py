@@ -1,0 +1,394 @@
+"""Serving front-end test wall (repro.serve.server).
+
+The load-bearing property: what a client reads off the SSE wire is
+BYTE-IDENTICAL to what ``run_until_drained`` produces for the same
+requests — greedy and stochastic, across seeds, and regardless of the
+order concurrent submissions race into the admission queue. Stochastic
+parity rides on per-request explicit seeds (``SamplingParams.seed``):
+the key stream becomes ``PRNGKey(seed)``, independent of the rid the
+server happened to assign.
+
+Plus the operational wall: typed 429 backpressure (never a blocked tick
+loop), slow-consumer isolation (one unread stream cannot stall the
+others), and the mid-flight shutdown contract (detok thread joined,
+partial text flushed, zero live slots, zero leaked pool pages).
+"""
+import asyncio
+import contextlib
+import functools
+import json
+import os
+import random
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.nn import module as mod
+from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.serve.client import _read_head, _request_bytes, request_json, sse_generate
+from repro.serve.detok import PieceCodec, decode_all
+from repro.serve.engine import BatchedEngine, ServeConfig
+from repro.serve.sampling import SamplingParams
+from repro.serve.server import SLOW_DROP, EngineServer, ServerConfig, TokenStream
+from repro.serve.weights import export_serving_params
+
+HOST = "127.0.0.1"
+
+
+@functools.lru_cache(maxsize=None)
+def build_serve(arch="granite-8b"):
+    cfg = get_config(arch).reduced()
+    tm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN,
+                                       compute_dtype=jnp.float32))
+    sm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
+                                       compute_dtype=jnp.float32,
+                                       use_pallas=False))
+    tp = mod.init_params(tm.specs(), jax.random.PRNGKey(0))
+    sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+    return cfg, sm, sp
+
+
+def make_engine(**cfg_kw):
+    _, sm, sp = build_serve()
+    kw = dict(n_slots=2, max_len=64, chunk_tokens=8, page_tokens=8)
+    kw.update(cfg_kw)
+    return BatchedEngine(sm, sp, ServeConfig(**kw))
+
+
+@contextlib.asynccontextmanager
+async def serving(engine=None, server_cfg=None, **eng_kw):
+    eng = engine if engine is not None else make_engine(**eng_kw)
+    srv = EngineServer(eng, server_cfg or ServerConfig(host=HOST, port=0))
+    port = await srv.start(aot=False)   # jit path: build_serve is warm
+    try:
+        yield srv, port, eng
+    finally:
+        await srv.close()
+
+
+async def wait_stat(port, pred, timeout=15.0):
+    t0 = time.perf_counter()
+    while True:
+        _, s = await request_json(HOST, port, "GET", "/stats")
+        if pred(s):
+            return s
+        assert time.perf_counter() - t0 < timeout, f"stats never settled: {s}"
+        await asyncio.sleep(0.01)
+
+
+def reference_outputs(prompts, params):
+    """The non-server ground truth: same engine config, run_until_drained."""
+    eng = make_engine()
+    reqs = [eng.submit(p, sp) for p, sp in zip(prompts, params)]
+    eng.run_until_drained()
+    return [list(r.output) for r in reqs]
+
+
+class TestSSEParity:
+    @pytest.mark.parametrize("seed", [0, 1])
+    @pytest.mark.parametrize("temperature", [0.0, 1.0])
+    def test_stream_matches_drained_engine_shuffled(self, seed, temperature):
+        """6 requests raced into the server in a seed-shuffled order must
+        stream exactly the tokens the batch engine emits for them in
+        submission order — the wire adds nothing and loses nothing."""
+        rng = np.random.default_rng(seed)
+        n = 6
+        prompts = [[int(t) for t in rng.integers(0, 64,
+                                                 size=int(rng.integers(3, 12)))]
+                   for _ in range(n)]
+        maxtoks = [int(rng.integers(3, 8)) for _ in range(n)]
+        seeds = [1000 * seed + i for i in range(n)]
+        ref = reference_outputs(prompts, [
+            SamplingParams(max_tokens=m, temperature=temperature, seed=s)
+            for m, s in zip(maxtoks, seeds)])
+
+        order = list(range(n))
+        random.Random(seed).shuffle(order)
+
+        async def go():
+            async with serving() as (srv, port, eng):
+                async def one(i, k):
+                    await asyncio.sleep(0.01 * k)  # stagger: racy admission
+                    return i, await sse_generate(HOST, port, {
+                        "prompt": prompts[i], "max_tokens": maxtoks[i],
+                        "temperature": temperature, "seed": seeds[i]})
+                return await asyncio.gather(
+                    *(one(i, k) for k, i in enumerate(order)))
+
+        codec = PieceCodec()
+        for i, (status, events, _) in asyncio.run(go()):
+            assert status == 200
+            toks = [e["token"] for e in events if "token" in e]
+            done = events[-1]
+            assert done.get("done") and done["finish_reason"] == "length"
+            assert toks == ref[i], f"req {i} diverged from engine output"
+            # byte-identical text: the streamed deltas concatenate to the
+            # final text, which is the reference detokenization
+            assert "".join(e["text"] for e in events if "token" in e) \
+                == done["text"] == decode_all(codec, toks)
+            assert done["n_tokens"] == len(toks) == maxtoks[i]
+
+    def test_nonstreaming_matches_stream(self):
+        prompt, m = [7, 3, 11, 2], 5
+        async def go():
+            async with serving() as (srv, port, eng):
+                st1, ev, _ = await sse_generate(HOST, port, {
+                    "prompt": prompt, "max_tokens": m})
+                st2, body = await request_json(HOST, port, "POST",
+                                               "/generate", {
+                    "prompt": prompt, "max_tokens": m, "stream": False})
+                return st1, ev, st2, body
+        st1, ev, st2, body = asyncio.run(go())
+        assert st1 == st2 == 200
+        toks = [e["token"] for e in ev if "token" in e]
+        assert body["tokens"] == toks
+        assert body["text"] == ev[-1]["text"]
+        assert body["finish_reason"] == ev[-1]["finish_reason"] == "length"
+
+    def test_healthz_stats_and_errors(self):
+        async def go():
+            async with serving() as (srv, port, eng):
+                health = await request_json(HOST, port, "GET", "/healthz")
+                missing = await request_json(HOST, port, "GET", "/nope")
+                bad = await request_json(HOST, port, "POST", "/generate",
+                                         {"max_tokens": 2})
+                await sse_generate(HOST, port,
+                                   {"prompt": [1, 2], "max_tokens": 2})
+                stats = await request_json(HOST, port, "GET", "/stats")
+                return health, missing, bad, stats
+        health, missing, bad, stats = asyncio.run(go())
+        assert health == (200, {"ok": True})
+        assert missing[0] == 404
+        assert bad[0] == 400 and bad[1]["error"] == "bad_request"
+        st = stats[1]
+        assert st["streams_opened"] >= 1 and st["tokens_out"] >= 2
+        assert st["open_streams"] == 0 and st["detok_backlog"] == 0
+        for key in ("queue_depth", "peak_queue_depth", "live_slots",
+                    "preempt_free_tick_rate", "aot_warm"):
+            assert key in st
+
+
+class TestBackpressure:
+    def test_admission_queue_full_is_typed_429(self):
+        """Slot busy + queue at capacity: the NEXT submit gets an HTTP
+        429 with the typed body, immediately — the tick loop never
+        blocks, and the in-flight requests still finish."""
+        async def go():
+            async with serving(n_slots=1, max_queued=1,
+                               max_len=160) as (srv, port, eng):
+                t1 = asyncio.ensure_future(sse_generate(HOST, port, {
+                    "prompt": [1, 2, 3], "max_tokens": 96}))
+                await wait_stat(port, lambda s: s["live_slots"] == 1)
+                t2 = asyncio.ensure_future(sse_generate(HOST, port, {
+                    "prompt": [4, 5, 6], "max_tokens": 8}))
+                await wait_stat(port, lambda s: s["queue_depth"] == 1)
+                status, body = await request_json(HOST, port, "POST",
+                                                  "/generate", {
+                    "prompt": [9], "max_tokens": 2, "stream": False})
+                (st1, ev1, _), (st2, ev2, _) = await t1, await t2
+                stats = (await request_json(HOST, port, "GET", "/stats"))[1]
+                return status, body, st1, ev1, st2, ev2, stats
+        status, body, st1, ev1, st2, ev2, stats = asyncio.run(go())
+        assert status == 429
+        assert body == {"error": "admission_queue_full", "queued": 1,
+                        "capacity": 1, "retry": True}
+        assert st1 == 200 and ev1[-1].get("done")
+        assert st2 == 200 and ev2[-1].get("done")
+        assert stats["rejected"] >= 1 and stats["http_rejects"] >= 1
+
+    def test_slow_consumer_cannot_stall_other_streams(self):
+        """A client that stops reading its SSE socket is detected (drain
+        timeout against test-scale socket buffers) and disconnected;
+        concurrent fast streams finish with full output meanwhile."""
+        cfg = ServerConfig(host=HOST, port=0, stream_buffer=4,
+                           write_high_water=64, sndbuf=4096,
+                           drain_timeout=0.3)
+        async def go():
+            async with serving(server_cfg=cfg, n_slots=2,
+                               max_len=512) as (srv, port, eng):
+                # raw non-reading client: small RCVBUF closes the TCP
+                # window within a few KB of events
+                s = socket.socket()
+                s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4096)
+                s.connect((HOST, port))
+                # limit= caps the client transport's eager read-ahead —
+                # without it asyncio buffers 64KB off the socket and the
+                # TCP window never closes at test scale
+                reader, writer = await asyncio.open_connection(
+                    sock=s, limit=1024)
+                writer.write(_request_bytes("POST", "/generate", {
+                    "prompt": [1, 2, 3], "max_tokens": 480}))
+                await writer.drain()
+                await _read_head(reader)   # headers only, then never read
+                # fast streams complete while the slow one is wedged
+                fast = []
+                for _ in range(3):
+                    fast.append(await sse_generate(HOST, port, {
+                        "prompt": [4, 5, 6], "max_tokens": 6}))
+                await wait_stat(port, lambda s_: s_["slow_disconnects"] >= 1)
+                stats = await wait_stat(
+                    port, lambda s_: s_["live_slots"] == 0
+                    and s_["open_streams"] == 0)
+                writer.close()
+                return fast, stats, srv.counters
+        fast, stats, counters = asyncio.run(go())
+        for st, ev, _ in fast:
+            assert st == 200 and ev[-1].get("done")
+            assert len([e for e in ev if "token" in e]) == 6
+        assert counters["slow_disconnects"] >= 1
+        # the wedged request was aborted and its resources freed
+        assert stats["aborted"] >= 1
+        assert stats["pages_in_use"] == 0
+
+    def test_token_stream_drop_policy_buffer(self):
+        """Unit wall for the bounded buffer: overflow drops token events
+        and sticks the flag, but the final event ALWAYS lands."""
+        async def go():
+            ts = TokenStream(maxsize=2)
+            for i in range(5):
+                ts.push({"token": i, "text": f"t{i}", "index": i})
+            ts.push({"done": True, "finish_reason": "length",
+                     "text": "", "n_tokens": 5})
+            got = []
+            while True:
+                e = await ts.next()
+                got.append(e)
+                if e.get("done"):
+                    return ts, got
+        ts, got = asyncio.run(go())
+        assert ts.overflowed and ts.dropped == 3
+        assert [e.get("token") for e in got] == [0, 1, None]
+        assert got[-1]["done"] and ts.finished
+
+    def test_server_config_validation(self):
+        with pytest.raises(ValueError):
+            ServerConfig(slow_policy="explode")
+        with pytest.raises(ValueError):
+            ServerConfig(stream_buffer=0)
+        ServerConfig(slow_policy=SLOW_DROP)  # valid
+
+
+class TestShutdown:
+    def test_midflight_close_flushes_and_frees(self):
+        """The regression satellite: close() mid-stream must join the
+        detok thread, deliver a final 'aborted' event whose text is the
+        FULL flush of every token emitted before shutdown, and leave
+        zero live slots and zero pool pages (PR 5 no-leak invariant)."""
+        def parse(buf, events):
+            while b"\n\n" in buf:
+                frame, buf = buf.split(b"\n\n", 1)
+                if frame.startswith(b"data: "):
+                    events.append(json.loads(frame[6:].decode()))
+            return buf
+
+        async def go():
+            eng = make_engine(n_slots=2, max_len=256, prefix_cache=False)
+            srv = EngineServer(eng, ServerConfig(host=HOST, port=0))
+            port = await srv.start(aot=False)
+            try:
+                reader, writer = await asyncio.open_connection(HOST, port)
+                writer.write(_request_bytes("POST", "/generate", {
+                    "prompt": [1, 2, 3], "max_tokens": 200}))
+                await writer.drain()
+                status, _ = await _read_head(reader)
+                assert status == 200
+                events, buf = [], b""
+                while len([e for e in events if "token" in e]) < 3:
+                    chunk = await reader.read(4096)
+                    assert chunk, "stream ended before 3 tokens"
+                    buf = parse(buf + chunk, events)
+            finally:
+                await srv.close()
+            # post-close: the handler task flushes the backlog's final
+            # events to the still-open connection, then EOF
+            while True:
+                chunk = await reader.read(4096)
+                if not chunk:
+                    break
+                buf = parse(buf + chunk, events)
+            writer.close()
+            return srv, eng, events
+
+        srv, eng, events = asyncio.run(go())
+        done = events[-1]
+        toks = [e for e in events if "token" in e]
+        assert done.get("done") and done["finish_reason"] == "aborted"
+        assert len(toks) >= 3
+        # every token emitted before shutdown reached the stream as text
+        assert done["text"] == "".join(e["text"] for e in toks)
+        assert done["n_tokens"] == len(toks)
+        assert not srv.detok.alive           # backlog thread joined
+        assert not srv._tick_thread.is_alive()
+        st = eng.stats()
+        assert st["live_slots"] == 0 and st["queue_depth"] == 0
+        assert eng.pool.used_pages == 0      # no leaked pages
+        eng.pool.check()
+
+    def test_close_idempotent_and_empty(self):
+        async def go():
+            async with serving() as (srv, port, eng):
+                await request_json(HOST, port, "GET", "/healthz")
+            await srv.close()                # second close: no-op
+            return srv
+        srv = asyncio.run(go())
+        assert not srv.detok.alive and not srv._tick_thread.is_alive()
+
+
+@pytest.mark.subprocess
+class TestServeCLI:
+    def test_serve_boot_sse_and_clean_sigint(self, tmp_path):
+        """Boot `--serve` in a subprocess, ride the real wire, SIGINT:
+        readiness line, streamed tokens, warm stats, clean exit."""
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+        env.update({k: v for k, v in os.environ.items()
+                    if k.startswith(("JAX_", "XLA_"))})
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.serve", "--arch",
+             "granite-8b", "--reduced", "--serve", "--port", "0",
+             "--slots", "2", "--max-len", "48", "--chunk-tokens", "16",
+             "--page-tokens", "8"],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            cwd="/root/repo", env=env, text=True)
+        try:
+            port = None
+            t0 = time.time()
+            lines = []
+            while time.time() - t0 < 300:
+                line = proc.stdout.readline()
+                if not line:
+                    break
+                lines.append(line)
+                if line.startswith("serving on http://"):
+                    port = int(line.split(":")[2].split("/")[0].split()[0])
+                    break
+            assert port, f"no readiness line: {''.join(lines)}"
+            assert "(aot=on)" in lines[-1]   # --serve defaults AOT on
+
+            async def go():
+                st, ev, _ = await sse_generate(HOST, port, {
+                    "prompt": [1, 2, 3], "max_tokens": 4})
+                stats = await request_json(HOST, port, "GET", "/stats")
+                return st, ev, stats
+            st, ev, (_, stats) = asyncio.run(go())
+            assert st == 200
+            assert len([e for e in ev if "token" in e]) == 4
+            assert ev[-1].get("done")
+            assert stats["aot_warm"] is True
+            proc.send_signal(signal.SIGINT)
+            out, _ = proc.communicate(timeout=60)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+                proc.communicate()
+        assert proc.returncode == 0
+        assert "server closed" in out
+        assert "Traceback" not in out and "KeyboardInterrupt" not in out

@@ -1,0 +1,128 @@
+"""AOT warmup wall: a warmed engine's first real tick traces NOTHING.
+
+The probe is ``repro.serve.engine.TRACE_COUNTS`` — a module counter
+bumped inside the Python bodies of the jitted tick functions. Those
+bodies only run at trace time, so a stable counter across a full
+submit+drain is a direct zero-new-compiles proof, independent of any
+JAX cache internals.
+
+Models here are built FRESH (no cross-module lru_cache): warmup must be
+the first thing that ever traces these callables, otherwise the test
+would pass vacuously off another test's warm jit cache.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.nn import module as mod
+from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.serve.engine import TRACE_COUNTS, BatchedEngine, ServeConfig
+from repro.serve.sampling import SamplingParams
+from repro.serve.weights import export_serving_params
+
+PROMPTS = [[3, 9, 4, 11, 7, 2, 5], [1, 2], [8, 8, 8, 8, 8, 8, 8, 8, 8, 8]]
+
+
+def fresh_engine(arch, **cfg_kw):
+    cfg = get_config(arch).reduced()
+    tm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN,
+                                       compute_dtype=jnp.float32))
+    sm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
+                                       compute_dtype=jnp.float32,
+                                       use_pallas=False))
+    tp = mod.init_params(tm.specs(), jax.random.PRNGKey(0))
+    sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+    kw = dict(n_slots=2, max_len=32, chunk_tokens=8, page_tokens=8)
+    kw.update(cfg_kw)
+    return sm, sp, BatchedEngine(sm, sp, ServeConfig(**kw))
+
+
+@pytest.fixture(scope="module")
+def warmed():
+    """One fresh granite engine, warmed once; (engine, timings)."""
+    sm, sp, eng = fresh_engine("granite-8b")
+    timings = eng.warmup()
+    return sm, sp, eng, timings
+
+
+class TestWarmup:
+    def test_timings_cover_entry_points(self, warmed):
+        _, _, eng, timings = warmed
+        assert {"decode_tick", "extend_tick", "reset_slot"} <= set(timings)
+        assert all(t > 0 for t in timings.values())
+        assert eng.aot_warm
+
+    def test_zero_new_traces_after_warmup(self, warmed):
+        _, _, eng, _ = warmed
+        before = dict(TRACE_COUNTS)
+        reqs = [eng.submit(p, SamplingParams(max_tokens=4)) for p in PROMPTS]
+        eng.run_until_drained()
+        assert dict(TRACE_COUNTS) == before, (
+            "warmed engine traced during serving: "
+            f"{ {k: TRACE_COUNTS[k] - before.get(k, 0) for k in TRACE_COUNTS if TRACE_COUNTS[k] != before.get(k, 0)} }")
+        assert all(len(r.output) == 4 for r in reqs)
+        assert eng.stats()["aot_warm"]
+
+    def test_aot_outputs_match_jit_path(self, warmed):
+        """The compiled-ahead executables are the SAME program: a second
+        engine on the same model (lazy jit path, already traced) must
+        produce identical tokens."""
+        sm, sp, warm_eng, _ = warmed
+        ref_eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=2, max_len=32, chunk_tokens=8, page_tokens=8))
+        assert not ref_eng.aot_warm
+        warm = [warm_eng.submit(p, SamplingParams(max_tokens=4))
+                for p in PROMPTS]
+        ref = [ref_eng.submit(p, SamplingParams(max_tokens=4))
+               for p in PROMPTS]
+        warm_eng.run_until_drained()
+        ref_eng.run_until_drained()
+        assert [r.output for r in warm] == [r.output for r in ref]
+
+
+class TestStatefulWarmup:
+    def test_snapshot_restore_warm(self):
+        """Stateful family + prefix cache: warmup must also cover the
+        snapshot/restore pair, and a prefix HIT after warmup (the restore
+        path) still traces nothing."""
+        _, _, eng = fresh_engine("mamba2-370m", prefix_cache=True)
+        assert eng.trie is not None and eng._stateful
+        timings = eng.warmup()
+        assert {"snapshot_slot", "restore_slot"} <= set(timings)
+        before = dict(TRACE_COUNTS)
+        shared = [5, 6, 7, 8, 9, 10, 11, 12]
+        a = eng.submit(shared + [1], SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        b = eng.submit(shared + [2], SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        assert eng.stats()["prefix_hits"] >= 1  # restore path exercised
+        assert dict(TRACE_COUNTS) == before
+        assert len(a.output) == 2 and len(b.output) == 2
+
+
+class TestWarmupFailure:
+    def test_failure_names_entry_point(self, warmed):
+        """A lower/compile failure must say WHICH executable and shapes —
+        a silent partial warmup just moves the stall back into serving.
+        Throwaway engines on the fixture's model: Boom raises at lower()
+        so no tracing happens before the error path under test."""
+        sm, sp, _, _ = warmed
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=3, max_len=32, chunk_tokens=8, page_tokens=8))
+
+        class Boom:
+            def lower(self, *a, **k):
+                raise ValueError("no lowering today")
+
+        eng._decode = Boom()
+        with pytest.raises(RuntimeError,
+                           match=r"decode_tick.*tokens int32\[3,1\]"):
+            eng.warmup()
+        assert not eng.aot_warm or "decode_tick" not in eng._aot
+        eng2 = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=2, max_len=32, chunk_tokens=8, page_tokens=8))
+        eng2._extend = Boom()
+        with pytest.raises(RuntimeError,
+                           match=r"extend_tick.*block int32\[2,8\]"):
+            eng2.warmup()
