@@ -5,7 +5,10 @@ Poisson arrivals (exponential inter-arrival gaps at the target QPS),
 prompt/output lengths drawn from weighted discrete mixes, and an
 optional shared-prefix population (a fraction of requests re-use one of
 ``n_prefix_groups`` common prefixes — the traffic shape the radix-trie
-prefix cache exists for). Same ``LoadSpec`` -> byte-identical schedule,
+prefix cache exists for), and an optional PRIORITY-CLASS mix
+(``priority_mix``: each request draws a scheduling class from weighted
+names — the interactive-under-batch-flood traffic the pressure
+scheduler exists for). Same ``LoadSpec`` -> byte-identical schedule,
 every time, on every host: the schedule is pure ``numpy.random.default_rng``
 state, no wall clock anywhere (tests/test_loadgen.py pins this).
 
@@ -26,6 +29,8 @@ import numpy as np
 
 # (value, weight) pairs; weights need not sum to 1 (normalised at draw)
 Mix = Tuple[Tuple[int, float], ...]
+# (priority class, weight) pairs, same normalisation
+ClassMix = Tuple[Tuple[str, float], ...]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +47,9 @@ class LoadSpec:
     n_prefix_groups: int = 1
     temperature: float = 0.0
     top_k: Optional[int] = None
+    priority_mix: Optional[ClassMix] = None  # per-request scheduling class
+    # drawn from these weights (e.g. (("interactive", 0.2), ("batch",
+    # 0.8))); None sends no "priority" field at all — the engine default
 
     def __post_init__(self):
         if self.qps <= 0:
@@ -51,6 +59,11 @@ class LoadSpec:
         if self.shared_prefix_ratio > 0 and self.shared_prefix_len <= 0:
             raise ValueError("shared_prefix_len must be > 0 when "
                              "shared_prefix_ratio > 0")
+        if self.priority_mix is not None:
+            if not self.priority_mix:
+                raise ValueError("priority_mix must be non-empty or None")
+            if any(w <= 0 for _, w in self.priority_mix):
+                raise ValueError("priority_mix weights must be > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,14 +74,16 @@ class TimedRequest:
     max_tokens: int
     seed: int                   # per-request sampling seed (rid-invariant)
     prefix_group: Optional[int]  # which shared prefix, None = unique prompt
+    priority: Optional[str] = None  # scheduling class; None = engine default
 
     def payload(self, spec: LoadSpec) -> dict:
         """The POST /generate body for this request."""
-        body = {"prompt": list(self.prompt), "max_tokens": self.max_tokens,
-                "temperature": spec.temperature, "seed": self.seed}
-        if spec.top_k is not None:
-            body["top_k"] = spec.top_k
-        return body
+        from repro.serve.client import generate_payload
+
+        return generate_payload(
+            self.prompt, max_tokens=self.max_tokens,
+            temperature=spec.temperature, top_k=spec.top_k,
+            seed=self.seed, priority=self.priority)
 
 
 def _pick(rng: np.random.Generator, mix: Mix) -> int:
@@ -80,6 +95,11 @@ def _pick(rng: np.random.Generator, mix: Mix) -> int:
 def generate(spec: LoadSpec) -> List[TimedRequest]:
     """One deterministic trace. Single rng, fixed draw order."""
     rng = np.random.default_rng(spec.seed)
+    # the class stream gets its OWN rng: drawing classes from the main
+    # stream would advance its state and perturb every later request's
+    # arrival/length/prefix draws — FIFO vs priority benchmark variants
+    # must replay the SAME traffic, classes aside
+    prio_rng = np.random.default_rng([spec.seed, 0x70726976])
     gaps = rng.exponential(1.0 / spec.qps, size=spec.n_requests)
     arrivals = np.cumsum(gaps)
     prefixes = [
@@ -96,10 +116,18 @@ def generate(spec: LoadSpec) -> List[TimedRequest]:
             group = int(rng.integers(0, spec.n_prefix_groups))
         tail = tuple(int(t) for t in rng.integers(0, spec.vocab, size=plen))
         prompt = (prefixes[group] + tail) if group is not None else tail
+        seed = int(rng.integers(0, 2**31 - 1))
+        priority = None
+        if spec.priority_mix is not None:
+            weights = np.array([w for _, w in spec.priority_mix],
+                               dtype=np.float64)
+            j = int(prio_rng.choice(len(spec.priority_mix),
+                                    p=weights / weights.sum()))
+            priority = spec.priority_mix[j][0]
         out.append(TimedRequest(
             index=i, at_s=float(arrivals[i]), prompt=prompt,
-            max_tokens=max_tokens, seed=int(rng.integers(0, 2**31 - 1)),
-            prefix_group=group))
+            max_tokens=max_tokens, seed=seed,
+            prefix_group=group, priority=priority))
     return out
 
 
@@ -129,6 +157,7 @@ async def replay(host: str, port: int, spec: LoadSpec,
         done = next((e for e in events if e.get("done")), None)
         return dict(
             index=req.index,
+            priority=req.priority,
             status=status,
             tokens=[e["token"] for e in events if "token" in e],
             text=done.get("text") if done else None,
@@ -164,3 +193,15 @@ def summarize(results: Sequence[dict]) -> dict:
         itl_p99_ms=pct(itls, 99),
         sustained_tok_s=round(n_tokens / span, 1) if span > 1e-9 else None,
     )
+
+
+def summarize_by_class(results: Sequence[dict]) -> dict:
+    """Per-priority-class ``summarize`` rows keyed by class name — the
+    scheduler benchmark's shape: the whole point of priorities is that
+    the interactive column moves while the batch column barely pays."""
+    classes = sorted({r.get("priority") or "default" for r in results})
+    return {
+        cls: summarize([r for r in results
+                        if (r.get("priority") or "default") == cls])
+        for cls in classes
+    }

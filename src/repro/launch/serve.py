@@ -14,6 +14,12 @@ stop):
 extend tick executables at startup so the FIRST request pays no
 trace/compile inside its TTFT; ``--no-aot`` measures the difference.
 
+``--priorities`` turns on class-aware admission (interactive > batch,
+prefix-aware queue jumping with an aging floor) and ``--preempt``
+additionally lets a waiting interactive request park a decoding batch
+slot and resume it later byte-exactly (DESIGN.md §6.4); requests choose
+a class with the HTTP body's ``"priority"`` field.
+
 Tensor-parallel serving shards each layer's packed tile rows over the
 model mesh axis (DESIGN.md §5):
 
@@ -115,6 +121,19 @@ def main(argv=None):
     ap.add_argument("--max-queued", type=int, default=64,
                     help="admission-queue capacity; a full queue returns "
                          "HTTP 429 (--serve mode)")
+    ap.add_argument("--priorities", action="store_true",
+                    help="class-aware admission (interactive > batch, "
+                         "prefix-aware queue jumping, aging floor) instead "
+                         "of FIFO; requests pick a class via the "
+                         "'priority' field / SamplingParams.priority")
+    ap.add_argument("--preempt", action="store_true",
+                    help="preempt-and-resume: a waiting interactive "
+                         "request may park a decoding batch slot "
+                         "(snapshot + retained pages, restored "
+                         "byte-exactly); implies --priorities")
+    ap.add_argument("--default-priority", default="batch",
+                    help="class for requests that don't set one "
+                         "(interactive | batch)")
     ap.add_argument("--aot", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="AOT-compile the tick executables at startup "
@@ -162,7 +181,10 @@ def main(argv=None):
                     page_tokens=args.page_tokens,
                     pool_pages=args.pool_pages,
                     prefix_cache=args.prefix_cache,
-                    max_queued=args.max_queued if args.serve else None),
+                    max_queued=args.max_queued if args.serve else None,
+                    priorities=args.priorities or args.preempt,
+                    preempt=args.preempt,
+                    default_priority=args.default_priority),
         mesh=mesh,
     )
     if args.serve:
@@ -200,8 +222,13 @@ def main(argv=None):
             np.concatenate([
                 shared, rng.integers(0, cfg.vocab, size=rng.integers(3, 12))
             ]).astype(np.int32),
-            SamplingParams(max_tokens=args.max_tokens))
-        for _ in range(args.requests)
+            SamplingParams(
+                max_tokens=args.max_tokens,
+                # under --priorities make the synthetic batch exercise the
+                # scheduler: every 4th request is interactive
+                priority=("interactive" if eng.cfg.priorities and i % 4 == 3
+                          else None)))
+        for i in range(args.requests)
     ]
     t0 = time.time()
     tick_ends = []
@@ -235,6 +262,16 @@ def main(argv=None):
         print(f"prefix cache (page={eng.cfg.page_tokens}): {line}")
     else:
         print("prefix cache: disabled (--prefix-cache to enable)")
+    if eng.cfg.priorities:
+        per_cls = ", ".join(
+            f"{cls} {t} ticks (n={st['class_counts'][cls]})"
+            for cls, t in st["class_ttft_ticks"].items()
+        )
+        print(f"scheduler ({'priority+preempt' if eng.cfg.preempt else 'priority'}): "
+              f"{st['preempts']} preempts / {st['resumes']} resumes, "
+              f"{st['preempted_tokens']} context tokens parked, "
+              f"preempt-free tick rate {st['preempt_free_tick_rate']:.2f}; "
+              f"TTFT {per_cls or 'n/a'}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
     return reqs

@@ -18,6 +18,26 @@ import time
 from typing import List, Optional, Tuple
 
 
+def generate_payload(prompt, *, max_tokens: Optional[int] = None,
+                     temperature: Optional[float] = None,
+                     top_k: Optional[int] = None,
+                     seed: Optional[int] = None,
+                     priority: Optional[str] = None,
+                     stream: Optional[bool] = None) -> dict:
+    """One place that spells the POST /generate body. ``None`` fields are
+    omitted so the server's ``SamplingParams.from_json`` sees exactly the
+    caller's intent (the engine fills defaults); ``priority`` is the
+    scheduling class ("interactive" | "batch") the pressure scheduler
+    orders admission by."""
+    payload: dict = {"prompt": list(prompt)}
+    for key, val in (("max_tokens", max_tokens), ("temperature", temperature),
+                     ("top_k", top_k), ("seed", seed),
+                     ("priority", priority), ("stream", stream)):
+        if val is not None:
+            payload[key] = val
+    return payload
+
+
 def _request_bytes(method: str, path: str, body: Optional[dict]) -> bytes:
     data = json.dumps(body).encode() if body is not None else b""
     head = (f"{method} {path} HTTP/1.1\r\n"

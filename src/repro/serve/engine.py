@@ -50,6 +50,26 @@ Design (vLLM/Sarathi-style, adapted to fixed-shape XLA):
   into the trie; LRU leaf eviction reclaims pages when the pool runs
   dry. Tokens are byte-identical with the cache on or off (the prefix
   parity wall in tests/test_prefix_cache.py).
+* SCHEDULING UNDER PRESSURE (DESIGN.md §6.4): requests carry a priority
+  CLASS (``interactive`` > ``batch``). With ``ServeConfig.priorities``
+  the admission queue is no longer FIFO: candidates order by
+  ``(class rank, uncached prefill tokens, submission order)`` — the
+  middle term consults the radix trie WITHOUT pinning it
+  (``PrefixTrie.probe``), so a request whose prompt is largely cached
+  jumps the queue proportionally to the prefill it skips. A starvation
+  floor bounds the jumping: after ``starvation_limit`` consecutive
+  admissions that overtook the oldest waiter, the oldest waiter is
+  force-admitted. With ``ServeConfig.preempt`` a waiting request of a
+  strictly higher class may PREEMPT a lower-class slot when no slot is
+  free: the victim's recurrent state is snapshotted (the same
+  ``_snapshot_slot`` machinery the prefix trie uses — valid at ANY
+  position, not just page boundaries), its pool pages stay retained off
+  to the side, and the parked request later resumes into any free slot
+  byte-exactly (tokens are scheduling-invariant by the PRNG design
+  above, so preempt-on == preempt-off is byte-identical — the parity
+  wall in tests/test_preempt.py). A request preempted
+  ``max_preempts`` times becomes immune, so the batch class keeps a
+  progress floor under a sustained interactive flood.
 * Weights are SERVE-form (packed tiles + alphas, repro.serve.weights);
   passing ``mesh=`` places them with the serving sharding rules and
   traces extend/decode under those rules (DESIGN.md §5).
@@ -60,8 +80,8 @@ import collections
 import contextlib
 import dataclasses
 import itertools
-import queue
-from typing import Callable, Dict, List, Optional
+import threading
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +94,12 @@ from repro.serve.sampling import SamplingParams, sample_logits_batch
 
 PREFILL = "prefill"
 DECODE = "decode"
+
+# Priority classes, best first: rank 0 outranks rank 1. The class names
+# are the wire-level vocabulary (`"priority"` field of POST /generate);
+# submit() rejects anything else so typos fail fast instead of silently
+# scheduling at an unintended class.
+PRIORITY_RANKS: Dict[str, int] = {"interactive": 0, "batch": 1}
 
 # Trace probe: each jitted tick function bumps its counter when its
 # PYTHON body runs — i.e. exactly when jax traces (or retraces) it.
@@ -97,6 +123,75 @@ class AdmissionQueueFull(RuntimeError):
         )
         self.queued = queued
         self.capacity = capacity
+
+
+class _AdmissionQueue:
+    """Thread-safe waiting set the scheduler picks from by POLICY, not
+    position: ``submit`` appends from any thread, the tick thread takes a
+    snapshot, chooses a candidate (FIFO, or the priority/prefix-aware
+    key), and removes it. Aborted-while-queued requests are pruned lazily
+    on every size/snapshot access so ``qsize`` reflects real pressure.
+    Keeps the ``queue.Queue``-shaped ``empty``/``qsize`` surface the
+    front-end and tests already poll."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items: List["Request"] = []
+
+    def put(self, req: "Request") -> None:
+        with self._lock:
+            self._items.append(req)
+
+    def _prune_locked(self) -> None:
+        self._items = [r for r in self._items if not r.done]
+
+    def qsize(self) -> int:
+        with self._lock:
+            self._prune_locked()
+            return len(self._items)
+
+    def empty(self) -> bool:
+        return self.qsize() == 0
+
+    def snapshot(self) -> List["Request"]:
+        with self._lock:
+            self._prune_locked()
+            return list(self._items)
+
+    def remove(self, req: "Request") -> bool:
+        with self._lock:
+            try:
+                self._items.remove(req)
+                return True
+            except ValueError:
+                return False
+
+    def drain(self) -> List["Request"]:
+        with self._lock:
+            items, self._items = self._items, []
+            return [r for r in items if not r.done]
+
+
+@dataclasses.dataclass
+class PreemptedState:
+    """Everything needed to resume a preempted request byte-exactly into
+    ANY slot: the retained pool-page run (full-attention K/V never moves
+    — resuming just rewrites a page table row), the recurrent-family
+    snapshot (SSM/RG-LRU carries + windowed rings, captured at the exact
+    preemption position), and the host-side slot registers (phase,
+    prefill offset, cache length, last sampled token, PRNG fold
+    position, pending trie-boundary snapshots)."""
+
+    req: "Request"
+    phase: str                          # PREFILL | DECODE at preemption
+    offset: int                         # prompt tokens consumed
+    length: int                         # cache length (tokens written)
+    pages: List[int]                    # retained pool pages, in order
+    snapshot: object                    # recurrent pytree (None: stateless)
+    snaps: Dict[int, object]            # captured trie-boundary snapshots
+    need_snaps: set                     # boundaries still to capture
+    count: int                          # emitted tokens == PRNG fold pos
+    last_token: int                     # decode input token at preemption
 
 
 def _tick_fns(model):
@@ -190,6 +285,12 @@ class Request:
     # is the TTFT tick; successive gaps are per-token inter-token ticks
     prefix_hit_tokens: int = 0           # prompt tokens served from the
     # prefix cache at admission (page-aligned; 0 on a cold miss)
+    priority: str = "batch"              # resolved class (submit() fills it
+    # from params.priority / ServeConfig.default_priority and validates)
+    submit_step: int = 0                 # engine tick at submission: the
+    # per-class TTFT stats measure from here, queue wait included
+    preempt_count: int = 0               # times preempted so far; at
+    # ServeConfig.max_preempts the request becomes preemption-immune
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,6 +311,18 @@ class ServeConfig:
     # queue makes submit() raise AdmissionQueueFull (typed backpressure —
     # the HTTP front-end's 429) instead of queueing unboundedly. None
     # keeps the historical unbounded queue for batch drivers.
+    priorities: bool = False            # class-aware + prefix-aware
+    # admission ordering (off = strict FIFO, the historical behavior)
+    preempt: bool = False               # preempt-and-resume of strictly
+    # lower-priority slots when a higher-class request waits with no free
+    # slot; requires priorities (a FIFO admission would hand the freed
+    # slot to the wrong request and thrash)
+    default_priority: str = "batch"     # class for requests that don't say
+    starvation_limit: int = 8           # priority mode's aging floor: max
+    # consecutive admissions that may overtake the oldest waiter before
+    # it is force-admitted
+    max_preempts: int = 3               # per-request preemption cap; at
+    # the cap a request becomes immune (the batch-class progress floor)
 
     def __post_init__(self):
         """Fail fast on an impossible engine shape.
@@ -262,6 +375,27 @@ class ServeConfig:
                 f"max_queued must be >= 1 (or None for unbounded): "
                 f"{self.max_queued}"
             )
+        if self.preempt and not self.priorities:
+            raise ValueError(
+                "preempt=True requires priorities=True: preemption frees "
+                "a slot FOR a higher-class waiter, but FIFO admission "
+                "would hand it to the oldest request instead and thrash"
+            )
+        if self.default_priority not in PRIORITY_RANKS:
+            raise ValueError(
+                f"default_priority {self.default_priority!r} is not a "
+                f"priority class: {sorted(PRIORITY_RANKS)}"
+            )
+        if self.starvation_limit < 1:
+            raise ValueError(
+                f"starvation_limit must be >= 1: {self.starvation_limit} "
+                f"(0 would force-admit the oldest waiter every time — "
+                f"that is just FIFO; use priorities=False)"
+            )
+        if self.max_preempts < 0:
+            raise ValueError(
+                f"max_preempts must be >= 0: {self.max_preempts}"
+            )
 
 
 class BatchedEngine:
@@ -284,8 +418,16 @@ class BatchedEngine:
             )
             params = jax.device_put(params, shardings)
         self.params = params
-        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._queue = _AdmissionQueue()
         self._live: Dict[int, Request] = {}      # slot -> request
+        # preempted requests waiting to resume: pages retained, recurrent
+        # state snapshotted, no slot. Competes with the admission queue
+        # under the same candidate key (a decode-phase parked request has
+        # zero remaining prefill, so it naturally resumes first in class).
+        self._parked: List[PreemptedState] = []
+        self._overtakes = 0       # consecutive non-oldest admissions
+        self._preempted_since_tick = False
+        self._class_ttft: Dict[str, List[int]] = {}  # class -> [sum, n]
         self._free = list(range(cfg.n_slots))
         self._rid = itertools.count()
         self._root_key = jax.random.PRNGKey(cfg.seed)
@@ -324,6 +466,7 @@ class BatchedEngine:
             "prompt_tokens": 0, "tokens_out": 0, "aborted": 0,
             "rejected": 0, "peak_queue_depth": 0,
             "preempt_free_ticks": 0, "work_ticks": 0,
+            "preempts": 0, "resumes": 0, "preempted_tokens": 0,
         }
 
         # Streaming hooks: the front-end registers these to learn about
@@ -413,7 +556,10 @@ class BatchedEngine:
             ("reset_slot", self._reset, (self.caches, 0),
              f"slot int32[], {cfg.n_slots}-slot caches"),
         ]
-        if self.trie is not None and self._stateful:
+        # snapshot/restore executables serve BOTH the prefix trie's
+        # boundary snapshots and the preempting scheduler's parking; warm
+        # them whenever a stateful model could need either.
+        if self._stateful and (self.trie is not None or cfg.preempt):
             plans.append(("snapshot_slot", self._snapshot, (self.caches, 0),
                           f"slot int32[], {cfg.n_slots}-slot caches"))
         timings: Dict[str, float] = {}
@@ -462,6 +608,14 @@ class BatchedEngine:
             raise ValueError(
                 f"prompt len {len(prompt)} exceeds max_len {self.cfg.max_len}"
             )
+        params = params or SamplingParams()
+        cls = (params.priority if params.priority is not None
+               else self.cfg.default_priority)
+        if cls not in PRIORITY_RANKS:
+            raise ValueError(
+                f"unknown priority class {cls!r}: expected one of "
+                f"{sorted(PRIORITY_RANKS)}"
+            )
         if (self.cfg.max_queued is not None
                 and self._queue.qsize() >= self.cfg.max_queued):
             self._stats["rejected"] += 1
@@ -470,10 +624,20 @@ class BatchedEngine:
         req = Request(
             rid=next(self._rid),
             prompt=prompt,
-            params=params or SamplingParams(),
+            params=params,
+            priority=cls,
+            submit_step=self.steps,
         )
         self._queue.put(req)
         return req
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything is queued, live, or parked — the tick
+        loop's "keep stepping" predicate. Parked requests count: they
+        hold pages and an unfinished stream even when no slot is live."""
+        return (bool(self._live) or bool(self._parked)
+                or not self._queue.empty())
 
     def _maybe_retire(self, slot: int, req: Request, tok: int) -> bool:
         """Retire a just-extended request. EOS is checked before the length
@@ -535,11 +699,13 @@ class BatchedEngine:
         self._counts[slot] = 0
 
     def abort(self, req: Request) -> bool:
-        """Cancel a request, queued or live: its slot and pages free
-        immediately, nothing is published to the prefix trie (an aborted
-        prompt may have prefilled only partially — publishing a
+        """Cancel a request, queued, live, or PARKED: its slot and pages
+        free immediately, nothing is published to the prefix trie (an
+        aborted prompt may have prefilled only partially — publishing a
         half-written page run would poison later prefix hits), and
-        ``on_finish`` fires with ``finish_reason == "aborted"``.
+        ``on_finish`` fires with ``finish_reason == "aborted"``. Aborting
+        a parked request releases its retained page run and drops its
+        snapshot — no slot is involved.
 
         NOT thread-safe against a concurrent ``step()`` — the caller
         (the server's shutdown path) must stop the tick loop first.
@@ -553,25 +719,40 @@ class BatchedEngine:
             if r is req:
                 self._release_slot(slot)
                 break
-        # a queued (never-admitted) request is skipped lazily: the
-        # admission loop drops done requests as they surface
+        else:
+            for parked in self._parked:
+                if parked.req is req:
+                    self._release_parked(parked)
+                    break
+        # a queued (never-admitted) request drops out of the waiting set
+        # on the next prune (the done flag set above is the tombstone)
         if self.on_finish is not None:
             self.on_finish(req)
         return True
 
     def abort_all(self) -> int:
-        """Abort every queued and live request (server shutdown); returns
-        how many actually transitioned."""
+        """Abort every queued, parked, and live request (server
+        shutdown); returns how many actually transitioned."""
         n = 0
         for r in list(self._live.values()):
             n += bool(self.abort(r))
-        while not self._queue.empty():
-            try:
-                r = self._queue.get_nowait()
-            except queue.Empty:      # pragma: no cover - single-consumer
-                break
+        for parked in list(self._parked):
+            n += bool(self.abort(parked.req))
+        for r in self._queue.drain():
             n += bool(self.abort(r))
         return n
+
+    def _release_parked(self, parked: PreemptedState):
+        """Drop a parked request's held resources: page references back to
+        the pool, snapshot to the GC. The inverse of the retain-in-place
+        that ``preempt_slot`` performed."""
+        if self.pool is not None:
+            for pid in parked.pages:
+                self.pool.release(pid)
+        parked.pages = []
+        parked.snapshot = None
+        parked.snaps = {}
+        self._parked.remove(parked)
 
     def _admit(self, slot: int, req: Request):
         """O(1) admission: claim the slot, zero its per-slot state, and —
@@ -632,6 +813,205 @@ class BatchedEngine:
             else jax.random.fold_in(self._root_key, req.rid)
         )
         self._counts[slot] = 0
+
+    # ---- scheduling under pressure -----------------------------------
+    def preempt_slot(self, slot: int) -> bool:
+        """Park the request occupying ``slot`` and free the slot, keeping
+        every byte of its progress: pool pages stay retained (the K/V
+        never moves — resuming rewrites a page-table row), recurrent
+        state is snapshotted at the CURRENT position (snapshot/restore is
+        position-exact; the page-boundary rule exists only for trie
+        sharing semantics), and the host-side registers (offset, length,
+        last token, PRNG fold count, pending boundary snapshots) ride in
+        the :class:`PreemptedState`. The scheduler calls this when a
+        strictly higher-class request waits with no free slot; tests call
+        it directly to force preemption at arbitrary ticks. Like
+        ``abort``, not safe against a concurrent ``step()``.
+        Returns False if the slot is not live."""
+        req = self._live.get(slot)
+        if req is None:
+            return False
+        with self._mesh_ctx():
+            snap = None
+            if self._stateful:
+                snap = self._aot.get("snapshot_slot", self._snapshot)(
+                    self.caches, slot)
+            pages = (
+                [int(self._ptab[slot, i])
+                 for i in range(int(self._n_mapped[slot]))]
+                if self.pool is not None else []
+            )
+            parked = PreemptedState(
+                req=req,
+                phase=self._phase[slot],
+                offset=int(self._offsets[slot]),
+                length=int(self.lengths[slot]),
+                pages=pages,
+                snapshot=snap,
+                snaps=self._snaps[slot],
+                need_snaps=self._need_snaps[slot],
+                count=int(self._counts[slot]),
+                last_token=int(self.tokens[slot, 0]),
+            )
+            self._parked.append(parked)
+            req.preempt_count += 1
+            # free the slot WITHOUT releasing its pages (they now belong
+            # to the parked record) and without firing on_finish
+            self._n_mapped[slot] = 0
+            self._snaps[slot] = {}
+            self._need_snaps[slot] = set()
+            self._live.pop(slot)
+            self._free.append(slot)
+            self._phase[slot] = None
+            if slot in self._admit_order:
+                self._admit_order.remove(slot)
+            self.temps = self.temps.at[slot].set(0.0)
+            self.topks = self.topks.at[slot].set(0)
+            self._eos_ids[slot] = -1
+            self._counts[slot] = 0
+            self._stats["preempts"] += 1
+            self._stats["preempted_tokens"] += parked.length
+            self._preempted_since_tick = True
+        return True
+
+    def _resume(self, slot: int, parked: PreemptedState):
+        """Restore a parked request into ``slot`` byte-exactly: page run
+        back into the slot's table row, recurrent snapshot over the
+        freshly zeroed per-slot rows, host registers verbatim. The
+        request's tokens continue exactly where the uninterrupted run
+        would be (the preemption parity wall pins this)."""
+        req = parked.req
+        self._live[slot] = req
+        self._phase[slot] = parked.phase
+        if parked.phase == PREFILL:
+            self._admit_order.append(slot)
+        if self.pool is not None:
+            for i, pid in enumerate(parked.pages):
+                self._ptab[slot, i] = pid
+            self._n_mapped[slot] = len(parked.pages)
+        self._snaps[slot] = parked.snaps
+        self._need_snaps[slot] = parked.need_snaps
+        self._offsets[slot] = parked.offset
+        self.lengths = self.lengths.at[slot].set(parked.length)
+        self.caches = self._aot.get("reset_slot", self._reset)(
+            self.caches, slot)
+        if self._stateful and parked.snapshot is not None:
+            self.caches = self._aot.get("restore_slot", self._restore)(
+                self.caches, slot, parked.snapshot)
+        res = req.params.resolve(self.cfg.temperature, self.cfg.top_k)
+        self.temps = self.temps.at[slot].set(res.temperature)
+        self.topks = self.topks.at[slot].set(res.top_k)
+        self._eos_ids[slot] = res.eos_id
+        self._slot_keys = self._slot_keys.at[slot].set(
+            jax.random.PRNGKey(res.seed) if res.seed is not None
+            else jax.random.fold_in(self._root_key, req.rid)
+        )
+        self._counts[slot] = parked.count
+        self.tokens = self.tokens.at[slot, 0].set(parked.last_token)
+        self._stats["resumes"] += 1
+
+    def _rank(self, req: Request) -> int:
+        return PRIORITY_RANKS[req.priority]
+
+    def _candidate_key(self, cand: Union[Request, PreemptedState]):
+        """Priority-mode admission order: (class rank, uncached prefill
+        tokens, submission order). The middle term is the work admission
+        would actually schedule — a parked decode-phase request costs 0
+        (it resumes straight into decode), a parked prefill resumes at
+        its offset, and a fresh request's cached prefix is probed from
+        the trie WITHOUT pinning recency (the probe is advisory; the
+        authoritative match happens at admission)."""
+        if isinstance(cand, PreemptedState):
+            cost = (len(cand.req.prompt) - cand.offset
+                    if cand.phase == PREFILL else 0)
+            return (self._rank(cand.req), cost, cand.req.rid)
+        cached = 0
+        if self.trie is not None:
+            cached = self.trie.probe(
+                cand.prompt, require_snapshot=self._stateful)
+        return (self._rank(cand), len(cand.prompt) - cached, cand.rid)
+
+    @staticmethod
+    def _cand_rid(cand: Union[Request, PreemptedState]) -> int:
+        return (cand.req if isinstance(cand, PreemptedState) else cand).rid
+
+    def _pick_candidate(self, cands: List[Union[Request, PreemptedState]]):
+        """Choose the next admission from the waiting set (queued + parked).
+
+        FIFO mode: oldest submission first (parked requests keep their
+        original rid, so a forced preemption resumes in order). Priority
+        mode: best ``_candidate_key``, with the aging floor — once
+        ``starvation_limit`` consecutive admissions have overtaken the
+        oldest waiter, the oldest waiter is force-admitted and the
+        counter resets. No class can starve: the floor is class-blind."""
+        oldest = min(cands, key=self._cand_rid)
+        if not self.cfg.priorities:
+            return oldest
+        if self._overtakes >= self.cfg.starvation_limit:
+            choice = oldest
+        else:
+            choice = min(cands, key=self._candidate_key)
+        if choice is oldest:
+            self._overtakes = 0
+        else:
+            self._overtakes += 1
+        return choice
+
+    def _admissions(self):
+        """Fill free slots from the waiting set: resume parked requests
+        and admit fresh ones under one ordering rule."""
+        while self._free:
+            cands = self._queue.snapshot() + self._parked
+            if not cands:
+                break
+            choice = self._pick_candidate(cands)
+            slot = self._free.pop(0)
+            if isinstance(choice, PreemptedState):
+                self._parked.remove(choice)
+                self._resume(slot, choice)
+            else:
+                self._queue.remove(choice)
+                self._admit(slot, choice)
+
+    def _preempt_pass(self) -> int:
+        """Free slots for waiting higher-class requests by parking
+        strictly lower-class victims. A victim must outrank (numerically:
+        higher rank value than) the BEST waiting overflow request and
+        still be under its ``max_preempts`` immunity cap; among victims
+        the worst class goes first, most recent admission breaking ties
+        (deterministic, and the youngest slot has the least decode
+        momentum). Each parking frees one slot, so the overflow shrinks
+        monotonically and the loop terminates."""
+        n = 0
+        while True:
+            waiting = self._queue.snapshot() + self._parked
+            if self.cfg.priorities:
+                waiting.sort(key=self._candidate_key)
+            else:                        # pragma: no cover - preempt=>prio
+                waiting.sort(key=self._cand_rid)
+            overflow = waiting[len(self._free):]
+            if not overflow:
+                break
+            best_rank = min(
+                self._rank(c.req if isinstance(c, PreemptedState) else c)
+                for c in overflow
+            )
+            victims = [
+                s for s, r in self._live.items()
+                if self._rank(r) > best_rank
+                and r.preempt_count < self.cfg.max_preempts
+            ]
+            if not victims:
+                break
+            victim = max(
+                victims,
+                key=lambda s: (self._rank(self._live[s]),
+                               self._live[s].admit_step,
+                               self._live[s].rid),
+            )
+            self.preempt_slot(victim)
+            n += 1
+        return n
 
     # ------------------------------------------------------------------
     def _boundaries_needing_snapshots(self, prompt) -> set:
@@ -752,6 +1132,12 @@ class BatchedEngine:
                 tok = int(toks_host[slot])
                 req.output.append(tok)
                 req.token_steps.append(self.steps)
+                if len(req.output) == 1:
+                    # first token: per-class TTFT in ticks, measured from
+                    # submission (queue wait + parked time included)
+                    acc = self._class_ttft.setdefault(req.priority, [0, 0])
+                    acc[0] += self.steps - req.submit_step
+                    acc[1] += 1
                 self._counts[slot] += 1
                 self._stats["tokens_out"] += 1
                 self.tokens = self.tokens.at[slot, 0].set(tok)
@@ -788,17 +1174,17 @@ class BatchedEngine:
             self._maybe_retire(slot, req, tok)
 
     def step(self):
-        """One engine tick: admissions + scheduled prefill chunks + one
-        batched decode step. Every live decoding slot emits exactly one
-        token per tick regardless of concurrent prefill (the fairness
-        invariant); a prefilling slot emits its first token on the tick
-        its final chunk lands."""
+        """One engine tick: preemption pass + admissions/resumes +
+        scheduled prefill chunks + one batched decode step. Every live
+        decoding slot emits exactly one token per tick regardless of
+        concurrent prefill (the fairness invariant); a prefilling slot
+        emits its first token on the tick its final chunk lands. A slot
+        preempted this tick emits nothing — exactly the cost the
+        preempt-free tick rate reports."""
         with self._mesh_ctx():
-            while self._free and not self._queue.empty():
-                req = self._queue.get()
-                if req.done:        # aborted while still queued
-                    continue
-                self._admit(self._free.pop(0), req)
+            if self.cfg.preempt:
+                self._preempt_pass()
+            self._admissions()
             depth = self._queue.qsize()
             if depth > self._stats["peak_queue_depth"]:
                 self._stats["peak_queue_depth"] = depth
@@ -813,13 +1199,16 @@ class BatchedEngine:
                 self._run_extend(takes)
             if decoding:
                 self._run_decode(decoding)
-            # preempt-free accounting: a work tick is clean iff every slot
-            # that entered it decoding emitted exactly one token. Today's
-            # scheduler guarantees this (the fairness wall); the counter
-            # exists so a future preempting scheduler SHOWS what it spent.
+            # preempt-free accounting: a work tick is clean iff no slot
+            # was preempted since the last tick AND every slot that
+            # entered it decoding emitted exactly one token. The rate is
+            # what the preempting scheduler SPENT to keep the interactive
+            # class's TTFT down.
             self._stats["work_ticks"] += 1
-            if all(len(r.output) == n + 1 for r, n in dec_reqs):
+            if (not self._preempted_since_tick
+                    and all(len(r.output) == n + 1 for r, n in dec_reqs)):
                 self._stats["preempt_free_ticks"] += 1
+            self._preempted_since_tick = False
         self.steps += 1
 
     def stats(self) -> Dict[str, object]:
@@ -841,10 +1230,22 @@ class BatchedEngine:
         s["queue_depth"] = self._queue.qsize()
         s["live_slots"] = len(self._live)
         s["free_slots"] = len(self._free)
+        s["parked"] = len(self._parked)
         s["ticks"] = self.steps
         s["preempt_free_tick_rate"] = (
             s["preempt_free_ticks"] / max(s["work_ticks"], 1)
         )
+        # per-class first-token latency in TICKS (submission -> first
+        # token, queue wait and parked time included): the number the
+        # priority scheduler exists to move, wall-clock-free so tests can
+        # assert on it deterministically
+        s["class_ttft_ticks"] = {
+            cls: round(total / n, 2)
+            for cls, (total, n) in sorted(self._class_ttft.items())
+        }
+        s["class_counts"] = {
+            cls: n for cls, (_, n) in sorted(self._class_ttft.items())
+        }
         s["aot_warm"] = self.aot_warm
         return s
 
@@ -854,7 +1255,7 @@ class BatchedEngine:
         for per-tick wall-clock latency accounting without forfeiting the
         bounded-steps wedge diagnostics below."""
         for i in range(max_steps):
-            if self._queue.empty() and not self._live:
+            if not self.has_work:
                 return i
             self.step()
             if on_tick is not None:
@@ -865,8 +1266,15 @@ class BatchedEngine:
             f" ({len(r.output)}/{r.params.max_tokens} tok)"
             for s, r in sorted(self._live.items())
         )
+        parked = ", ".join(
+            f"rid={p.req.rid} parked {p.phase}@{p.offset}"
+            f"/{len(p.req.prompt)} ({len(p.req.output)} tok, "
+            f"preempted x{p.req.preempt_count})"
+            for p in self._parked
+        )
         raise RuntimeError(
             f"engine did not drain after {max_steps} steps: "
-            f"{self._queue.qsize()} queued, {len(self._live)} live — "
-            f"{slots or 'no live slots'}"
+            f"{self._queue.qsize()} queued, {len(self._live)} live, "
+            f"{len(self._parked)} parked — "
+            f"{'; '.join(x for x in (slots, parked) if x) or 'no live slots'}"
         )

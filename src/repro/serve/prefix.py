@@ -102,6 +102,31 @@ class PrefixTrie:
         return path
 
     # ------------------------------------------------------------------
+    def probe(self, tokens, *, require_snapshot: bool = False) -> int:
+        """How many TOKENS of ``tokens`` a ``match`` would serve from the
+        trie — WITHOUT pinning: no ``last_used`` touch, no refcount, no
+        state change at all. The scheduler's prefix-aware admission
+        ordering calls this on every queued candidate every tick; if the
+        probe bumped recency, merely *waiting* in the queue would keep a
+        prefix warm and starve eviction. Mirrors ``match`` exactly (same
+        page cap, same snapshot gating) so the predicted skip equals what
+        admission actually gets."""
+        toks = [int(t) for t in tokens]
+        n_max = (len(toks) - 1) // self.pt
+        node, path = self.root, []
+        for i in range(n_max):
+            child = node.children.get(
+                tuple(toks[i * self.pt:(i + 1) * self.pt]))
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        best = len(path) - 1
+        while best >= 0 and require_snapshot and path[best].snapshot is None:
+            best -= 1
+        return (best + 1) * self.pt
+
+    # ------------------------------------------------------------------
     def insert(self, tokens, pages: Optional[List[int]],
                snapshots: Dict[int, Any], *, now: int = 0) -> int:
         """Publish a finished prompt's complete pages.

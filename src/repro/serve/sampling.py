@@ -40,6 +40,12 @@ class SamplingParams:
     # longer depend on WHICH rid the admission order handed it — the
     # property a concurrent streaming front-end needs for reproducible
     # sampling (greedy requests never consume their key either way)
+    priority: Optional[str] = None       # scheduling class ("interactive"
+    # | "batch"; engine.PRIORITY_RANKS is authoritative). None inherits
+    # ServeConfig.default_priority. Scheduling-only: it orders admission
+    # and selects preemption victims but NEVER touches sampling, so a
+    # request's tokens are identical at any priority (the preemption
+    # parity wall depends on that)
 
     def resolve(
         self, default_temperature: float, default_top_k: Optional[int]
@@ -57,7 +63,8 @@ class SamplingParams:
         )
 
     # ---- HTTP handoff -------------------------------------------------
-    _JSON_FIELDS = ("temperature", "top_k", "max_tokens", "eos_id", "seed")
+    _JSON_FIELDS = ("temperature", "top_k", "max_tokens", "eos_id", "seed",
+                    "priority")
 
     @classmethod
     def from_json(cls, body: dict) -> "SamplingParams":
@@ -74,6 +81,8 @@ class SamplingParams:
         for f in ("top_k", "max_tokens", "eos_id", "seed"):
             if f in kw:
                 kw[f] = int(kw[f])
+        if "priority" in kw:
+            kw["priority"] = str(kw["priority"])
         return cls(**kw)
 
     def to_json(self) -> dict:

@@ -17,6 +17,11 @@ Dataflow (DESIGN.md §6.3):
   protocol surface is three routes: ``POST /generate`` (JSON body →
   SSE stream of token events, or one JSON reply with ``stream: false``),
   ``GET /stats`` (engine + server counters), ``GET /healthz``.
+  The body's optional ``"priority"`` field ("interactive" | "batch")
+  rides through ``SamplingParams.from_json`` into the engine's
+  admission queue: under ``ServeConfig.priorities``/``preempt`` an
+  interactive request overtakes queued batch work and may preempt a
+  decoding batch slot (DESIGN.md §6.4); an unknown class is a 400.
 * The ENGINE THREAD owns every jitted call: it drains the admission
   queue and ticks while work exists, sleeping on a condition variable
   otherwise. ``submit`` only enqueues (the engine's own thread-safe
@@ -204,7 +209,9 @@ class EngineServer:
                     eng.abort(self._abort_q.get_nowait())
                 except queue.Empty:      # pragma: no cover
                     break
-            if eng._queue.empty() and not eng._live:
+            # has_work counts parked (preempted) requests too: a parked
+            # stream with an empty queue still needs ticks to resume
+            if not eng.has_work:
                 with self._wake:
                     if self._stop:
                         return

@@ -11,7 +11,13 @@ import dataclasses
 import numpy as np
 import pytest
 
-from benchmarks.loadgen import LoadSpec, TimedRequest, generate, summarize
+from benchmarks.loadgen import (
+    LoadSpec,
+    TimedRequest,
+    generate,
+    summarize,
+    summarize_by_class,
+)
 
 
 class TestDeterminism:
@@ -91,6 +97,66 @@ class TestMixes:
                                  shared_prefix_len=4))
         for r in reqs:
             assert all(0 <= t < 17 for t in r.prompt)
+
+
+class TestPriorityMix:
+    MIX = (("interactive", 0.25), ("batch", 0.75))
+
+    def test_priority_mix_deterministic(self):
+        spec = LoadSpec(n_requests=64, seed=9, priority_mix=self.MIX)
+        assert ([r.priority for r in generate(spec)]
+                == [r.priority for r in generate(spec)])
+
+    def test_class_proportions_track_weights(self):
+        spec = LoadSpec(n_requests=800, seed=4, priority_mix=self.MIX)
+        reqs = generate(spec)
+        n_int = sum(1 for r in reqs if r.priority == "interactive")
+        assert all(r.priority in ("interactive", "batch") for r in reqs)
+        # binomial(800, .25): mean 200, sigma ~ 12.2 -> +-5 sigma band
+        assert 139 < n_int < 261, n_int
+
+    def test_class_draw_does_not_perturb_traffic(self):
+        """Classes come from a dedicated rng stream: adding a priority_mix
+        to an otherwise-equal spec leaves arrivals, prompts, lengths and
+        per-request seeds byte-identical — so FIFO vs priority benchmark
+        variants replay the SAME traffic, classes aside."""
+        base = LoadSpec(n_requests=48, seed=11, shared_prefix_ratio=0.5,
+                        shared_prefix_len=6)
+        mixed = dataclasses.replace(base, priority_mix=self.MIX)
+        for a, b in zip(generate(base), generate(mixed)):
+            assert (a.at_s, a.prompt, a.max_tokens, a.seed, a.prefix_group) \
+                == (b.at_s, b.prompt, b.max_tokens, b.seed, b.prefix_group)
+            assert a.priority is None and b.priority is not None
+
+    def test_payload_priority_field(self):
+        spec = LoadSpec(n_requests=4, seed=0, priority_mix=(("batch", 1.0),))
+        for req in generate(spec):
+            assert req.payload(spec)["priority"] == "batch"
+        plain = LoadSpec(n_requests=1)
+        assert "priority" not in generate(plain)[0].payload(plain)
+
+    def test_priority_mix_validation(self):
+        with pytest.raises(ValueError):
+            LoadSpec(priority_mix=())
+        with pytest.raises(ValueError):
+            LoadSpec(priority_mix=(("interactive", 0.0),))
+
+    def test_summarize_by_class_partitions(self):
+        results = [
+            dict(index=0, status=200, priority="interactive", tokens=[1],
+                 ttft_s=0.010, itls_s=[], end_s=0.5),
+            dict(index=1, status=200, priority="batch", tokens=[2, 3],
+                 ttft_s=0.200, itls_s=[0.01], end_s=1.0),
+            dict(index=2, status=429, priority="batch", tokens=[],
+                 ttft_s=None, itls_s=[], end_s=0.1),
+            dict(index=3, status=200, tokens=[4],    # no class -> default
+                 ttft_s=0.050, itls_s=[], end_s=0.2),
+        ]
+        by = summarize_by_class(results)
+        assert set(by) == {"interactive", "batch", "default"}
+        assert by["interactive"]["completed"] == 1
+        assert by["batch"]["requests"] == 2 and by["batch"]["rejected"] == 1
+        assert by["interactive"]["ttft_p50_ms"] < by["batch"]["ttft_p50_ms"]
 
 
 class TestPayloadAndSpec:

@@ -1,0 +1,313 @@
+"""Preemption parity wall: with preempt-and-resume exercised — forced at
+arbitrary ticks, or naturally by the priority scheduler — emitted tokens
+are byte-identical to the never-preempted engine, greedy and seeded
+stochastic, on all three decode-cache families plus int8 KV.
+
+Why parity holds by construction: parking a slot keeps every byte of its
+progress — pool pages stay retained (K/V never moves; resume rewrites a
+page-table row), the recurrent families snapshot at the EXACT preemption
+position (snapshot/restore is position-exact; the page-boundary rule is
+a trie-sharing concern, not a mechanical one), and the host registers
+(offset, length, last token, PRNG fold count) ride in the parked record
+— while sampling keys on (seed, rid, t) only, never on scheduling. So a
+resumed slot emits exactly the tokens the uninterrupted run would have.
+
+Plus the scheduler-policy walls: prefix-aware queue jumping, the
+starvation (aging) floor, per-request preemption immunity, and
+abort-while-parked resource reclamation.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.engine import BatchedEngine, ServeConfig
+from repro.serve.sampling import SamplingParams
+from test_prefix_cache import FAMILY_ARCHS, build_serve
+
+# short prompts decode-dominate (mid-decode preemption), the long prompt
+# spends >= 4 ticks in prefill at chunk_tokens=8 (mid-prefill preemption)
+SHORT_PROMPTS = [[3, 9, 4, 11, 7, 2, 5], [8, 6, 1, 12, 0], [5, 5, 2, 8]]
+LONG_PROMPT = list(range(36))
+
+
+def make_engine(sm, sp, **cfg_over):
+    base = dict(n_slots=2, max_len=64, chunk_tokens=8, page_tokens=4, seed=0)
+    base.update(cfg_over)
+    return BatchedEngine(sm, sp, ServeConfig(**base))
+
+
+def baseline_run(sm, sp, prompts, *, max_tokens=6, temperature=0.0,
+                 top_k=0, **cfg_over):
+    eng = make_engine(sm, sp, **cfg_over)
+    reqs = [eng.submit(np.asarray(p, np.int32), SamplingParams(
+        max_tokens=max_tokens, temperature=temperature, top_k=top_k))
+        for p in prompts]
+    eng.run_until_drained()
+    return eng, [r.output for r in reqs]
+
+
+def chaos_run(sm, sp, prompts, *, preempt_every, max_tokens=6,
+              temperature=0.0, top_k=0, max_ticks=800, **cfg_over):
+    """Same submission order as ``baseline_run`` but every live slot is
+    force-preempted every ``preempt_every`` ticks. Returns the engine,
+    the outputs, and the set of phases that actually got parked (so
+    callers can assert the chaos hit the states they aimed for)."""
+    eng = make_engine(sm, sp, **cfg_over)
+    reqs = [eng.submit(np.asarray(p, np.int32), SamplingParams(
+        max_tokens=max_tokens, temperature=temperature, top_k=top_k))
+        for p in prompts]
+    parked_phases = set()
+    i = 0
+    while eng.has_work:
+        assert i < max_ticks, "chaos schedule wedged the engine"
+        if i % preempt_every == preempt_every - 1:
+            for slot in list(eng._live):
+                parked_phases.add(eng._phase[slot])
+                assert eng.preempt_slot(slot)
+        eng.step()
+        i += 1
+    return eng, [r.output for r in reqs], parked_phases
+
+
+class TestPreemptParityWall:
+    @pytest.mark.parametrize("arch", FAMILY_ARCHS)
+    def test_forced_mid_decode_parity(self, arch):
+        """Greedy tokens survive preempt/resume at every 3rd tick — the
+        resumed slot continues exactly where the uninterrupted run was."""
+        cfg, sm, sp = build_serve(arch)
+        _, base = baseline_run(sm, sp, SHORT_PROMPTS)
+        eng, out, phases = chaos_run(sm, sp, SHORT_PROMPTS, preempt_every=3)
+        assert out == base, (arch, out, base)
+        assert "decode" in phases
+        st = eng.stats()
+        assert st["preempts"] > 0 and st["resumes"] == st["preempts"]
+        assert st["parked"] == 0
+        # preempted ticks are NOT preempt-free: the stub is real now
+        assert st["preempt_free_ticks"] < st["work_ticks"]
+
+    @pytest.mark.parametrize("arch", FAMILY_ARCHS)
+    def test_seeded_stochastic_parity(self, arch):
+        """Sampling keys on (seed, rid, t) only: a resumed slot replays
+        the exact stochastic stream, not just the greedy argmax."""
+        cfg, sm, sp = build_serve(arch)
+        kw = dict(temperature=1.0, top_k=5, max_tokens=7, seed=3)
+        _, base = baseline_run(sm, sp, SHORT_PROMPTS, **kw)
+        _, out, _ = chaos_run(sm, sp, SHORT_PROMPTS, preempt_every=3, **kw)
+        assert out == base, (arch, out, base)
+
+    @pytest.mark.parametrize("arch", FAMILY_ARCHS)
+    def test_preempt_while_prefilling_parity(self, arch):
+        """Parking mid-prompt (offset strictly inside the prompt) and
+        resuming continues the chunked prefill where it stopped."""
+        cfg, sm, sp = build_serve(arch)
+        prompts = [LONG_PROMPT, SHORT_PROMPTS[0]]
+        _, base = baseline_run(sm, sp, prompts, max_tokens=4)
+        eng, out, phases = chaos_run(sm, sp, prompts, preempt_every=2,
+                                     max_tokens=4)
+        assert out == base, (arch, out, base)
+        assert "prefill" in phases    # the chaos really parked a prefill
+
+    def test_int8_kv_parity(self):
+        """Quantized KV: codes and scales page together, so a parked page
+        run resumes bit-identical int8 state."""
+        cfg, sm, sp = build_serve("granite-8b", kv_dtype="int8")
+        _, base = baseline_run(sm, sp, SHORT_PROMPTS)
+        _, out, _ = chaos_run(sm, sp, SHORT_PROMPTS, preempt_every=3)
+        assert out == base
+
+    def test_preempt_every_tick_still_drains(self):
+        """The degenerate schedule — park everything, every tick — makes
+        progress anyway: resume happens at tick top, decode still emits."""
+        cfg, sm, sp = build_serve("granite-8b")
+        _, base = baseline_run(sm, sp, SHORT_PROMPTS[:2])
+        _, out, _ = chaos_run(sm, sp, SHORT_PROMPTS[:2], preempt_every=1)
+        assert out == base
+
+    def test_natural_priority_preempt_parity_and_overtake(self):
+        """The scheduler's own preemption: a late interactive request on a
+        saturated 1-slot engine preempts the decoding batch request,
+        finishes first, and NO token of either stream changes."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp, n_slots=1, priorities=True, preempt=True)
+        # equal-length batch prompts: equal prefill cost, so rid order
+        # decides and rb takes the slot first (pure FIFO within the tie)
+        rq_prompt = [8, 6, 1, 12, 0, 9, 2]
+        rb = eng.submit(np.asarray(SHORT_PROMPTS[0], np.int32),
+                        SamplingParams(max_tokens=12, priority="batch"))
+        rq = eng.submit(np.asarray(rq_prompt, np.int32),
+                        SamplingParams(max_tokens=4, priority="batch"))
+        for _ in range(4):
+            eng.step()            # rb is decoding; rq waits in the queue
+        ri = eng.submit(np.asarray(SHORT_PROMPTS[2], np.int32),
+                        SamplingParams(max_tokens=3, priority="interactive"))
+        eng.run_until_drained()
+        assert ri.token_steps[0] < rb.token_steps[-1], "no overtake"
+        assert ri.token_steps[0] < rq.token_steps[0], "no queue jump"
+        assert rb.preempt_count >= 1
+        st = eng.stats()
+        assert st["preempts"] >= 1 and st["resumes"] >= 1
+        assert st["preempted_tokens"] > 0
+        # rq's queueing wait lands in the batch column; the interactive
+        # arrival cut straight to the slot
+        assert (st["class_ttft_ticks"]["interactive"]
+                < st["class_ttft_ticks"]["batch"])
+        assert st["class_counts"] == {"batch": 2, "interactive": 1}
+        # parity: same submissions on a plain FIFO engine
+        eng2 = make_engine(sm, sp, n_slots=1)
+        rb2 = eng2.submit(np.asarray(SHORT_PROMPTS[0], np.int32),
+                          SamplingParams(max_tokens=12))
+        rq2 = eng2.submit(np.asarray(rq_prompt, np.int32),
+                          SamplingParams(max_tokens=4))
+        ri2 = eng2.submit(np.asarray(SHORT_PROMPTS[2], np.int32),
+                          SamplingParams(max_tokens=3))
+        eng2.run_until_drained()
+        assert rb.output == rb2.output and ri.output == ri2.output
+        assert rq.output == rq2.output
+
+    @pytest.mark.parametrize("arch", FAMILY_ARCHS)
+    def test_chaos_leaves_no_pool_state(self, arch):
+        """After a chaos drain: nothing parked, refcount partition holds,
+        zero pages in use (no trie to pin any)."""
+        cfg, sm, sp = build_serve(arch)
+        eng, _, _ = chaos_run(sm, sp, SHORT_PROMPTS, preempt_every=2)
+        assert not eng._parked
+        if eng.pool is not None:
+            eng.pool.check()
+            assert eng.pool.used_pages == 0
+
+
+class TestSchedulerPolicy:
+    def test_prefix_aware_admission_jump(self):
+        """A queued request whose prompt is largely trie-cached overtakes
+        an OLDER uncached request of the same class — proportional cost
+        ordering, driven by the non-pinning probe."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp, n_slots=1, prefix_cache=True,
+                          priorities=True)
+        warm = np.asarray(list(range(24)), np.int32)
+        eng.submit(warm, SamplingParams(max_tokens=2))
+        eng.run_until_drained()      # publishes warm's pages to the trie
+        eng.submit(np.asarray(SHORT_PROMPTS[1], np.int32),
+                   SamplingParams(max_tokens=2))
+        eng.step()                   # filler occupies the only slot
+        rng = np.random.default_rng(1)
+        cold = eng.submit(rng.integers(100, 200, size=24).astype(np.int32),
+                          SamplingParams(max_tokens=2))
+        cached = eng.submit(warm, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        assert cached.admit_step < cold.admit_step
+        assert cached.prefix_hit_tokens > 0
+
+    def test_probe_does_not_pin(self):
+        """The admission-ordering probe must not touch trie recency — a
+        request merely WAITING in the queue must not keep its prefix warm
+        (that would starve eviction). match() with a later clock does."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp, prefix_cache=True)
+        warm = np.asarray(list(range(24)), np.int32)
+        eng.submit(warm, SamplingParams(max_tokens=2))
+        eng.run_until_drained()
+        trie = eng.trie
+        assert len(trie) > 0
+        before = {id(n): n.last_used for n in trie._nodes}
+        depth = trie.probe(warm, require_snapshot=eng._stateful)
+        assert depth > 0
+        assert {id(n): n.last_used for n in trie._nodes} == before
+        # probe predicts exactly what match serves
+        path = trie.match(warm, require_snapshot=eng._stateful, now=999)
+        assert depth == len(path) * trie.pt
+        assert any(n.last_used == 999 for n in trie._nodes)
+
+    def test_starvation_floor(self):
+        """Priority mode ages: after ``starvation_limit`` consecutive
+        overtakes of the oldest waiter, the oldest waiter is admitted —
+        the batch class cannot starve under an interactive flood."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp, n_slots=1, priorities=True,
+                          starvation_limit=2)
+        blocker = eng.submit(np.asarray(SHORT_PROMPTS[0], np.int32),
+                             SamplingParams(max_tokens=2,
+                                            priority="interactive"))
+        eng.step()                   # blocker holds the only slot
+        batch = eng.submit(np.asarray(SHORT_PROMPTS[1], np.int32),
+                           SamplingParams(max_tokens=2, priority="batch"))
+        flood = [eng.submit(np.asarray(SHORT_PROMPTS[2], np.int32),
+                            SamplingParams(max_tokens=2,
+                                           priority="interactive"))
+                 for _ in range(5)]
+        eng.run_until_drained()
+        del blocker
+        overtook = sum(1 for r in flood if r.admit_step < batch.admit_step)
+        assert overtook == 2, (overtook,
+                               [r.admit_step for r in flood],
+                               batch.admit_step)
+
+    def test_preempt_immunity_cap(self):
+        """A request preempted ``max_preempts`` times becomes immune: the
+        next interactive arrival waits instead of thrashing it again."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp, n_slots=1, priorities=True, preempt=True,
+                          max_preempts=1)
+        rb = eng.submit(np.asarray(SHORT_PROMPTS[0], np.int32),
+                        SamplingParams(max_tokens=16, priority="batch"))
+        for _ in range(3):
+            eng.step()
+        eng.submit(np.asarray(SHORT_PROMPTS[2], np.int32),
+                   SamplingParams(max_tokens=2, priority="interactive"))
+        eng.step()                   # preempt pass parks rb, admits ri1
+        assert rb.preempt_count == 1 and eng._parked
+        while eng._parked:           # run the parked batch back in
+            eng.step()
+        # second interactive: batch is at its cap -> no second preemption
+        ri2 = eng.submit(np.asarray(SHORT_PROMPTS[2], np.int32),
+                         SamplingParams(max_tokens=2,
+                                        priority="interactive"))
+        eng.run_until_drained()
+        assert rb.preempt_count == 1
+        assert eng.stats()["preempts"] == 1
+        assert ri2.done and ri2.finish_reason in ("length", "eos")
+
+    def test_abort_parked_request_releases_everything(self):
+        """Aborting a PARKED request frees its retained pages, fires
+        on_finish with "aborted", and leaves the resume queue empty."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp)
+        finished = []
+        eng.on_finish = finished.append
+        ra = eng.submit(np.asarray(SHORT_PROMPTS[0], np.int32),
+                        SamplingParams(max_tokens=10))
+        rb = eng.submit(np.asarray(SHORT_PROMPTS[1], np.int32),
+                        SamplingParams(max_tokens=4))
+        for _ in range(3):
+            eng.step()
+        slot = next(s for s, r in eng._live.items() if r is ra)
+        assert eng.preempt_slot(slot)
+        held = eng.pool.used_pages
+        assert held > 0
+        assert eng.abort(ra)
+        assert ra.finish_reason == "aborted" and ra in finished
+        assert not eng._parked
+        assert eng.pool.used_pages < held
+        eng.run_until_drained()
+        assert rb.done and rb.finish_reason != "aborted"
+        eng.pool.check()
+        assert eng.pool.used_pages == 0
+
+    def test_fifo_mode_unchanged_by_classes(self):
+        """priorities=False stays strict FIFO even when requests carry
+        classes — the flag, not the field, changes scheduling."""
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp, n_slots=1)
+        first = eng.submit(np.asarray(SHORT_PROMPTS[0], np.int32),
+                           SamplingParams(max_tokens=2, priority="batch"))
+        second = eng.submit(np.asarray(SHORT_PROMPTS[1], np.int32),
+                            SamplingParams(max_tokens=2,
+                                           priority="interactive"))
+        eng.run_until_drained()
+        assert first.admit_step < second.admit_step
+
+    def test_submit_rejects_unknown_class(self):
+        cfg, sm, sp = build_serve("granite-8b")
+        eng = make_engine(sm, sp)
+        with pytest.raises(ValueError, match="priority class"):
+            eng.submit(np.asarray([1, 2, 3], np.int32),
+                       SamplingParams(priority="urgent"))

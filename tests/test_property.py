@@ -589,6 +589,77 @@ class TestEnginePageLeaks:
             assert eng.pool.used_pages == 0
 
 
+class TestSchedulerFuzz:
+    """Random priority/preempt/resume/abort schedules against the live
+    engine, cross-checked invariant-by-invariant: the resume queue never
+    references a live slot (or a finished request), the pool's refcount
+    partition survives every op, and a full drain leaves no parked
+    entries, no leaked pages, and no dangling snapshot refs. Every
+    submitted request finishing inside the bounded drain IS the
+    no-starvation check — the batch class cannot be starved by the
+    interactive flood the schedule throws at it."""
+
+    ops_strategy = st.lists(
+        st.tuples(st.integers(0, 3),            # submit/step/preempt/abort
+                  st.integers(0, 10_000), st.integers(0, 10_000)),
+        min_size=1, max_size=30)
+
+    @settings(max_examples=8, deadline=None)
+    @given(ops=ops_strategy, prefix_cache=st.booleans(),
+           preempt=st.booleans())
+    def test_scheduler_invariants_under_fuzz(self, ops, prefix_cache,
+                                             preempt):
+        from repro.serve.engine import BatchedEngine, ServeConfig
+        from repro.serve.sampling import SamplingParams
+
+        cfg, sm, sp = _leak_test_engine_build()
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=2, max_len=32, chunk_tokens=8, page_tokens=4,
+            prefix_cache=prefix_cache, priorities=True, preempt=preempt,
+            starvation_limit=2, max_preempts=2))
+        classes = ("interactive", "batch")
+        inflight = []
+
+        def check():
+            live = {id(r) for r in eng._live.values()}
+            parked = [p.req for p in eng._parked]
+            assert live.isdisjoint(id(r) for r in parked), \
+                "resume queue holds a live slot"
+            assert all(not r.done for r in parked), \
+                "resume queue holds a finished request"
+            assert len({p.req.rid for p in eng._parked}) == len(parked)
+            eng.pool.check()
+
+        for kind, a, b in ops:
+            if kind == 0:
+                prompt = [(a * 7 + i) % 23 for i in range(a % 14 + 1)]
+                inflight.append(eng.submit(
+                    np.asarray(prompt, np.int32),
+                    SamplingParams(max_tokens=b % 4 + 1,
+                                   priority=classes[a % 2])))
+            elif kind == 1:
+                eng.step()
+            elif kind == 2 and eng._live:
+                assert eng.preempt_slot(sorted(eng._live)[a % len(eng._live)])
+            elif kind == 3 and inflight:
+                eng.abort(inflight[a % len(inflight)])  # False if done: fine
+            check()
+        ticks = 0
+        while eng.has_work:
+            assert ticks < 500, "drain wedged: starvation or lost request"
+            eng.step()
+            check()
+            ticks += 1
+        assert not eng._parked
+        assert all(r.done for r in inflight)
+        held = len(eng.trie.held_pages()) if eng.trie is not None else 0
+        assert eng.pool.used_pages == held
+        if eng.trie is not None:
+            eng.trie.clear()
+            eng.pool.check()
+            assert eng.pool.used_pages == 0
+
+
 class TestRowsConstruction:
     @given(aligned_shapes, st.integers(0, 10_000),
            st.sampled_from(["layer", "tile"]),

@@ -357,6 +357,71 @@ class TestDrainDiagnostics:
             eng.run_until_drained(max_steps=2)
 
 
+class TestSchedulerStats:
+    """Shape + semantics of the scheduler counters in ``stats()`` — the
+    HTTP /stats surface the CLI and benchmarks print. ``preempt_free_ticks``
+    used to be a stub that equalled ``work_ticks`` unconditionally; it is
+    real now and these tests keep it that way."""
+
+    def _engine(self, **cfg_over):
+        cfg, tm, sm = build_pair()
+        tp = mod.init_params(tm.specs(), KEY)
+        sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+        base = dict(n_slots=2, max_len=64, chunk_tokens=8, page_tokens=4)
+        base.update(cfg_over)
+        return BatchedEngine(sm, sp, ServeConfig(**base))
+
+    def test_stats_shape_includes_scheduler_counters(self):
+        eng = self._engine()
+        eng.submit([1, 2, 3], SamplingParams(max_tokens=3))
+        eng.run_until_drained()
+        s = eng.stats()
+        for key in ("preempts", "resumes", "preempted_tokens", "parked",
+                    "preempt_free_ticks", "preempt_free_tick_rate",
+                    "class_ttft_ticks", "class_counts"):
+            assert key in s, key
+        assert s["preempts"] == 0 and s["resumes"] == 0
+        assert s["preempted_tokens"] == 0 and s["parked"] == 0
+        # an undisturbed run: every work tick is preempt-free
+        assert s["work_ticks"] > 0
+        assert s["preempt_free_ticks"] == s["work_ticks"]
+        assert s["preempt_free_tick_rate"] == 1.0
+        assert s["class_counts"] == {"batch": 1}
+        assert s["class_ttft_ticks"].keys() == {"batch"}
+
+    def test_preempt_free_ticks_counts_real_preempts(self):
+        """Forced preemption must show up: preempted ticks are not
+        preempt-free, the preempt/resume counters move, and the parked
+        token cost is accounted."""
+        eng = self._engine()
+        eng.submit([1, 2, 3], SamplingParams(max_tokens=6))
+        eng.submit([4, 5], SamplingParams(max_tokens=6))
+        tick = 0
+        while eng.has_work:
+            if tick % 3 == 2:
+                for slot in list(eng._live):
+                    eng.preempt_slot(slot)
+            eng.step()
+            tick += 1
+        s = eng.stats()
+        assert s["preempts"] > 0 and s["resumes"] == s["preempts"]
+        assert s["preempted_tokens"] > 0
+        assert s["preempt_free_ticks"] < s["work_ticks"]
+        assert 0.0 <= s["preempt_free_tick_rate"] < 1.0
+        assert s["parked"] == 0
+
+    def test_per_class_ttft_buckets_by_request_class(self):
+        eng = self._engine(priorities=True)
+        eng.submit([1, 2, 3], SamplingParams(max_tokens=2,
+                                             priority="interactive"))
+        eng.submit([4, 5], SamplingParams(max_tokens=2, priority="batch"))
+        eng.run_until_drained()
+        s = eng.stats()
+        assert s["class_counts"] == {"batch": 1, "interactive": 1}
+        assert set(s["class_ttft_ticks"]) == {"batch", "interactive"}
+        assert all(v >= 0 for v in s["class_ttft_ticks"].values())
+
+
 class TestServeConfigValidation:
     def test_oversized_chunk_rejected_at_construction(self):
         """A chunk wider than the cache capacity could scatter past the
@@ -399,6 +464,25 @@ class TestServeConfigValidation:
     def test_prefix_nodes_floor(self):
         with pytest.raises(ValueError, match="prefix_nodes"):
             ServeConfig(prefix_nodes=0)
+
+    def test_preempt_requires_priorities(self):
+        """FIFO admission would hand a preempted slot straight back to the
+        class that was just evicted — rejected at construction."""
+        with pytest.raises(ValueError, match="requires priorities"):
+            ServeConfig(preempt=True)
+        ServeConfig(preempt=True, priorities=True)  # ok
+
+    def test_unknown_default_priority_rejected(self):
+        with pytest.raises(ValueError, match="default_priority"):
+            ServeConfig(default_priority="urgent")
+
+    def test_starvation_limit_floor(self):
+        with pytest.raises(ValueError, match="starvation_limit"):
+            ServeConfig(priorities=True, starvation_limit=0)
+
+    def test_negative_max_preempts_rejected(self):
+        with pytest.raises(ValueError, match="max_preempts"):
+            ServeConfig(priorities=True, preempt=True, max_preempts=-1)
 
 
 class TestInt8KV:

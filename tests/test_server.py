@@ -204,6 +204,53 @@ class TestBackpressure:
         assert st2 == 200 and ev2[-1].get("done")
         assert stats["rejected"] >= 1 and stats["http_rejects"] >= 1
 
+    def test_interactive_overtakes_batch_flood_on_the_wire(self):
+        """End-to-end pressure scheduling over real HTTP/SSE: a 1-slot
+        engine is saturated by a long batch stream; an interactive
+        request arriving mid-decode preempts it, finishes first, and
+        neither stream's tokens differ from the FIFO reference engine —
+        the scheduler moves WHEN tokens arrive, never WHICH tokens."""
+        b_prompt, b_max = [1, 2, 3], 48
+        i_prompt, i_max = [9, 8, 7], 4
+
+        async def go():
+            eng = make_engine(n_slots=1, max_len=160, priorities=True,
+                              preempt=True)
+            async with serving(engine=eng) as (srv, port, _):
+                tb = asyncio.ensure_future(sse_generate(HOST, port, {
+                    "prompt": b_prompt, "max_tokens": b_max,
+                    "priority": "batch"}))
+                await wait_stat(port, lambda s: s["live_slots"] == 1
+                                and s["tokens_out"] >= 2)
+                ti = asyncio.ensure_future(sse_generate(HOST, port, {
+                    "prompt": i_prompt, "max_tokens": i_max,
+                    "priority": "interactive"}))
+                (stb, evb, tmb), (sti, evi, tmi) = await tb, await ti
+                bad = await request_json(HOST, port, "POST", "/generate", {
+                    "prompt": [1], "max_tokens": 2, "stream": False,
+                    "priority": "urgent"})
+                stats = (await request_json(HOST, port, "GET", "/stats"))[1]
+                return stb, evb, tmb, sti, evi, tmi, bad, stats
+
+        stb, evb, tmb, sti, evi, tmi, bad, stats = asyncio.run(go())
+        assert stb == sti == 200
+        assert evb[-1].get("done") and evi[-1].get("done")
+        # the interactive stream CLOSED while the batch flood was still
+        # decoding — that is the overtake, measured at the client
+        assert tmi[-1] < tmb[-1], (tmi[-1], tmb[-1])
+        assert stats["preempts"] >= 1 and stats["resumes"] >= 1
+        assert stats["parked"] == 0 and stats["live_slots"] == 0
+        assert set(stats["class_counts"]) == {"batch", "interactive"}
+        # byte parity with the FIFO reference engine
+        ref_b, ref_i = reference_outputs(
+            [b_prompt, i_prompt],
+            [SamplingParams(max_tokens=b_max),
+             SamplingParams(max_tokens=i_max)])
+        assert [e["token"] for e in evb if "token" in e] == ref_b
+        assert [e["token"] for e in evi if "token" in e] == ref_i
+        # unknown class is a typed 400, not a wedged engine
+        assert bad[0] == 400 and bad[1]["error"] == "bad_prompt"
+
     def test_slow_consumer_cannot_stall_other_streams(self):
         """A client that stops reading its SSE socket is detected (drain
         timeout against test-scale socket buffers) and disconnected;
