@@ -27,6 +27,7 @@ BENCHES = [
     "table6_mcu",
     "table7_inference_memory",
     "table7_load_serving",
+    "table7_model_families",
     "fig6_layer_size",
     "fig7_hparams",
 ]

@@ -10,6 +10,15 @@ stop):
     python -m repro.launch.serve --arch granite-8b --reduced \\
         --serve --port 8000
 
+The driver dispatches on the config's model family (see ``--help`` for
+the matrix): decoder-only families (dense / moe / ssm / hybrid / vlm)
+drive token prompts; the encdec family additionally feeds each request a
+synthetic source-frame clip and exercises the ENCODE phase + encoder
+reuse (``--enc-sources`` distinct clips cycled over the batch):
+
+    python -m repro.launch.serve --arch seamless-m4t-large-v2 --reduced \\
+        --requests 6 --enc-tokens 16 --enc-sources 2
+
 ``--aot`` (default on in ``--serve`` mode) AOT-compiles the decode and
 extend tick executables at startup so the FIRST request pays no
 trace/compile inside its TTFT; ``--no-aot`` measures the difference.
@@ -55,6 +64,7 @@ from repro.nn import module as mod
 from repro.nn.context import SERVE, TRAIN, ModelContext
 from repro.serve.engine import BatchedEngine, ServeConfig
 from repro.serve.sampling import SamplingParams
+from repro.serve.servable import SERVABLE_FAMILIES, UnservableModelError
 from repro.serve.weights import (
     export_serving_params,
     per_device_tile_bytes,
@@ -80,7 +90,13 @@ def latency_report(reqs, tick_ends):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    family_matrix = "servable model families:\n" + "\n".join(
+        f"  {k:<8}{v}" for k, v in SERVABLE_FAMILIES.items()
+    )
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=family_matrix,
+    )
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None,
@@ -106,6 +122,13 @@ def main(argv=None):
                     help="prepend this many common tokens to every prompt "
                          "(a synthetic system prompt — makes the prefix "
                          "cache line non-trivial)")
+    ap.add_argument("--enc-tokens", type=int, default=None,
+                    help="encoder capacity in source frames (encdec "
+                         "family only; default --max-len)")
+    ap.add_argument("--enc-sources", type=int, default=2,
+                    help="distinct synthetic source clips cycled over "
+                         "the batch (encdec family; >1 exercises "
+                         "encoder-output reuse)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=None,
                     help="engine-default top-k (per-request params override)")
@@ -151,8 +174,20 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if cfg.family == "encdec":
-        raise SystemExit("serve CLI drives decoder LMs; encdec uses its own driver")
+    # family dispatch: every SERVABLE_FAMILIES key rides the same
+    # BatchedEngine; anything else fails with the menu attached
+    family = getattr(cfg, "family", "dense")
+    if family not in SERVABLE_FAMILIES:
+        raise UnservableModelError(f"config family {family!r}")
+    encdec = family == "encdec"
+    if encdec and args.serve:
+        raise SystemExit(
+            "--serve (HTTP front-end) carries token prompts only; the "
+            "encdec family needs per-request source frames — drive it "
+            "with the synthetic batch (drop --serve)"
+        )
+    if encdec and args.enc_sources < 1:
+        raise SystemExit(f"--enc-sources must be >= 1: {args.enc_sources}")
 
     t_model = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN))
     s_model = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
@@ -181,6 +216,7 @@ def main(argv=None):
                     page_tokens=args.page_tokens,
                     pool_pages=args.pool_pages,
                     prefix_cache=args.prefix_cache,
+                    enc_tokens=(args.enc_tokens if encdec else None),
                     max_queued=args.max_queued if args.serve else None,
                     priorities=args.priorities or args.preempt,
                     preempt=args.preempt,
@@ -217,6 +253,17 @@ def main(argv=None):
               f"({total_tile/max(worst, 1):.1f}x sharding)")
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab, size=args.shared_prefix)
+    sources = None
+    if encdec:
+        # a small set of distinct source clips cycled over the batch:
+        # every repeat admission past the first is an encoder-reuse hit
+        cap = eng.enc_tokens
+        sources = [
+            rng.standard_normal(
+                (int(rng.integers(max(1, cap // 2), cap + 1)), cfg.d_model)
+            ).astype(np.float32)
+            for _ in range(args.enc_sources)
+        ]
     reqs = [
         eng.submit(
             np.concatenate([
@@ -227,7 +274,8 @@ def main(argv=None):
                 # under --priorities make the synthetic batch exercise the
                 # scheduler: every 4th request is interactive
                 priority=("interactive" if eng.cfg.priorities and i % 4 == 3
-                          else None)))
+                          else None)),
+            frames=(sources[i % len(sources)] if encdec else None))
         for i in range(args.requests)
     ]
     t0 = time.time()
@@ -251,7 +299,18 @@ def main(argv=None):
                      f"max {1e3 * np.max(itls):.1f}ms")
         print(f"latency (chunk={eng.cfg.chunk_tokens}): {line}")
     st = eng.stats()
-    if eng.cfg.prefix_cache:
+    if encdec:
+        fam = st["cache_families"]
+        pools = ", ".join(
+            f"{name} {f['in_use']}/{f['pages']} pages "
+            f"({100 * f['utilization']:.0f}%)"
+            for name, f in fam.items()
+        )
+        print(f"encode phase: {st['encode_ticks']} encode ticks, "
+              f"{st['enc_cache_hits']}/{st['admitted']} admissions reused "
+              f"a cached encoder output "
+              f"({st['enc_cache_entries']} cached sources); {pools}")
+    elif eng.cfg.prefix_cache:
         line = (f"hit rate {100 * st['hit_rate']:.0f}% "
                 f"({st['prefix_hits']}/{st['admitted']} admissions), "
                 f"{st['prefill_tokens_skipped']}/{st['prompt_tokens']} "

@@ -49,8 +49,14 @@ class EncBlock:
         return {"norm1": self.norm1.specs(), "attn": self.attn.specs(),
                 "norm2": self.norm2.specs(), "ffn": self.ffn.specs()}
 
-    def __call__(self, params, x):
-        x = x + self.attn(params["attn"], self.norm1(params["norm1"], x))
+    def __call__(self, params, x, valid=None):
+        # ``valid`` (B, S) masks padded frame columns in the serving path:
+        # padded KEYS are excluded from every row's softmax (NEG_INF ->
+        # exact-0 weight), so valid rows match an unpadded encode
+        # byte-for-byte; padded QUERY rows produce garbage that position-
+        # wise downstream ops never mix into valid rows.
+        x = x + self.attn(params["attn"], self.norm1(params["norm1"], x),
+                          kv_valid=valid)
         x = x + self.ffn(params["ffn"], self.norm2(params["norm2"], x))
         return logical_constraint(x, "act_batch", "act_res_seq", "act_embed")
 
@@ -283,7 +289,34 @@ class EncDecModel:
         logits = self.head(params["head"], h)
         return logits[:, 0], caches, jnp.full((b,), s, jnp.int32)
 
-    def decode_step(self, params, tokens, caches, lengths):
+    def decode_step(self, params, tokens, caches, lengths, page_table=None,
+                    active=None, cross_page_table=None, enc_lens=None):
+        """One-token decode. ``page_table is None`` is the DENSE reference
+        path (stacked per-slot rows from :meth:`prefill`) — the parity
+        wall the paged engine path below is measured against, byte for
+        byte. With ``page_table`` both cache families live in pool form:
+        self-attention K/V scatter/gather through ``page_table`` exactly
+        like DecoderLM, and cross-attention K/V are READ-ONLY pool pages
+        written once by :meth:`write_cross`, viewed through
+        ``cross_page_table`` and masked by ``enc_lens``."""
+        if page_table is None:
+            return self._decode_step_dense(params, tokens, caches, lengths)
+        x = self.embed(params["embed"], tokens)
+        x, caches = self._walk_dec_paged(
+            params, x, caches,
+            lambda blk, pl, h, kl, vl, xk, xv: self._paged_layer(
+                blk, pl, h, kl, vl, xk, xv, cross_page_table, enc_lens,
+                lambda a: blk.self_attn.decode_step(
+                    pl["self_attn"], a, kl, vl, lengths,
+                    page_table=page_table, active=active,
+                ),
+            ),
+        )
+        h = self.dec_norm(params["dec_norm"], x)
+        logits = self.head(params["head"], h)
+        return logits[:, 0], caches, lengths + 1
+
+    def _decode_step_dense(self, params, tokens, caches, lengths):
         x = self.embed(params["embed"], tokens)
 
         def body(h, xs):
@@ -305,3 +338,196 @@ class EncDecModel:
         h = self.dec_norm(params["dec_norm"], x)
         logits = self.head(params["head"], h)
         return logits[:, 0], caches, lengths + 1
+
+    # ------------------------------------------------------------------
+    # ServableModel protocol (DESIGN.md §6.5): paged serving under the
+    # shared BatchedEngine. The dense prefill/decode_step above stay
+    # untouched as the parity reference.
+    # ------------------------------------------------------------------
+    has_full_attn = True        # decoder self-attention pages its K/V
+    has_recurrent_state = False
+    has_cross_attn = True       # engine stands up ENCODE phase + x-pool
+
+    def cache_families(self):
+        from repro.serve.servable import CacheFamily
+
+        return (
+            CacheFamily("self_attn", paged=True),
+            CacheFamily("cross_attn", paged=True, read_only=True),
+        )
+
+    def init_caches(self, batch, max_len, dtype=jnp.bfloat16,
+                    page_tokens=None, n_pages=None, cross_pages=None):
+        """Pool-form decode caches: BOTH families are pages, addressed
+        through separate tables — there is no dense ``(n_slots, T)`` row
+        anywhere (the acceptance criterion for cross-attention K/V)."""
+        if page_tokens is None:
+            raise ValueError(
+                "EncDecModel serves paged-only: pass page_tokens/n_pages/"
+                "cross_pages (the dense reference path builds its caches "
+                "via prefill, not init_caches)")
+        L = self.cfg.dec_layers
+        kv, hd = self.cfg.n_kv, self.dec_block.self_attn.hd
+        z = lambda p: jnp.zeros((L, p, page_tokens, kv, hd), dtype)
+        return {
+            "self": {"k": z(n_pages), "v": z(n_pages)},
+            "cross": {"k": z(cross_pages), "v": z(cross_pages)},
+        }
+
+    def encode_serve(self, params, frames, valid):
+        """Fixed-shape encoder pass for the engine's ENCODE phase:
+        ``frames`` (1, enc_tokens, d) zero-padded, ``valid`` (1,
+        enc_tokens) marking real frames. Rows < the request's frame count
+        are byte-identical to the unpadded :meth:`encode` (masked keys
+        underflow to exact-0 softmax weight; everything else is
+        position-wise)."""
+        x = self.frame_proj(params["frame_proj"], frames)
+        x = logical_constraint(x, "act_batch", "act_seq", "act_embed")
+        if self.cfg.force_unroll:
+            for j in range(self.cfg.enc_layers):
+                pl = jax.tree.map(lambda v: v[j], params["enc"])
+                x = self.enc_block(pl, x, valid=valid)
+            return self.enc_norm(params["enc_norm"], x)
+
+        def body(h, pl):
+            return self.enc_block(pl, h, valid=valid), None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return self.enc_norm(params["enc_norm"], x)
+
+    def write_cross(self, params, memory, caches, xptab, positions, valid):
+        """Project encoder ``memory`` (1, enc_tokens, d) to per-decoder-
+        layer cross K/V and scatter into the cross pool through the
+        admitted slot's page-table row ``xptab`` (1, x_npp). Runs ONCE per
+        request at the end of its ENCODE phase; nothing writes these pages
+        again until release."""
+        from repro.nn.attention import scatter_pages
+
+        blk = self.dec_block
+
+        def per_layer(pl, ck_pool, cv_pool):
+            k, v = blk.cross_attn.cross_kv(pl["cross_attn"], memory)
+            ck_pool = scatter_pages(ck_pool, xptab, positions, k, valid)
+            cv_pool = scatter_pages(cv_pool, xptab, positions, v, valid)
+            return ck_pool, cv_pool
+
+        xs = (params["dec"], caches["cross"]["k"], caches["cross"]["v"])
+        if self.cfg.force_unroll:
+            cks, cvs = [], []
+            for j in range(self.cfg.dec_layers):
+                a, b, c = (jax.tree.map(lambda v: v[j], t) for t in xs)
+                ck, cv = per_layer(a, b, c)
+                cks.append(ck)
+                cvs.append(cv)
+            ck, cv = jnp.stack(cks), jnp.stack(cvs)
+        else:
+            def body(_, layer_xs):
+                return None, per_layer(*layer_xs)
+
+            _, (ck, cv) = jax.lax.scan(body, None, xs)
+        return {**caches, "cross": {"k": ck, "v": cv}}
+
+    def _paged_layer(self, blk, pl, h, kl, vl, xk_l, xv_l, xptab, enc_lens,
+                     self_step):
+        """One decoder layer against pool caches: self-attn (via
+        ``self_step``, which closes over decode vs extend), read-only
+        cross-attend, FFN — same residual order as DecBlock.__call__."""
+        a = blk.norm1(pl["norm1"], h)
+        a, kl, vl = self_step(a)
+        h = h + a
+        a = blk.norm2(pl["norm2"], h)
+        h = h + blk.cross_attn.cross_attend(
+            pl["cross_attn"], a, xk_l, xv_l, enc_lens, page_table=xptab,
+        )
+        h = h + blk.ffn(pl["ffn"], blk.norm3(pl["norm3"], h))
+        return h, kl, vl
+
+    def _walk_dec_paged(self, params, x, caches, step_fn):
+        """Decoder layer loop for the paged tick: the stacked SELF pool
+        rides in the scan CARRY with dynamic_update at the live layer (one
+        buffer, no xs->ys double-buffering — see lm.py._walk_segments);
+        the read-only CROSS pool rides as scan xs."""
+        ks, vs = caches["self"]["k"], caches["self"]["v"]
+        xks, xvs = caches["cross"]["k"], caches["cross"]["v"]
+
+        def run_layer(pl, h, kl, vl, xk_l, xv_l):
+            return step_fn(self.dec_block, pl, h, kl, vl, xk_l, xv_l)
+
+        if self.cfg.force_unroll:
+            nk, nv = [], []
+            for j in range(self.cfg.dec_layers):
+                pick = lambda v: v[j]
+                x, kl, vl = run_layer(
+                    jax.tree.map(pick, params["dec"]), x,
+                    ks[j], vs[j], xks[j], xvs[j],
+                )
+                nk.append(kl)
+                nv.append(vl)
+            ks, vs = jnp.stack(nk), jnp.stack(nv)
+        else:
+            def body(carry, layer_xs):
+                h, kfull, vfull, idx = carry
+                pl, xk_l, xv_l = layer_xs
+                kl = jax.lax.dynamic_index_in_dim(kfull, idx, 0,
+                                                  keepdims=False)
+                vl = jax.lax.dynamic_index_in_dim(vfull, idx, 0,
+                                                  keepdims=False)
+                # barrier: stop LICM materializing converted copies of the
+                # whole stacked pool (see lm.py._walk_segments)
+                kl, vl = jax.lax.optimization_barrier((kl, vl))
+                h, kl, vl = run_layer(pl, h, kl, vl, xk_l, xv_l)
+                kfull = jax.lax.dynamic_update_index_in_dim(
+                    kfull, kl.astype(kfull.dtype), idx, 0)
+                vfull = jax.lax.dynamic_update_index_in_dim(
+                    vfull, vl.astype(vfull.dtype), idx, 0)
+                return (h, kfull, vfull, idx + 1), None
+
+            (x, ks, vs, _), _ = jax.lax.scan(
+                body, (x, ks, vs, jnp.int32(0)),
+                (params["dec"], xks, xvs),
+            )
+        return x, {"self": {"k": ks, "v": vs},
+                   "cross": {"k": xks, "v": xvs}}
+
+    def extend(self, params, tokens, caches, lengths, n_new,
+               page_table=None, cross_page_table=None, enc_lens=None):
+        """Chunked-prefill step over the paged caches (same column
+        semantics as DecoderLM.extend: padding columns never write and a
+        slot's logits come from its last valid column)."""
+        if page_table is None:
+            raise ValueError("EncDecModel.extend is paged-only")
+        b, c = tokens.shape
+        positions = lengths[:, None] + jnp.arange(c)[None, :]
+        valid = jnp.arange(c)[None, :] < n_new[:, None]
+        x = self.embed(params["embed"], tokens)
+        x, caches = self._walk_dec_paged(
+            params, x, caches,
+            lambda blk, pl, h, kl, vl, xk, xv: self._paged_layer(
+                blk, pl, h, kl, vl, xk, xv, cross_page_table, enc_lens,
+                lambda a: blk.self_attn.extend(
+                    pl["self_attn"], a, kl, vl, positions, valid,
+                    page_table=page_table,
+                ),
+            ),
+        )
+        idx = jnp.clip(n_new - 1, 0, c - 1)
+        h_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        h = self.dec_norm(params["dec_norm"], h_last)
+        logits = self.head(params["head"], h)
+        return logits[:, 0], caches, lengths + n_new
+
+    # ---- per-slot cache walkers: everything is paged, so these are ----
+    # ---- passthroughs (the page tables carry all per-slot state)  ----
+    def merge_caches(self, old, new, keep, paged=False):
+        # pool writes were already confined in-kernel (active / valid
+        # masks drop inactive slots' scatters); nothing to select per-slot
+        return new
+
+    def reset_slot_caches(self, caches, slot, paged=False):
+        return caches           # stale pool rows are position-masked
+
+    def snapshot_slot_caches(self, caches, slot):
+        return None             # no non-paged family to pin
+
+    def restore_slot_caches(self, caches, slot, snaps):
+        return caches

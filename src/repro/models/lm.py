@@ -599,6 +599,20 @@ class DecoderLM:
         windowed rings) -> prefix reuse needs boundary snapshots."""
         return any(not _paged_attn(b) for b in self._leaf_blocks())
 
+    # decoder-only: no encoder memory, no read-only cross-attention pool
+    has_cross_attn = False
+
+    def cache_families(self):
+        """ServableModel cache-family descriptors (DESIGN.md §6.5)."""
+        from repro.serve.servable import CacheFamily
+
+        fams = []
+        if self.has_full_attn:
+            fams.append(CacheFamily("self_attn", paged=True))
+        if self.has_recurrent_state:
+            fams.append(CacheFamily("recurrent", paged=False))
+        return tuple(fams)
+
     def reset_slot_caches(self, caches, slot, paged: bool = False):
         """Zero one slot's rows across the per-slot cache families:
         recurrent/SSM state MUST restart from zeros (extend continues from
@@ -906,27 +920,28 @@ class _PatternBlock:
             for i, b in enumerate(self.blocks)
         }
 
-    def prefill(self, params, x, *, positions=None):
-        caches = {}
+    def _forward(self, method, params, x, cache, **kw):
+        """THE single serving call site through the pattern: thread the
+        residual stream through each sub-block's ``method`` and collect
+        the per-sub-block cache subtrees under the ``b{i}`` keys every
+        cache walker recurses on (``_map_block_cache``). ``cache=None``
+        (prefill) means the sub-block builds its cache instead of
+        consuming one."""
+        out = {}
         for i, b in enumerate(self.blocks):
-            x, caches[f"b{i}"] = b.prefill(params[f"b{i}"], x, positions=positions)
-        return x, caches
+            args = (x,) if cache is None else (x, cache[f"b{i}"])
+            x, out[f"b{i}"] = getattr(b, method)(params[f"b{i}"], *args, **kw)
+        return x, out
+
+    def prefill(self, params, x, *, positions=None):
+        return self._forward("prefill", params, x, None, positions=positions)
 
     def decode_step(self, params, x, cache, *, lengths,
                     page_table=None, active=None):
-        out = {}
-        for i, b in enumerate(self.blocks):
-            x, out[f"b{i}"] = b.decode_step(
-                params[f"b{i}"], x, cache[f"b{i}"], lengths=lengths,
-                page_table=page_table, active=active,
-            )
-        return x, out
+        return self._forward("decode_step", params, x, cache,
+                             lengths=lengths, page_table=page_table,
+                             active=active)
 
     def extend(self, params, x, cache, *, positions, valid, page_table=None):
-        out = {}
-        for i, b in enumerate(self.blocks):
-            x, out[f"b{i}"] = b.extend(
-                params[f"b{i}"], x, cache[f"b{i}"],
-                positions=positions, valid=valid, page_table=page_table,
-            )
-        return x, out
+        return self._forward("extend", params, x, cache, positions=positions,
+                             valid=valid, page_table=page_table)

@@ -384,6 +384,53 @@ class Attention:
         y = self.wo(params["wo"], out.reshape(b, c, self.n_heads * self.hd))
         return y, cache_k, cache_v
 
+    # -------- cross-attention (encoder-decoder) serving helpers --------
+    def cross_kv(self, params, memory):
+        """Project encoder memory to cross-attention K/V rows.
+
+        memory (B, T, d) -> (k, v) each (B, T, K, hd). Computed ONCE per
+        request in the engine's ENCODE phase, scattered into the
+        cross-attention pool, and read-only ever after — decode/extend
+        never re-project. No RoPE (cross attention is position-free, as
+        in the dense ``__call__`` path where ``self.cross`` skips it)."""
+        b, t, _ = memory.shape
+        k = self.wk(params["wk"], memory).reshape(b, t, self.n_kv, self.hd)
+        v = self.wv(params["wv"], memory).reshape(b, t, self.n_kv, self.hd)
+        if self.qk_norm:
+            k = self.knorm(params["knorm"], k)
+        return k, v
+
+    def cross_attend(self, params, x, cache_k, cache_v, kv_lens,
+                     page_table=None):
+        """Read-only cross attention over precomputed memory K/V.
+
+        x (B, S, d) queries attend every VALID memory row (row t of slot
+        b is valid iff ``t < kv_lens[b]``); no causal mask, no cache
+        write. With ``page_table`` the caches are pool form and the
+        attend runs over the gathered per-slot view — rows past
+        ``kv_lens`` (padding inside the last page, stale pool content)
+        are masked to exact zeros by the softmax's NEG_INF underflow,
+        so the paged result is byte-identical to attending the dense
+        unpadded memory."""
+        b, s, _ = x.shape
+        q = self.wq(params["wq"], x).reshape(b, s, self.n_heads, self.hd)
+        if self.qk_norm:
+            q = self.qnorm(params["qnorm"], q)
+        if page_table is None:
+            view_k, view_v = cache_k, cache_v
+        else:
+            view_k = gather_pages(cache_k, page_table)
+            view_v = gather_pages(cache_v, page_table)
+        t = view_k.shape[1]
+        mask = jnp.broadcast_to(
+            (jnp.arange(t)[None, :] < kv_lens[:, None])[:, None, :],
+            (b, s, t),
+        )
+        out = _attend_core(self._group(q), view_k, view_v, mask,
+                           1.0 / math.sqrt(self.hd))
+        return self.wo(params["wo"],
+                       out.reshape(b, s, self.n_heads * self.hd))
+
     def extend_quant(
         self,
         params: dict,

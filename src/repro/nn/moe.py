@@ -256,8 +256,98 @@ class MoE:
             y = y.at[tok_of[sl]].add(yj * gates[sl, None])
         return y
 
+    # ---------------- serving dispatch ----------------
+    def _dispatch_serve(self, xg, top_idx):
+        """Drop-free, order-stable dispatch for the serving tick.
+
+        The train-path capacity ``ceil(1.25*k*tl/e)`` DEPENDS on the
+        token count tl, and its expert-sorted scatter-add sums in an
+        order that depends on the whole batch — so a token's output
+        would change with its chunking and its batch neighbors, breaking
+        the engine's byte-identical chunked-vs-monolithic parity wall.
+        Serving instead uses capacity ``tl * k`` (every (token, slot)
+        assignment fits — nothing can drop) and derives each
+        assignment's position-in-expert from a token-major one-hot
+        exclusive cumsum: slot (t, j) gets a buffer cell that is a pure
+        function of the assignments of tokens 0..t, never of capacity
+        pressure. Every buffer cell holds exactly one token, so the
+        dispatch scatter has no add-order ambiguity, and the combine
+        gathers per token in gate-rank order — per-token output is
+        independent of tl and of neighbors. All shapes are static in
+        (tl, e, k): the decode tick compiles once."""
+        cd = self.ctx.compute_dtype
+        tl, d = xg.shape
+        e, k = self.n_experts, self.top_k
+        flat_e = top_idx.reshape(-1)                    # token-major (tl*k,)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=0) - onehot, flat_e[:, None], axis=1
+        )[:, 0]
+        tok_of = jnp.arange(tl * k) // k
+        xbuf = jnp.zeros((e, tl * k, d), cd).at[flat_e, pos].set(
+            xg[tok_of].astype(cd)
+        )
+        return xbuf, (flat_e, pos)
+
+    def _combine_serve(self, ybuf, meta, gate_vals, tl):
+        """Gate-rank-order combine: token t's output is the ordered sum
+        over j = 0..k-1 of ``gate[t, j] * ybuf[e(t,j), pos(t,j)]`` — a
+        fixed-length, fixed-order accumulation per token (no scatter-add
+        whose order could vary with batch composition)."""
+        cd = self.ctx.compute_dtype
+        flat_e, pos = meta
+        k = self.top_k
+        y = jnp.zeros((tl, ybuf.shape[-1]), cd)
+        for j in range(k):
+            y = y + (ybuf[flat_e[j::k], pos[j::k]]
+                     * gate_vals[:, j, None].astype(cd))
+        return y
+
+    def _serve_call(self, params: dict, x: jax.Array):
+        """Fixed-shape serving forward: drop-free dispatch (see
+        ``_dispatch_serve``), single dispatch group (serve token counts
+        are n_slots * chunk at most), expert banks reconstructed from
+        their packed (E, r, words) tiles."""
+        b, s, d = x.shape
+        cd = self.ctx.compute_dtype
+        tl = b * s
+        xg = x.reshape(tl, d)
+
+        logits = jnp.einsum(
+            "td,ed->te", xg.astype(jnp.float32), params["router"]
+        )
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, top_idx = jax.lax.top_k(probs, self.top_k)   # (tl, k)
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+        xbuf, meta = self._dispatch_serve(xg, top_idx)          # (E, tl*k, d)
+        # (E, cap, d) buffers keep the "experts" leading axis of the
+        # weight banks, so on an EP mesh the expert einsums stay local to
+        # the expert shard (the banks' first-claim "experts" -> model
+        # mapping in distributed/sharding.py).
+        w_up = self.up.effective(params["up"])
+        h = jnp.einsum("ecd,efd->ecf", xbuf, w_up)
+        if self.gated:
+            w_gate = self.gate_bank.effective(params["gate"])
+            h = self._act(jnp.einsum("ecd,efd->ecf", xbuf, w_gate)) * h
+        else:
+            h = self._act(h)
+        w_down = self.down.effective(params["down"])
+        ybuf = jnp.einsum("ecf,edf->ecd", h, w_down)
+
+        y = self._combine_serve(ybuf, meta, gate_vals, tl)
+        if self.n_shared:
+            y = y + self.shared(params["shared"], xg[None])[0]
+        y = y.reshape(b, s, d)
+        return (
+            logical_constraint(y, "act_batch", "act_seq", "act_embed"),
+            jnp.zeros((), jnp.float32),
+        )
+
     def __call__(self, params: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """Returns (output (B,S,d), aux load-balance loss scalar)."""
+        if self.ctx.mode == SERVE:
+            return self._serve_call(params, x)
         b, s, d = x.shape
         cd = self.ctx.compute_dtype
         t_tokens = b * s

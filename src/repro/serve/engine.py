@@ -79,6 +79,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import hashlib
 import itertools
 import threading
 from typing import Callable, Dict, List, Optional, Union
@@ -89,11 +90,17 @@ import numpy as np
 
 from repro.distributed.sharding import axis_rules, param_shardings
 from repro.serve.kvpool import KVPool
-from repro.serve.prefix import PrefixTrie
+from repro.serve.prefix import EncoderCache, PrefixTrie
 from repro.serve.sampling import SamplingParams, sample_logits_batch
+from repro.serve.servable import ensure_servable
 
 PREFILL = "prefill"
 DECODE = "decode"
+# Encoder-decoder models only: the phase between admission and PREFILL in
+# which the request's source frames run through the encoder (one fixed-
+# shape batch=1 call, budget-charged against the tick like a prefill
+# chunk) and the projected cross-attention K/V lands in its pool pages.
+ENCODE = "encode"
 
 # Priority classes, best first: rank 0 outranks rank 1. The class names
 # are the wire-level vocabulary (`"priority"` field of POST /generate);
@@ -192,6 +199,11 @@ class PreemptedState:
     need_snaps: set                     # boundaries still to capture
     count: int                          # emitted tokens == PRNG fold pos
     last_token: int                     # decode input token at preemption
+    xpages: List[int] = dataclasses.field(default_factory=list)
+    # retained CROSS-pool pages (encoder-decoder models; read-only after
+    # encode, so parking retains them exactly like self-attention pages —
+    # no re-snapshot needed, resume rewrites the cross table row)
+    enc_len: int = 0                    # valid encoder rows behind xpages
 
 
 def _tick_fns(model):
@@ -205,12 +217,22 @@ def _tick_fns(model):
     cached = getattr(model, "_serve_tick_fns", None)
     if cached is not None:
         return cached
+    cross = getattr(model, "has_cross_attn", False)
 
     def _row_keys(base_keys, counts):
         return jax.vmap(jax.random.fold_in)(base_keys, counts)
 
+    def _extra_kw(extra):
+        """Cross models thread (cross page table, encoder lengths) as
+        trailing varargs so the decoder-only tick signatures — and their
+        traces — stay exactly what the existing parity walls pin."""
+        if not extra:
+            return {}
+        xptab, enc_lens = extra
+        return {"cross_page_table": xptab, "enc_lens": enc_lens}
+
     def _decode_tick(params, tokens, caches, lengths, active,
-                     temps, topks, base_keys, counts, ptab):
+                     temps, topks, base_keys, counts, ptab, *extra):
         """decode step + per-slot sampling fused under one jit, confined
         to the ``active`` decoding slots: the (n_slots, vocab) logits
         never leave the device and prefilling/free slots keep their
@@ -220,7 +242,7 @@ def _tick_fns(model):
         TRACE_COUNTS["decode_tick"] += 1
         logits, new_caches, new_lengths = model.decode_step(
             params, tokens, caches, lengths,
-            page_table=ptab, active=active,
+            page_table=ptab, active=active, **_extra_kw(extra),
         )
         nxt = sample_logits_batch(
             logits, _row_keys(base_keys, counts),
@@ -232,13 +254,14 @@ def _tick_fns(model):
         return nxt, caches, lengths
 
     def _extend_tick(params, block, caches, lengths, n_new,
-                     temps, topks, base_keys, counts, ptab):
+                     temps, topks, base_keys, counts, ptab, *extra):
         """one chunked-prefill step for every scheduled slot + sampling of
         each slot's candidate first token (the host keeps it only for
         slots whose prompt just completed)."""
         TRACE_COUNTS["extend_tick"] += 1
         logits, caches, lengths = model.extend(
-            params, block, caches, lengths, n_new, page_table=ptab
+            params, block, caches, lengths, n_new, page_table=ptab,
+            **_extra_kw(extra),
         )
         toks = sample_logits_batch(
             logits, _row_keys(base_keys, counts),
@@ -266,6 +289,20 @@ def _tick_fns(model):
     fns = (jax.jit(_decode_tick), jax.jit(_extend_tick),
            jax.jit(_reset_slot), jax.jit(_snapshot_slot),
            jax.jit(_restore_slot))
+    if cross:
+        def _encode_tick(params, frames, valid, caches, xptab):
+            """ENCODE phase: one padded batch=1 encoder pass + the cross
+            K/V projection scattered through the admitted slot's cross
+            page-table row. The ONLY writer of cross pages — decode and
+            extend treat the family as read-only ever after."""
+            TRACE_COUNTS["encode_tick"] += 1
+            memory = model.encode_serve(params, frames, valid)
+            positions = jnp.broadcast_to(
+                jnp.arange(frames.shape[1]), valid.shape)
+            return model.write_cross(
+                params, memory, caches, xptab, positions, valid)
+
+        fns = fns + (jax.jit(_encode_tick),)
     model._serve_tick_fns = fns
     return fns
 
@@ -291,6 +328,12 @@ class Request:
     # per-class TTFT stats measure from here, queue wait included
     preempt_count: int = 0               # times preempted so far; at
     # ServeConfig.max_preempts the request becomes preemption-immune
+    frames: Optional[np.ndarray] = None  # (enc_len, d_model) source frame
+    # embeddings — required for encoder-decoder models, rejected otherwise
+    enc_digest: Optional[bytes] = None   # blake2b of the frame bytes: the
+    # EncoderCache key (two requests over the same source share pages)
+    enc_reused: bool = False             # admission skipped ENCODE via a
+    # warm EncoderCache hit (the encdec analogue of prefix_hit_tokens)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,6 +366,13 @@ class ServeConfig:
     # it is force-admitted
     max_preempts: int = 3               # per-request preemption cap; at
     # the cap a request becomes immune (the batch-class progress floor)
+    enc_tokens: Optional[int] = None    # encoder-decoder models: padded
+    # encoder width (the ENCODE tick's one compiled shape) and the cap on
+    # a request's frame count. None resolves to max_len in the engine.
+    cross_pages: Optional[int] = None   # cross-attention pool capacity;
+    # default = (n_slots + 1) runs so one EncoderCache entry can stay
+    # warm beside a full house of live slots
+    enc_cache_entries: int = 128        # EncoderCache entry cap (LRU)
 
     def __post_init__(self):
         """Fail fast on an impossible engine shape.
@@ -396,10 +446,28 @@ class ServeConfig:
             raise ValueError(
                 f"max_preempts must be >= 0: {self.max_preempts}"
             )
+        if self.enc_tokens is not None and self.enc_tokens < 1:
+            raise ValueError(
+                f"enc_tokens must be >= 1 (or None for max_len): "
+                f"{self.enc_tokens}"
+            )
+        if self.cross_pages is not None and self.cross_pages < 1:
+            raise ValueError(
+                f"cross_pages must be >= 1 (or None for the default): "
+                f"{self.cross_pages}"
+            )
+        if self.enc_cache_entries < 1:
+            raise ValueError(
+                f"enc_cache_entries must be >= 1: {self.enc_cache_entries}"
+            )
 
 
 class BatchedEngine:
     def __init__(self, model, params, cfg: ServeConfig, *, mesh=None):
+        # The model <-> engine contract is the ServableModel protocol
+        # (serve/servable.py, DESIGN.md §6.5); fail at construction with
+        # the family menu, not mid-tick with an AttributeError.
+        ensure_servable(model)
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
@@ -447,10 +515,44 @@ class BatchedEngine:
         self._ptab = np.zeros((cfg.n_slots, self.npp), np.int32)
         self._n_mapped = np.zeros((cfg.n_slots,), np.int64)  # pages held
 
-        # shared-prefix radix trie + per-slot boundary snapshots
+        # Cross-attention cache family (encoder-decoder models): a SECOND
+        # pool with its own page-table rows. Pages are written once by the
+        # ENCODE tick and read-only ever after, masked by per-slot encoder
+        # lengths — so sharing them across requests over the same source
+        # is pure refcounting, exactly like trie-pinned prefix pages.
+        self._cross = getattr(model, "has_cross_attn", False)
+        if self._cross:
+            self.enc_tokens = cfg.enc_tokens or cfg.max_len
+            self.x_npp = -(-self.enc_tokens // self.pt)  # x-pages per slot
+            x_pages = cfg.cross_pages or (cfg.n_slots + 1) * self.x_npp
+            if x_pages < self.x_npp:
+                raise ValueError(
+                    f"cross_pages {x_pages} is below one request's worth "
+                    f"({self.x_npp} pages for enc_tokens={self.enc_tokens})"
+                )
+            self.xpool = KVPool(x_pages, self.pt, family="cross_attn")
+            self._xptab = np.zeros((cfg.n_slots, self.x_npp), np.int32)
+            self._xn_mapped = np.zeros((cfg.n_slots,), np.int64)
+            self._enc_lens = np.zeros((cfg.n_slots,), np.int32)
+        else:
+            self.enc_tokens = None
+            self.x_npp = 0
+            self.xpool = None
+
+        # shared-prefix radix trie + per-slot boundary snapshots. Cross
+        # models DISABLE the token-keyed trie regardless of prefix_cache:
+        # decoder self-attention K/V depends on the cross-attended encoder
+        # memory, so a prompt prefix computed against one source would be
+        # silently WRONG for another. What prefix_cache buys them instead
+        # is the digest-keyed EncoderCache — reuse of the encoder output
+        # itself, which IS prompt-independent.
         self.trie = (
             PrefixTrie(self.pt, pool=self.pool, max_nodes=cfg.prefix_nodes)
-            if cfg.prefix_cache else None
+            if cfg.prefix_cache and not self._cross else None
+        )
+        self.enc_cache = (
+            EncoderCache(self.xpool, max_entries=cfg.enc_cache_entries)
+            if cfg.prefix_cache and self._cross else None
         )
         self._stateful = model.has_recurrent_state
         self._snaps: List[Dict[int, object]] = [
@@ -467,6 +569,7 @@ class BatchedEngine:
             "rejected": 0, "peak_queue_depth": 0,
             "preempt_free_ticks": 0, "work_ticks": 0,
             "preempts": 0, "resumes": 0, "preempted_tokens": 0,
+            "encode_ticks": 0, "enc_cache_hits": 0,
         }
 
         # Streaming hooks: the front-end registers these to learn about
@@ -479,10 +582,15 @@ class BatchedEngine:
         self.on_finish: Optional[Callable[[Request], None]] = None
 
         cache_dtype = getattr(model.ctx, "compute_dtype", jnp.bfloat16)
+        self._cache_dtype = cache_dtype
+        cache_kw = {}
+        if self._cross:
+            cache_kw["cross_pages"] = self.xpool.n_pages
         self.caches = model.init_caches(
             cfg.n_slots, cfg.max_len, cache_dtype,
             page_tokens=self.pt if self._paged else None,
             n_pages=n_pages if self._paged else None,
+            **cache_kw,
         )
         self.lengths = jnp.zeros((cfg.n_slots,), jnp.int32)
         self.tokens = jnp.zeros((cfg.n_slots, 1), jnp.int32)
@@ -498,8 +606,10 @@ class BatchedEngine:
         self._slot_keys = jnp.zeros((cfg.n_slots, 2), jnp.uint32)
         self._counts = np.zeros((cfg.n_slots,), np.int64)
 
+        fns = _tick_fns(model)
         (self._decode, self._extend, self._reset,
-         self._snapshot, self._restore) = _tick_fns(model)
+         self._snapshot, self._restore) = fns[:5]
+        self._encode = fns[5] if len(fns) > 5 else None
         # AOT-compiled executables keyed by tick-fn name, filled by
         # warmup(): call sites prefer these over the lazily-traced jit
         # wrappers so a warmed engine's first real tick runs zero traces.
@@ -511,6 +621,14 @@ class BatchedEngine:
         if self.mesh is None:
             return contextlib.nullcontext()
         return axis_rules(self.mesh)
+
+    def _cross_extra(self):
+        """Trailing tick-fn args for the cross family: (cross page table,
+        per-slot encoder lengths). Empty for decoder-only models, so
+        their tick calls — and compiled signatures — are unchanged."""
+        if not self._cross:
+            return ()
+        return (jnp.asarray(self._xptab), jnp.asarray(self._enc_lens))
 
     # ------------------------------------------------------------------
     def warmup(self) -> Dict[str, float]:
@@ -542,20 +660,33 @@ class BatchedEngine:
         block = jnp.asarray(np.zeros((cfg.n_slots, cfg.chunk_tokens),
                                      np.int32))
         n_new = jnp.asarray(np.zeros((cfg.n_slots,), np.int32))
+        extra = self._cross_extra()
         plans = [
             ("decode_tick", self._decode,
              (self.params, self.tokens, self.caches, self.lengths, active,
-              self.temps, self.topks, self._slot_keys, counts, ptab),
+              self.temps, self.topks, self._slot_keys, counts, ptab,
+              *extra),
              f"tokens int32[{cfg.n_slots},1], ptab int32[{cfg.n_slots},"
              f"{self.npp}]"),
             ("extend_tick", self._extend,
              (self.params, block, self.caches, self.lengths, n_new,
-              self.temps, self.topks, self._slot_keys, counts, ptab),
+              self.temps, self.topks, self._slot_keys, counts, ptab,
+              *extra),
              f"block int32[{cfg.n_slots},{cfg.chunk_tokens}], ptab "
              f"int32[{cfg.n_slots},{self.npp}]"),
             ("reset_slot", self._reset, (self.caches, 0),
              f"slot int32[], {cfg.n_slots}-slot caches"),
         ]
+        if self._cross:
+            d = self.model.cfg.d_model
+            plans.append((
+                "encode_tick", self._encode,
+                (self.params,
+                 jnp.zeros((1, self.enc_tokens, d), self._cache_dtype),
+                 jnp.zeros((1, self.enc_tokens), bool), self.caches,
+                 jnp.zeros((1, self.x_npp), jnp.int32)),
+                f"frames [{1},{self.enc_tokens},{d}], xptab "
+                f"int32[1,{self.x_npp}]"))
         # snapshot/restore executables serve BOTH the prefix trie's
         # boundary snapshots and the preempting scheduler's parking; warm
         # them whenever a stateful model could need either.
@@ -597,7 +728,8 @@ class BatchedEngine:
 
     # ------------------------------------------------------------------
     def submit(
-        self, prompt, params: Optional[SamplingParams] = None
+        self, prompt, params: Optional[SamplingParams] = None,
+        frames=None,
     ) -> Request:
         prompt = np.asarray(prompt, np.int32)
         # Validate HERE, not at admission: a bad prompt then fails fast
@@ -608,6 +740,33 @@ class BatchedEngine:
             raise ValueError(
                 f"prompt len {len(prompt)} exceeds max_len {self.cfg.max_len}"
             )
+        enc_digest = None
+        if self._cross:
+            if frames is None:
+                raise ValueError(
+                    "encoder-decoder serving: submit() needs frames "
+                    "(enc_len, d_model) source embeddings alongside the "
+                    "decoder prompt")
+            frames = np.ascontiguousarray(np.asarray(frames, np.float32))
+            if (frames.ndim != 2
+                    or frames.shape[1] != self.model.cfg.d_model):
+                raise ValueError(
+                    f"frames must be (enc_len, d_model="
+                    f"{self.model.cfg.d_model}): got {frames.shape}")
+            if not 0 < frames.shape[0] <= self.enc_tokens:
+                raise ValueError(
+                    f"frame count {frames.shape[0]} outside "
+                    f"(0, enc_tokens={self.enc_tokens}]")
+            # digest over shape + bytes: the EncoderCache key — two
+            # requests over the same source share cross pages verbatim
+            enc_digest = hashlib.blake2b(
+                np.int64(frames.shape[0]).tobytes() + frames.tobytes(),
+                digest_size=16,
+            ).digest()
+        elif frames is not None:
+            raise ValueError(
+                f"{type(self.model).__name__} has no encoder: frames are "
+                f"only accepted for encoder-decoder models")
         params = params or SamplingParams()
         cls = (params.priority if params.priority is not None
                else self.cfg.default_priority)
@@ -627,6 +786,8 @@ class BatchedEngine:
             params=params,
             priority=cls,
             submit_step=self.steps,
+            frames=frames,
+            enc_digest=enc_digest,
         )
         self._queue.put(req)
         return req
@@ -682,6 +843,11 @@ class BatchedEngine:
             for i in range(int(self._n_mapped[slot])):
                 self.pool.release(int(self._ptab[slot, i]))
             self._n_mapped[slot] = 0
+        if self.xpool is not None:
+            for i in range(int(self._xn_mapped[slot])):
+                self.xpool.release(int(self._xptab[slot, i]))
+            self._xn_mapped[slot] = 0
+            self._enc_lens[slot] = 0
         self._snaps[slot] = {}
         self._need_snaps[slot] = set()
         self._live.pop(slot, None)
@@ -749,7 +915,11 @@ class BatchedEngine:
         if self.pool is not None:
             for pid in parked.pages:
                 self.pool.release(pid)
+        if self.xpool is not None:
+            for pid in parked.xpages:
+                self.xpool.release(pid)
         parked.pages = []
+        parked.xpages = []
         parked.snapshot = None
         parked.snaps = {}
         self._parked.remove(parked)
@@ -813,6 +983,32 @@ class BatchedEngine:
             else jax.random.fold_in(self._root_key, req.rid)
         )
         self._counts[slot] = 0
+        if self._cross:
+            # encoder-decoder: the request must ENCODE before its prompt
+            # can prefill — unless the EncoderCache already holds this
+            # source, in which case the whole cross page run maps in O(1)
+            # and the phase machine skips straight to PREFILL
+            self._enc_lens[slot] = len(req.frames)
+            self._xn_mapped[slot] = 0
+            self._phase[slot] = ENCODE
+            self._try_enc_cache(slot, req)
+
+    def _try_enc_cache(self, slot: int, req: Request) -> bool:
+        """Warm-source admission: map a cached encoder output's page run
+        into the slot's cross table and skip the ENCODE phase."""
+        if self.enc_cache is None or req.enc_digest is None:
+            return False
+        entry = self.enc_cache.get(req.enc_digest, now=self.steps)
+        if entry is None:
+            return False
+        for i, pid in enumerate(entry.pages):
+            self._xptab[slot, i] = pid
+        self._xn_mapped[slot] = len(entry.pages)
+        self._enc_lens[slot] = entry.enc_len
+        self._phase[slot] = PREFILL
+        req.enc_reused = True
+        self._stats["enc_cache_hits"] += 1
+        return True
 
     # ---- scheduling under pressure -----------------------------------
     def preempt_slot(self, slot: int) -> bool:
@@ -841,6 +1037,11 @@ class BatchedEngine:
                  for i in range(int(self._n_mapped[slot]))]
                 if self.pool is not None else []
             )
+            xpages = (
+                [int(self._xptab[slot, i])
+                 for i in range(int(self._xn_mapped[slot]))]
+                if self.xpool is not None else []
+            )
             parked = PreemptedState(
                 req=req,
                 phase=self._phase[slot],
@@ -852,12 +1053,18 @@ class BatchedEngine:
                 need_snaps=self._need_snaps[slot],
                 count=int(self._counts[slot]),
                 last_token=int(self.tokens[slot, 0]),
+                xpages=xpages,
+                enc_len=(int(self._enc_lens[slot])
+                         if self.xpool is not None else 0),
             )
             self._parked.append(parked)
             req.preempt_count += 1
             # free the slot WITHOUT releasing its pages (they now belong
             # to the parked record) and without firing on_finish
             self._n_mapped[slot] = 0
+            if self.xpool is not None:
+                self._xn_mapped[slot] = 0
+                self._enc_lens[slot] = 0
             self._snaps[slot] = {}
             self._need_snaps[slot] = set()
             self._live.pop(slot)
@@ -883,12 +1090,19 @@ class BatchedEngine:
         req = parked.req
         self._live[slot] = req
         self._phase[slot] = parked.phase
-        if parked.phase == PREFILL:
+        if parked.phase in (PREFILL, ENCODE):
             self._admit_order.append(slot)
         if self.pool is not None:
             for i, pid in enumerate(parked.pages):
                 self._ptab[slot, i] = pid
             self._n_mapped[slot] = len(parked.pages)
+        if self.xpool is not None:
+            # cross pages come back by table rewrite alone: they were
+            # written once at encode and never re-snapshotted (read-only)
+            for i, pid in enumerate(parked.xpages):
+                self._xptab[slot, i] = pid
+            self._xn_mapped[slot] = len(parked.xpages)
+            self._enc_lens[slot] = parked.enc_len
         self._snaps[slot] = parked.snaps
         self._need_snaps[slot] = parked.need_snaps
         self._offsets[slot] = parked.offset
@@ -922,14 +1136,27 @@ class BatchedEngine:
         the trie WITHOUT pinning recency (the probe is advisory; the
         authoritative match happens at admission)."""
         if isinstance(cand, PreemptedState):
-            cost = (len(cand.req.prompt) - cand.offset
-                    if cand.phase == PREFILL else 0)
+            if cand.phase == ENCODE:
+                # parked before its encoder ran: full encode + prefill
+                cost = len(cand.req.prompt) + cand.enc_len
+            elif cand.phase == PREFILL:
+                cost = len(cand.req.prompt) - cand.offset
+            else:
+                cost = 0
             return (self._rank(cand.req), cost, cand.req.rid)
         cached = 0
         if self.trie is not None:
             cached = self.trie.probe(
                 cand.prompt, require_snapshot=self._stateful)
-        return (self._rank(cand), len(cand.prompt) - cached, cand.rid)
+        cost = len(cand.prompt) - cached
+        if self._cross and cand.frames is not None:
+            # charge the ENCODE pass unless the source is already warm in
+            # the EncoderCache (advisory, like the trie probe — the
+            # authoritative lookup happens at admission)
+            if not (self.enc_cache is not None
+                    and cand.enc_digest in self.enc_cache):
+                cost += len(cand.frames)
+        return (self._rank(cand), cost, cand.rid)
 
     @staticmethod
     def _cand_rid(cand: Union[Request, PreemptedState]) -> int:
@@ -1045,6 +1272,51 @@ class BatchedEngine:
             pid = self.pool.alloc()
         return pid
 
+    def _alloc_xpage(self) -> int:
+        """Take a cross-pool page, evicting LRU EncoderCache entries on
+        demand (their pages free once no live slot maps them)."""
+        pid = self.xpool.alloc()
+        while pid is None:
+            if self.enc_cache is None or not self.enc_cache.evict_one():
+                raise RuntimeError(
+                    f"cross-attention page pool exhausted "
+                    f"({self.xpool.n_pages} pages, 0 free, "
+                    f"{len(self.enc_cache) if self.enc_cache else 0} "
+                    f"cached encoder outputs): raise cross_pages"
+                )
+            pid = self.xpool.alloc()
+        return pid
+
+    def _run_encode(self, slot: int) -> int:
+        """The slot's ENCODE phase: allocate its cross page run, run the
+        padded batch=1 encoder tick (frames -> memory -> per-layer cross
+        K/V scattered through the slot's cross table row), publish the
+        result to the EncoderCache, and advance the phase machine to
+        PREFILL. Returns the token charge against this tick's budget."""
+        req = self._live[slot]
+        enc_len = int(self._enc_lens[slot])
+        need = -(-enc_len // self.pt)
+        while self._xn_mapped[slot] < need:
+            self._xptab[slot, self._xn_mapped[slot]] = self._alloc_xpage()
+            self._xn_mapped[slot] += 1
+        d = self.model.cfg.d_model
+        frames = np.zeros((1, self.enc_tokens, d), np.float32)
+        frames[0, :enc_len] = req.frames
+        valid = np.zeros((1, self.enc_tokens), bool)
+        valid[0, :enc_len] = True
+        self.caches = self._aot.get("encode_tick", self._encode)(
+            self.params, jnp.asarray(frames, self._cache_dtype),
+            jnp.asarray(valid), self.caches,
+            jnp.asarray(self._xptab[slot:slot + 1]),
+        )
+        self._phase[slot] = PREFILL
+        self._stats["encode_ticks"] += 1
+        if self.enc_cache is not None:
+            pages = [int(self._xptab[slot, i]) for i in range(need)]
+            self.enc_cache.put(req.enc_digest, pages, enc_len,
+                               now=self.steps)
+        return min(enc_len, self.cfg.chunk_tokens)
+
     def _ensure_pages(self, slot: int, last_pos: int):
         """Grow the slot's page table to cover ``last_pos``: fresh private
         pages for everything past the mapped prefix. Positions past the
@@ -1058,7 +1330,8 @@ class BatchedEngine:
             self._ptab[slot, self._n_mapped[slot]] = pid
             self._n_mapped[slot] += 1
 
-    def _schedule_prefill(self, n_decoding: int) -> Dict[int, int]:
+    def _schedule_prefill(self, n_decoding: int,
+                          extra_charge: int = 0) -> Dict[int, int]:
         """Token-budget pass: chunk_tokens per tick, decode-priority.
 
         Every decoding slot is charged one token up front; what remains
@@ -1075,9 +1348,14 @@ class BatchedEngine:
         already covers don't pause the chunk, so a warm repeat of a
         shared prompt prefills at full chunk width. Stateless (pure
         full-attention) models never cap — their pages are position-
-        addressed, chunk splits don't matter."""
+        addressed, chunk splits don't matter.
+
+        ``extra_charge`` bills work already done this tick outside this
+        pass — the ENCODE phase's padded encoder call — against the same
+        budget, so an encode-heavy tick hands out fewer prefill columns
+        (the head-of-queue floor still guarantees progress)."""
         c = self.cfg.chunk_tokens
-        budget = c - n_decoding
+        budget = c - n_decoding - extra_charge
         takes: Dict[int, int] = {}
         first = True
         for slot in self._admit_order:
@@ -1111,7 +1389,7 @@ class BatchedEngine:
             self.params, jnp.asarray(block), self.caches, self.lengths,
             jnp.asarray(n_new), self.temps, self.topks,
             self._slot_keys, jnp.asarray(self._counts),
-            jnp.asarray(self._ptab),
+            jnp.asarray(self._ptab), *self._cross_extra(),
         )
         toks_host = np.asarray(toks)
         for slot, take in takes.items():
@@ -1158,7 +1436,7 @@ class BatchedEngine:
             self.params, self.tokens, self.caches, self.lengths,
             jnp.asarray(active), self.temps, self.topks,
             self._slot_keys, jnp.asarray(self._counts),
-            jnp.asarray(self._ptab),
+            jnp.asarray(self._ptab), *self._cross_extra(),
         )
         nxt_host = np.asarray(nxt)
         self.tokens = nxt[:, None]
@@ -1190,11 +1468,24 @@ class BatchedEngine:
                 self._stats["peak_queue_depth"] = depth
             if not self._live:
                 return
+            # ENCODE pass (cross models): warm-cache late hits resolve in
+            # O(1); at most ONE padded encoder call actually runs per tick
+            # and its cost is billed against the prefill budget below.
+            enc_charge = 0
+            if self._cross:
+                for s in list(self._admit_order):
+                    if self._phase[s] != ENCODE:
+                        continue
+                    if self._try_enc_cache(s, self._live[s]):
+                        continue
+                    enc_charge = self._run_encode(s)
+                    break
             decoding = [s for s in range(self.cfg.n_slots)
                         if self._phase[s] == DECODE]
             dec_reqs = [(self._live[s], len(self._live[s].output))
                         for s in decoding]
-            takes = self._schedule_prefill(len(decoding))
+            takes = self._schedule_prefill(len(decoding),
+                                           extra_charge=enc_charge)
             if takes:
                 self._run_extend(takes)
             if decoding:
@@ -1225,6 +1516,19 @@ class BatchedEngine:
             s["pool_pages"] = self.pool.n_pages
             s["pages_in_use"] = self.pool.used_pages
             s["page_utilization"] = self.pool.used_pages / self.pool.n_pages
+        # per-cache-family pool utilization (ServableModel cache families;
+        # the flat pool_* keys above stay for the historical dashboards)
+        s["cache_families"] = {
+            p.family: {
+                "pages": p.n_pages,
+                "in_use": p.used_pages,
+                "utilization": p.used_pages / p.n_pages,
+            }
+            for p in (self.pool, self.xpool) if p is not None
+        }
+        s["enc_cache_entries"] = (
+            len(self.enc_cache) if self.enc_cache is not None else 0
+        )
         s["trie_nodes"] = len(self.trie) if self.trie is not None else 0
         s["evictions"] = self.trie.evictions if self.trie is not None else 0
         s["queue_depth"] = self._queue.qsize()

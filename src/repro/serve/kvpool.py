@@ -34,13 +34,18 @@ import numpy as np
 class KVPool:
     """Refcounted free-list allocator over ``n_pages`` KV pages."""
 
-    def __init__(self, n_pages: int, page_tokens: int):
+    def __init__(self, n_pages: int, page_tokens: int,
+                 family: str = "self_attn"):
         if n_pages <= 0:
             raise ValueError(f"n_pages must be positive: {n_pages}")
         if page_tokens <= 0:
             raise ValueError(f"page_tokens must be positive: {page_tokens}")
         self.n_pages = n_pages
         self.page_tokens = page_tokens
+        # which ServableModel cache family this pool backs ("self_attn",
+        # "cross_attn", ...) — labels stats()/diagnostics only, the
+        # allocator itself is family-agnostic
+        self.family = family
         self.refcounts = np.zeros((n_pages,), np.int64)
         # LIFO free list: a just-freed page is reused first, keeping the
         # working set of touched pages (and their cache lines) small

@@ -203,3 +203,94 @@ class PrefixTrie:
 
     def held_pages(self) -> List[int]:
         return [n.page for n in self._nodes if n.page is not None]
+
+
+# ---------------------------------------------------------------------------
+# Encoder-output reuse (encoder-decoder serving)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class _EncEntry:
+    pages: List[int]            # cross-pool page run holding the K/V
+    enc_len: int                # valid memory rows (mask bound at decode)
+    last_used: int = 0
+
+
+class EncoderCache:
+    """Digest-keyed cache of encoded sources in CROSS-POOL pages.
+
+    The token-keyed :class:`PrefixTrie` cannot serve encoder-decoder
+    models — decoder self-attention K/V depends on the cross-attended
+    encoder memory, so a prompt prefix computed against one source is
+    WRONG for another (DESIGN.md §6.5). What IS reusable is the encoder
+    output itself: two requests over the same source (same frame bytes,
+    keyed by digest) share the cross-attention pages verbatim, because
+    those pages are read-only after the ENCODE phase and independent of
+    the decoder prompt. A hit maps the whole page run into the admitted
+    slot's cross page table and skips its ENCODE phase entirely.
+
+    Same refcount discipline as the trie: the cache holds one pool
+    reference per page per entry; a mapped slot holds its own; pages
+    free when the last drops. Eviction is LRU whole-entry (the run is
+    only useful complete)."""
+
+    def __init__(self, pool: KVPool, max_entries: int = 128):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1: {max_entries}")
+        self.pool = pool
+        self.max_entries = max_entries
+        self._entries: Dict[bytes, _EncEntry] = {}
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, digest: bytes) -> bool:
+        return digest in self._entries
+
+    def get(self, digest: bytes, *, now: int = 0) -> Optional[_EncEntry]:
+        """Hit -> the entry with every page RETAINED for the caller (who
+        releases them at slot teardown, like any mapped page)."""
+        e = self._entries.get(digest)
+        if e is None:
+            return None
+        for p in e.pages:
+            self.pool.retain(p)
+        e.last_used = now
+        return e
+
+    def put(self, digest: bytes, pages: List[int], enc_len: int, *,
+            now: int = 0) -> bool:
+        """Publish a finished encode's page run (first publisher wins,
+        like trie nodes). Retains every page; evicts LRU past the cap."""
+        if digest in self._entries:
+            self._entries[digest].last_used = now
+            return False
+        while len(self._entries) >= self.max_entries:
+            if not self.evict_one():
+                return False
+        for p in pages:
+            self.pool.retain(p)
+        self._entries[digest] = _EncEntry(list(pages), enc_len, now)
+        return True
+
+    def evict_one(self, exclude=()) -> bool:
+        victim = None
+        for d, e in self._entries.items():
+            if d in exclude:
+                continue
+            if victim is None or e.last_used < self._entries[victim].last_used:
+                victim = d
+        if victim is None:
+            return False
+        e = self._entries.pop(victim)
+        for p in e.pages:
+            self.pool.release(p)
+        self.evictions += 1
+        return True
+
+    def clear(self) -> None:
+        while self.evict_one():
+            pass
+
+    def held_pages(self) -> List[int]:
+        return [p for e in self._entries.values() for p in e.pages]

@@ -1,0 +1,129 @@
+"""ServableModel: the explicit model <-> engine serving contract.
+
+Historically :class:`~repro.serve.engine.BatchedEngine` grew against one
+concrete model class (``DecoderLM``) and the contract between them lived
+implicitly in the engine's attribute accesses. This module names it, so a
+second model family (the encoder-decoder backbone, the MoE decoder) can
+plug into the SAME engine — same scheduler, same paged pool, same
+preempt-and-resume — by implementing the protocol instead of by growing
+``isinstance`` branches inside the tick loop.
+
+The contract has three parts (DESIGN.md §6.5):
+
+* **probes** — ``has_full_attn`` / ``has_recurrent_state`` /
+  ``has_cross_attn`` booleans the engine reads ONCE at construction to
+  decide which host-side machinery to stand up (attention page pool,
+  boundary snapshots, cross-attention pool + ENCODE phase).
+* **cache families** — ``cache_families()`` returns
+  :class:`CacheFamily` descriptors declaring how each family of decode
+  state is stored (paged pool vs per-slot rows) and whether decode may
+  write it (cross-attention K/V is read-only after the encode phase).
+  The engine surfaces these per family in ``stats()``.
+* **tick methods** — ``init_caches`` / ``prefill`` / ``decode_step`` /
+  ``extend`` plus the per-slot walkers (``merge_caches``,
+  ``reset_slot_caches``, ``snapshot_slot_caches``,
+  ``restore_slot_caches``). The jitted tick functions call ONLY these;
+  a model that implements them with fixed shapes serves unchanged under
+  chunked prefill, paged attention, prefix reuse, and preemption.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+try:                                   # 3.8+: typing.Protocol
+    from typing import Protocol
+except ImportError:                    # pragma: no cover
+    Protocol = object
+
+# Model families the serving stack can drive, with the engine path each
+# takes. The launch CLI prints this matrix in --help; UnservableModelError
+# lists the keys so an unsupported config fails with the menu attached.
+SERVABLE_FAMILIES = {
+    "dense": "DecoderLM; full-attention KV in the paged pool",
+    "moe": "DecoderLM; expert tiles (E, r, words), drop-free serve dispatch",
+    "ssm": "DecoderLM; per-slot (h, conv) state, boundary snapshots",
+    "hybrid": "DecoderLM; pattern blocks mix paged KV + recurrent state",
+    "vlm": "DecoderLM; early-fusion image embeddings, paged KV",
+    "encdec": "EncDecModel; ENCODE phase + read-only cross-attention pool",
+}
+
+# The attribute surface the engine touches. ``ensure_servable`` checks
+# presence, not signatures — the parity walls check semantics.
+REQUIRED_ATTRS: Tuple[str, ...] = (
+    "has_full_attn",
+    "has_recurrent_state",
+    "has_cross_attn",
+    "cache_families",
+    "init_caches",
+    "prefill",
+    "decode_step",
+    "extend",
+    "merge_caches",
+    "reset_slot_caches",
+    "snapshot_slot_caches",
+    "restore_slot_caches",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheFamily:
+    """How one family of decode-cache state is stored and written.
+
+    ``paged`` families live in a shared page pool addressed through
+    per-slot page-table rows (zero per-slot dense tensors); non-paged
+    families are per-slot rows that snapshot/restore at boundaries.
+    ``read_only`` families are written exactly once (the encode phase)
+    and only read by decode/extend — preemption retains their pages but
+    never re-snapshots them."""
+
+    name: str                  # "self_attn" | "cross_attn" | "recurrent"
+    paged: bool
+    read_only: bool = False
+
+
+class UnservableModelError(TypeError):
+    """A model (or config family) the engine cannot drive. Carries the
+    menu of servable families so the CLI/server error message tells the
+    operator what WOULD work, not just what didn't."""
+
+    def __init__(self, what: str, missing: Tuple[str, ...] = ()):
+        menu = "; ".join(f"{k}: {v}" for k, v in SERVABLE_FAMILIES.items())
+        detail = (
+            f" (missing: {', '.join(missing)})" if missing else ""
+        )
+        super().__init__(
+            f"{what} does not satisfy the ServableModel contract{detail}. "
+            f"Servable families — {menu}"
+        )
+        self.missing = missing
+
+
+class ServableModel(Protocol):
+    """Typing surface of the contract (documentation + static checking;
+    the runtime check is :func:`ensure_servable`)."""
+
+    has_full_attn: bool
+    has_recurrent_state: bool
+    has_cross_attn: bool
+
+    def cache_families(self) -> Tuple[CacheFamily, ...]: ...
+    def init_caches(self, batch, max_len, dtype, *, page_tokens=None,
+                    n_pages=None, **kw): ...
+    def prefill(self, params, batch, max_len): ...
+    def decode_step(self, params, tokens, caches, lengths, **kw): ...
+    def extend(self, params, tokens, caches, lengths, n_new, **kw): ...
+    def merge_caches(self, old, new, keep, paged=False): ...
+    def reset_slot_caches(self, caches, slot, paged=False): ...
+    def snapshot_slot_caches(self, caches, slot): ...
+    def restore_slot_caches(self, caches, slot, snaps): ...
+
+
+def ensure_servable(model) -> object:
+    """Raise :class:`UnservableModelError` (listing what's missing AND
+    the servable-family menu) unless ``model`` exposes the full contract;
+    returns the model so engine constructors can check inline."""
+    missing = tuple(a for a in REQUIRED_ATTRS if not hasattr(model, a))
+    if missing:
+        raise UnservableModelError(type(model).__name__, missing)
+    return model

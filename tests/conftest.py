@@ -1,0 +1,24 @@
+"""Suite-wide fixtures.
+
+The suite compiles hundreds of distinct executables across its modules
+(every engine config shape is its own pjit program). Left to accumulate
+in one process, the XLA JIT eventually faults on a late fresh compile —
+deterministically, on CPU, long before memory is exhausted. Clearing
+JAX's compilation caches at each module boundary bounds the resident
+executable set to one module's worth; modules that share an
+`lru_cache`d model still reuse it within the module, and the handful of
+cross-module recompiles cost seconds against a ~10-minute wall.
+"""
+from __future__ import annotations
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,276 @@
+"""Encoder-decoder serving parity wall: engine == dense prefill+decode.
+
+The engine serves EncDecModel with a budgeted ENCODE phase (one
+fixed-shape batch=1 encoder call per admitted source, charged against
+the tick's chunk budget), the encoder output written once into a
+READ-ONLY cross-attention page pool with its own page-table rows, and a
+digest-keyed EncoderCache so a repeated source maps the existing page
+run and skips ENCODE entirely. Parity holds because the decoder-side
+math is position-exact regardless of chunking (same argument as the
+decoder-only wall), the encoder runs padded-to-capacity with masked-out
+rows that are byte-neutral (NEG_INF -> exp underflow to exact 0), and a
+cache hit re-reads the very same pages the original encode wrote.
+
+The token-keyed prefix trie is OFF for cross models — decoder self-attn
+K/V depends on the attended source, so sharing a prompt prefix across
+different sources would be wrong (DESIGN.md §6.5); only the encoder
+output is source-pure and reusable.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.core.packing import unpack_bits
+from repro.core.tiling import tile_vector
+from repro.nn import module as mod
+from repro.nn.context import SERVE, TRAIN, ModelContext
+from repro.serve.engine import BatchedEngine, ServeConfig
+from repro.serve.sampling import SamplingParams, sample_logits_batch
+from repro.serve.weights import export_serving_params
+
+KEY = jax.random.PRNGKey(0)
+ARCH = "seamless-m4t-large-v2"
+PROMPTS = [[3, 9, 4, 11, 7, 2, 5], [8, 6, 1, 12, 0], [5, 5, 2, 8]]
+CHUNKS = (2, 7, 16)
+ENC_TOKENS = 16
+
+
+@functools.lru_cache(maxsize=None)
+def build_encdec():
+    cfg = get_config(ARCH).reduced()
+    tm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN,
+                                       compute_dtype=jnp.float32))
+    sm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
+                                       compute_dtype=jnp.float32,
+                                       use_pallas=False))
+    tp = mod.init_params(tm.specs(), KEY)
+    sp = export_serving_params(tm.specs(), sm.specs(), tp, cfg.tbn)
+    return cfg, tm, tp, sm, sp
+
+
+@functools.lru_cache(maxsize=None)
+def sources():
+    """Two distinct synthetic source clips (ragged lengths)."""
+    cfg = build_encdec()[0]
+    rng = np.random.default_rng(7)
+    return tuple(
+        rng.standard_normal((n, cfg.d_model)).astype(np.float32)
+        for n in (11, 5)
+    )
+
+
+def dense_reference(sm, sp, prompt, frames, n_tokens, *, seed=0, rid=0,
+                    temperature=0.0, top_k=0):
+    """EncDecModel.prefill + decode_step, unpaged and unchunked, sampled
+    with the engine's PRNG stream — the wall the engine must match."""
+    req_key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+    temps = jnp.array([temperature], jnp.float32)
+    topks = jnp.array([top_k], jnp.int32)
+
+    def sample(logits, t):
+        k = jax.random.fold_in(req_key, t)[None]
+        return int(sample_logits_batch(
+            logits, k, temperature=temps, top_k=topks)[0])
+
+    logits, caches, lengths = sm.prefill(
+        sp, {"frames": jnp.asarray(frames)[None],
+             "tokens": jnp.asarray([prompt], jnp.int32)}, 64)
+    out = [sample(logits, 0)]
+    for t in range(1, n_tokens):
+        logits, caches, lengths = sm.decode_step(
+            sp, jnp.array([[out[-1]]], jnp.int32), caches, lengths)
+        out.append(sample(logits, t))
+    return out
+
+
+def engine_run(sm, sp, jobs, *, chunk_tokens=8, max_tokens=6,
+               temperature=0.0, top_k=0, preempt_every=0, **cfg_over):
+    """Drain [(prompt, frames), ...]; returns (engine, outputs, reqs)."""
+    base = dict(n_slots=2, max_len=64, chunk_tokens=chunk_tokens,
+                page_tokens=8, enc_tokens=ENC_TOKENS, seed=0,
+                prefix_cache=True)
+    base.update(cfg_over)
+    eng = BatchedEngine(sm, sp, ServeConfig(**base))
+    reqs = [eng.submit(np.asarray(p, np.int32), SamplingParams(
+        max_tokens=max_tokens, temperature=temperature, top_k=top_k),
+        frames=f) for p, f in jobs]
+    i = 0
+    while eng.has_work:
+        assert i < 800, "engine wedged"
+        if preempt_every and i % preempt_every == preempt_every - 1:
+            for slot in list(eng._live):
+                assert eng.preempt_slot(slot)
+        eng.step()
+        i += 1
+    return eng, [r.output for r in reqs], reqs
+
+
+class TestEncDecParityWall:
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_greedy_parity_across_chunk_sizes(self, chunk):
+        _, _, _, sm, sp = build_encdec()
+        src = sources()
+        jobs = [(p, src[i % 2]) for i, p in enumerate(PROMPTS)]
+        refs = [dense_reference(sm, sp, p, f, 6, rid=i)
+                for i, (p, f) in enumerate(jobs)]
+        _, out, _ = engine_run(sm, sp, jobs, chunk_tokens=chunk)
+        assert out == refs
+
+    def test_seeded_stochastic_parity(self):
+        _, _, _, sm, sp = build_encdec()
+        src = sources()
+        kw = dict(temperature=0.9, top_k=12)
+        jobs = [(p, src[i % 2]) for i, p in enumerate(PROMPTS)]
+        refs = [dense_reference(sm, sp, p, f, 6, rid=i, **kw)
+                for i, (p, f) in enumerate(jobs)]
+        _, out, _ = engine_run(sm, sp, jobs, **kw)
+        assert out == refs
+
+    def test_warm_encoder_reuse_parity(self):
+        """Admissions AFTER the first over the same source skip ENCODE
+        (page-run mapping, no encoder call) and still match their own
+        dense reference byte-for-byte."""
+        _, _, _, sm, sp = build_encdec()
+        frames = sources()[0]
+        jobs = [(p, frames) for p in PROMPTS]
+        refs = [dense_reference(sm, sp, p, frames, 6, rid=i)
+                for i, p in enumerate(PROMPTS)]
+        eng, out, reqs = engine_run(sm, sp, jobs)
+        assert out == refs
+        st = eng.stats()
+        assert st["encode_ticks"] == 1          # one real encode total
+        assert st["enc_cache_hits"] == len(PROMPTS) - 1
+        assert all(r.enc_reused for r in reqs[1:])
+
+    @pytest.mark.parametrize("kw", [
+        dict(), dict(temperature=0.9, top_k=12),
+    ], ids=["greedy", "stochastic"])
+    def test_preempt_resume_parity(self, kw):
+        """Preemption parks cross-attention page rows alongside self-attn
+        ones; resuming rewrites both tables and decode continues
+        byte-exactly — never re-encoding the source."""
+        _, _, _, sm, sp = build_encdec()
+        src = sources()
+        jobs = [(p, src[i % 2]) for i, p in enumerate(PROMPTS)]
+        base_eng, base, _ = engine_run(sm, sp, jobs, **kw)
+        chaos, out, _ = engine_run(sm, sp, jobs, preempt_every=3, **kw)
+        assert out == base
+        st = chaos.stats()
+        assert st["preempts"] > 0 and st["resumes"] == st["preempts"]
+        # parking never triggered a re-encode
+        assert st["encode_ticks"] == base_eng.stats()["encode_ticks"]
+
+    def test_distinct_sources_are_not_shared(self):
+        """Same prompt over different sources must decode differently —
+        the trie being off for cross models is load-bearing."""
+        _, _, _, sm, sp = build_encdec()
+        a, b = sources()
+        jobs = [(PROMPTS[0], a), (PROMPTS[0], b)]
+        eng, out, _ = engine_run(sm, sp, jobs)
+        assert out[0] == dense_reference(sm, sp, PROMPTS[0], a, 6, rid=0)
+        assert out[1] == dense_reference(sm, sp, PROMPTS[0], b, 6, rid=1)
+        assert eng.stats()["enc_cache_hits"] == 0
+        assert eng.trie is None                 # token trie disabled
+
+
+class TestCrossCacheLivesInPool:
+    def test_zero_dense_cross_rows(self):
+        """Every cross-attention cache leaf is pool-form
+        (L, n_pages, page_tokens, K, hd) — no (n_slots, max_len) rows."""
+        cfg, _, _, sm, sp = build_encdec()
+        eng, _, _ = engine_run(sm, sp, [(PROMPTS[0], sources()[0])])
+        n_slots, max_len = eng.cfg.n_slots, eng.cfg.max_len
+        leaves = jax.tree_util.tree_leaves(eng.caches["cross"])
+        assert leaves, "no cross cache family"
+        for leaf in leaves:
+            assert leaf.ndim == 5
+            assert leaf.shape[0] == cfg.dec_layers
+            assert leaf.shape[1] == eng.xpool.n_pages
+            assert leaf.shape[2] == eng.cfg.page_tokens
+            assert leaf.shape[:2] != (n_slots, max_len)
+
+    def test_cross_pages_refcounted_and_released(self):
+        """After a full drain only the EncoderCache's published entries
+        still hold cross pages; slot references are all gone."""
+        _, _, _, sm, sp = build_encdec()
+        eng, _, _ = engine_run(sm, sp,
+                               [(p, sources()[0]) for p in PROMPTS[:2]])
+        held = eng.enc_cache.held_pages()
+        assert eng.xpool.used_pages == len(set(held))
+        eng.enc_cache.clear()
+        assert eng.xpool.used_pages == 0
+        eng.pool.check()
+        eng.xpool.check()
+
+    def test_stats_reports_both_cache_families(self):
+        _, _, _, sm, sp = build_encdec()
+        eng, _, _ = engine_run(sm, sp, [(PROMPTS[0], sources()[0])])
+        st = eng.stats()
+        fams = st["cache_families"]
+        assert set(fams) == {"self_attn", "cross_attn"}
+        for f in fams.values():
+            assert set(f) == {"pages", "in_use", "utilization"}
+        assert st["encode_ticks"] >= 1
+        assert "enc_cache_hits" in st and "enc_cache_entries" in st
+
+
+class TestEncDecSubmitValidation:
+    def test_frames_required(self):
+        _, _, _, sm, sp = build_encdec()
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=8, page_tokens=8,
+            enc_tokens=ENC_TOKENS))
+        with pytest.raises(ValueError, match="frames"):
+            eng.submit(np.asarray(PROMPTS[0], np.int32),
+                       SamplingParams(max_tokens=2))
+
+    def test_frames_overflow_rejected(self):
+        cfg, _, _, sm, sp = build_encdec()
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=8, page_tokens=8,
+            enc_tokens=ENC_TOKENS))
+        too_long = np.zeros((ENC_TOKENS + 1, cfg.d_model), np.float32)
+        with pytest.raises(ValueError):
+            eng.submit(np.asarray(PROMPTS[0], np.int32),
+                       SamplingParams(max_tokens=2), frames=too_long)
+
+    def test_decoder_only_engine_rejects_frames(self):
+        from test_chunked_prefill import build_serve
+
+        _, sm, sp = build_serve("granite-8b")
+        eng = BatchedEngine(sm, sp, ServeConfig(
+            n_slots=1, max_len=64, chunk_tokens=8))
+        with pytest.raises(ValueError):
+            eng.submit(np.asarray(PROMPTS[0], np.int32),
+                       SamplingParams(max_tokens=2),
+                       frames=np.zeros((4, 8), np.float32))
+
+
+class TestEncDecExportRoundTrip:
+    def test_cross_attn_tiles_roundtrip_bit_exact(self):
+        """Decoder cross-attention (and encoder self-attention) packed
+        tiles reconstruct the master sign structure exactly."""
+        cfg, tm, tp, sm, sp = build_encdec()
+        for path in (("dec", "cross_attn", "wq"), ("enc", "attn", "wk")):
+            wt, st = tp, sp
+            for k in path:
+                wt, st = wt[k], st[k]
+            w, packed = wt["w"], st["tile"]          # (L, out, in) / (L, r, words)
+            spec = cfg.tbn.spec_for(tuple(w.shape[1:]))
+            for layer in range(w.shape[0]):
+                t_ref = tile_vector(w[layer], spec)
+                t_got = unpack_bits(
+                    packed[layer], w.shape[-1]).reshape(-1)
+                np.testing.assert_array_equal(
+                    np.asarray(t_ref), np.asarray(t_got),
+                    err_msg=f"{'/'.join(path)} layer {layer}")
+
+    def test_serve_bytes_smaller_than_masters(self):
+        from repro.serve.weights import serving_bytes
+
+        _, _, tp, _, sp = build_encdec()
+        assert serving_bytes(sp) < serving_bytes(tp) / 4

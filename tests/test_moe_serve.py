@@ -1,0 +1,128 @@
+"""MoE serving parity wall: engine decode == monolithic reference.
+
+The train-path dispatch pads each expert to a capacity that depends on
+the TOTAL token count (``ceil(1.25 * k * tl / e)``), so the same token
+can be dropped under one chunking and kept under another — useless as a
+serving path. SERVE mode swaps in a drop-free fixed-shape dispatch
+(capacity = tl * k, token-major positions, gate-rank-ordered combine;
+``nn/moe.py``), which makes every routed token's math independent of its
+batch neighbors and chunk boundaries. These tests pin the consequence:
+engine tokens are byte-identical to the monolithic prefill+decode
+reference across chunk sizes, greedy and seeded-stochastic, with and
+without forced preemption — and the expert tiles ship as per-expert
+``(E, r, words)`` packed rows that round-trip bit-exactly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.packing import unpack_bits
+from repro.core.tiling import tile_vector
+from repro.serve.engine import BatchedEngine, ServeConfig
+from repro.serve.sampling import SamplingParams
+from test_chunked_prefill import (
+    CHUNKS,
+    PROMPT,
+    build_serve,
+    monolithic_reference,
+)
+
+MOE_ARCHS = ["qwen2-moe-a2.7b", "moonshot-v1-16b-a3b"]
+PROMPTS = [PROMPT, [8, 6, 1, 12, 0], [5, 5, 2, 8]]
+
+
+def engine_run(sm, sp, prompts, *, chunk_tokens=8, max_tokens=6,
+               temperature=0.0, top_k=0, preempt_every=0, **cfg_over):
+    base = dict(n_slots=2, max_len=64, chunk_tokens=chunk_tokens,
+                page_tokens=8, seed=0)
+    base.update(cfg_over)
+    eng = BatchedEngine(sm, sp, ServeConfig(**base))
+    reqs = [eng.submit(np.asarray(p, np.int32), SamplingParams(
+        max_tokens=max_tokens, temperature=temperature, top_k=top_k))
+        for p in prompts]
+    i = 0
+    while eng.has_work:
+        assert i < 800, "engine wedged"
+        if preempt_every and i % preempt_every == preempt_every - 1:
+            for slot in list(eng._live):
+                assert eng.preempt_slot(slot)
+        eng.step()
+        i += 1
+    return eng, [r.output for r in reqs]
+
+
+class TestMoEParityWall:
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_greedy_parity_across_chunk_sizes(self, chunk):
+        cfg, sm, sp = build_serve("qwen2-moe-a2.7b")
+        refs = [monolithic_reference(sm, sp, p, 6, rid=i)
+                for i, p in enumerate(PROMPTS)]
+        _, out = engine_run(sm, sp, PROMPTS, chunk_tokens=chunk)
+        assert out == refs
+
+    def test_seeded_stochastic_parity(self):
+        cfg, sm, sp = build_serve("qwen2-moe-a2.7b")
+        kw = dict(temperature=0.9, top_k=12)
+        refs = [monolithic_reference(sm, sp, p, 6, rid=i, **kw)
+                for i, p in enumerate(PROMPTS)]
+        _, out = engine_run(sm, sp, PROMPTS, **kw)
+        assert out == refs
+
+    @pytest.mark.parametrize("kw", [
+        dict(), dict(temperature=0.9, top_k=12),
+    ], ids=["greedy", "stochastic"])
+    def test_preempt_resume_parity(self, kw):
+        """Forced preemption every 3rd tick changes nothing: the routed
+        expert math sees the same tokens at the same positions after a
+        page-table rewrite + resume."""
+        cfg, sm, sp = build_serve("qwen2-moe-a2.7b")
+        eng, base = engine_run(sm, sp, PROMPTS, **kw)
+        chaos, out = engine_run(sm, sp, PROMPTS, preempt_every=3, **kw)
+        assert out == base
+        st = chaos.stats()
+        assert st["preempts"] > 0 and st["resumes"] == st["preempts"]
+
+    def test_moonshot_engine_smoke(self):
+        """Second MoE config (shared experts + different k/E) drains and
+        matches the reference at one chunk size."""
+        cfg, sm, sp = build_serve("moonshot-v1-16b-a3b")
+        refs = [monolithic_reference(sm, sp, p, 4, rid=i)
+                for i, p in enumerate(PROMPTS[:2])]
+        _, out = engine_run(sm, sp, PROMPTS[:2], max_tokens=4)
+        assert out == refs
+
+
+class TestMoEExportRoundTrip:
+    def test_expert_bank_tiles_are_E_r_words(self):
+        """Expert bank ships one packed (r, words) row block PER EXPERT —
+        per scanned layer the leaf is (L, E, r, words) int32."""
+        cfg, sm, sp = build_serve("qwen2-moe-a2.7b")
+        tile = sp["seg0"]["ffn"]["up"]["tile"]
+        assert tile.shape[1] == cfg.moe.n_experts
+        assert tile.ndim == 4 and tile.dtype == np.int32
+
+    def test_expert_tiles_roundtrip_bit_exact(self):
+        """Unpacking each expert's shipped rows reproduces tile_vector of
+        that expert's master weights exactly — compression is lossless on
+        the sign structure."""
+        import jax.numpy as jnp
+
+        from repro.configs import build_model, get_config
+        from repro.nn import module as mod
+        from repro.nn.context import TRAIN, ModelContext
+
+        cfg, sm, sp = build_serve("qwen2-moe-a2.7b")
+        tm = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN,
+                                           compute_dtype=jnp.float32))
+        tp = mod.init_params(tm.specs(), jax.random.PRNGKey(0))
+        w_bank = tp["seg0"]["ffn"]["up"]["w"]        # (L, E, d_ff, d)
+        packed = sp["seg0"]["ffn"]["up"]["tile"]     # (L, E, r, words)
+        spec = cfg.tbn.spec_for(tuple(w_bank.shape[2:]))
+        for layer in range(w_bank.shape[0]):
+            for e in range(w_bank.shape[1]):
+                t_ref = tile_vector(w_bank[layer, e], spec)
+                t_got = unpack_bits(
+                    packed[layer, e], w_bank.shape[-1]).reshape(-1)
+                np.testing.assert_array_equal(
+                    np.asarray(t_ref), np.asarray(t_got),
+                    err_msg=f"layer {layer} expert {e}")

@@ -1,0 +1,123 @@
+"""ServableModel contract: the explicit model <-> engine surface.
+
+The engine constructor checks the contract (``ensure_servable``) before
+touching anything, so an unsupported model fails with a typed error that
+names what's missing AND the menu of servable families — these tests pin
+that behavior, the per-family probe values, the cache-family
+declarations, and the launch CLI's family dispatch.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.nn.context import SERVE, ModelContext
+from repro.serve.engine import BatchedEngine, ServeConfig
+from repro.serve.servable import (
+    REQUIRED_ATTRS,
+    SERVABLE_FAMILIES,
+    CacheFamily,
+    UnservableModelError,
+    ensure_servable,
+)
+
+
+def serve_model(arch):
+    cfg = get_config(arch).reduced()
+    return cfg, build_model(cfg, ModelContext(
+        policy=cfg.tbn, mode=SERVE, compute_dtype=jnp.float32,
+        use_pallas=False))
+
+
+class TestContract:
+    @pytest.mark.parametrize("arch", [
+        "granite-8b", "qwen2-moe-a2.7b", "mamba2-370m",
+        "recurrentgemma-2b", "seamless-m4t-large-v2",
+    ])
+    def test_repo_models_satisfy_contract(self, arch):
+        _, m = serve_model(arch)
+        assert ensure_servable(m) is m
+
+    def test_probes_decoder_only(self):
+        _, m = serve_model("granite-8b")
+        assert m.has_full_attn and not m.has_recurrent_state
+        assert not m.has_cross_attn
+
+    def test_probes_encdec(self):
+        _, m = serve_model("seamless-m4t-large-v2")
+        assert m.has_full_attn and not m.has_recurrent_state
+        assert m.has_cross_attn
+
+    def test_cache_families_dense(self):
+        _, m = serve_model("granite-8b")
+        fams = m.cache_families()
+        assert fams == (CacheFamily("self_attn", paged=True),)
+
+    def test_cache_families_recurrent(self):
+        _, m = serve_model("mamba2-370m")
+        names = {f.name: f for f in m.cache_families()}
+        assert "recurrent" in names and not names["recurrent"].paged
+
+    def test_cache_families_encdec_cross_is_read_only(self):
+        _, m = serve_model("seamless-m4t-large-v2")
+        names = {f.name: f for f in m.cache_families()}
+        assert names["self_attn"].paged and not names["self_attn"].read_only
+        assert names["cross_attn"].paged and names["cross_attn"].read_only
+
+    def test_unservable_lists_missing_and_menu(self):
+        class NotAModel:
+            pass
+
+        with pytest.raises(UnservableModelError) as ei:
+            ensure_servable(NotAModel())
+        msg = str(ei.value)
+        assert ei.value.missing == REQUIRED_ATTRS
+        # the error is a menu, not just a rejection
+        for fam in SERVABLE_FAMILIES:
+            assert fam in msg
+        assert "cache_families" in msg
+
+    def test_unservable_is_a_type_error(self):
+        assert issubclass(UnservableModelError, TypeError)
+
+    def test_partial_surface_names_only_whats_missing(self):
+        _, m = serve_model("granite-8b")
+
+        class Halfway:
+            # forward everything except the snapshot walkers
+            def __getattr__(self, name):
+                if name in ("snapshot_slot_caches", "restore_slot_caches"):
+                    raise AttributeError(name)
+                return getattr(m, name)
+
+        with pytest.raises(UnservableModelError) as ei:
+            ensure_servable(Halfway())
+        assert set(ei.value.missing) == {
+            "snapshot_slot_caches", "restore_slot_caches"
+        }
+
+    def test_engine_rejects_unservable_model(self):
+        class NotAModel:
+            pass
+
+        with pytest.raises(UnservableModelError):
+            BatchedEngine(NotAModel(), {}, ServeConfig(
+                n_slots=1, max_len=16, chunk_tokens=4))
+
+
+class TestLaunchDispatch:
+    def test_help_documents_family_matrix(self, capsys):
+        from repro.launch.serve import main
+
+        with pytest.raises(SystemExit) as ei:
+            main(["--help"])
+        assert ei.value.code == 0
+        out = capsys.readouterr().out
+        assert "servable model families" in out
+        for fam in SERVABLE_FAMILIES:
+            assert fam in out
+
+    def test_encdec_rejects_http_front_end(self):
+        from repro.launch.serve import main
+
+        with pytest.raises(SystemExit, match="token prompts only"):
+            main(["--arch", "seamless-m4t-large-v2", "--reduced", "--serve"])
