@@ -4,14 +4,23 @@ MACs per conv = weight params x output spatial positions (resolution
 walked analytically per family); binary ops = MACs of binarized layers;
 TBN executes one tile replica and replicates output channels, so tiled
 layers cost MACs / p (the paper's Section 4.1 observation). Units: G-ops.
+
+Besides the analytic paper rows (kind="analytic"), this bench emits one
+MEASURED row (kind="measured"): wall-clock decode-matvec latency of the
+float vs int8 vs xnor compute paths on the same packed tile words, on
+this host (structured jnp backends, use_pallas=False — the Pallas
+kernels replace them op-for-op on TPU). This pins the claim that the
+integer paths do less work per tick, not just fewer analytic ops.
 """
 from __future__ import annotations
 
+import time
 
 from benchmarks.common import fmt_table, save_rows
 from repro.core.policy import tbn_policy
 from repro.models.paper import ResNet
 from repro.nn.context import ModelContext
+import jax
 import jax.numpy as jnp
 
 PAPER = {  # (fp G-flops x32^2 scale aside, binary G-ops, tbn G-ops, saving)
@@ -43,6 +52,42 @@ def conv_macs(model: ResNet, imagenet: bool):
     return out
 
 
+def measured_decode_matvec(quick: bool = False) -> dict:
+    """Best-of-N jitted latency of the three compute paths on the decode
+    matvec shape (m=4 tokens, n_in=2048, r=512 unique tile rows)."""
+    from repro.core.packing import pack_bits
+    from repro.kernels.ops import _dense_unique_local
+    from repro.roofline.analysis import integer_dense_ops
+
+    m, n_in, r = 4, 2048, 512
+    repeats = 5 if quick else 20
+    kx, kt = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, n_in))
+    tiles = jnp.where(jax.random.bernoulli(kt, 0.5, (r, n_in)), 1.0, -1.0)
+    packed = pack_bits(tiles)
+
+    row = dict(kind="measured", model="decode_matvec",
+               m=m, n_in=n_in, r=r)
+    for path in ("float", "int8", "xnor"):
+        fwd = jax.jit(lambda xx, pp, cp=path: _dense_unique_local(
+            xx, pp, n_in=n_in, block_m=128, block_r=256, block_k=1024,
+            use_pallas=False, compute_path=cp))
+        fwd(x, packed).block_until_ready()       # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fwd(x, packed).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        row[f"{path}_us"] = round(1e6 * best, 2)
+        row[f"{path}_int_ops"] = integer_dense_ops(m, n_in, r,
+                                                   compute_path=path)
+    row["int8_speedup_vs_float"] = round(
+        row["float_us"] / row["int8_us"], 3)
+    row["xnor_speedup_vs_float"] = round(
+        row["float_us"] / row["xnor_us"], 3)
+    return row
+
+
 def run(quick: bool = False):
     rows = []
     for depth, p, imagenet, lam in [(18, 4, False, 64_000),
@@ -59,6 +104,7 @@ def run(quick: bool = False):
         key = (f"resnet{depth}", p)
         paper = PAPER[key]
         rows.append(dict(
+            kind="analytic",
             model=f"resnet{depth}" + ("-imagenet" if imagenet else ""),
             p=p,
             fp_gflops=round(32 * 32 * total / 1e9, 2),
@@ -68,9 +114,17 @@ def run(quick: bool = False):
             paper_binary=paper[1], paper_tbn=paper[2],
             paper_saving=f"{paper[1] / paper[2]:.1f}x",
         ))
+    measured = measured_decode_matvec(quick)
+    rows.append(measured)
     save_rows("table2_bitops", rows)
-    print(fmt_table(rows, ["model", "p", "binary_gops", "tbn_gops", "saving",
-                           "paper_binary", "paper_tbn", "paper_saving"]))
+    analytic = [r for r in rows if r["kind"] == "analytic"]
+    print(fmt_table(analytic,
+                    ["model", "p", "binary_gops", "tbn_gops", "saving",
+                     "paper_binary", "paper_tbn", "paper_saving"]))
+    print()
+    print(fmt_table([measured],
+                    ["model", "float_us", "int8_us", "xnor_us",
+                     "int8_speedup_vs_float", "xnor_speedup_vs_float"]))
     return rows
 
 

@@ -1,5 +1,6 @@
 """TBN Pallas TPU kernels (validated in interpret mode on CPU)."""
 from repro.kernels.ops import (
+    FlatTileLayoutError,
     resolve_conv_padding,
     tbn_dense_train,
     tile_construct,
@@ -10,8 +11,16 @@ from repro.kernels.tile_construct import tile_construct_pallas
 from repro.kernels.tiled_conv import tiled_conv_unique
 from repro.kernels.tiled_matmul import tiled_matmul_unique
 from repro.kernels.tiled_matvec import MATVEC_MAX_M, tiled_matvec_unique
+from repro.kernels.tiled_xnor import (
+    COMPUTE_PATHS,
+    quantize_int8,
+    quantize_sign,
+    tiled_int8_matvec_unique,
+    tiled_xnor_matvec_unique,
+)
 
 __all__ = [
+    "FlatTileLayoutError",
     "resolve_conv_padding",
     "tbn_dense_train",
     "tile_construct",
@@ -22,4 +31,9 @@ __all__ = [
     "tiled_matmul_unique",
     "tiled_matvec_unique",
     "MATVEC_MAX_M",
+    "COMPUTE_PATHS",
+    "quantize_int8",
+    "quantize_sign",
+    "tiled_int8_matvec_unique",
+    "tiled_xnor_matvec_unique",
 ]

@@ -24,9 +24,18 @@ Public entry points:
 
 Tile layouts accepted by ``tiled_dense_infer``:
   * flat  (ceil(q/32),) int32 — legacy/fused-train form; requires 32 | n_in
-    on the Pallas path and never engages tensor parallelism.
+    on the Pallas path (enforced — ``FlatTileLayoutError``) and never
+    engages tensor parallelism.
   * rows  (r, ceil(n_in/32)) int32 — the shipped serve form: one packed
     word-padded row per unique weight row, shardable on its leading axis.
+
+Compute paths (``tiled_dense_infer(compute_path=...)``): "float" is the
+byte-parity reference (unpack to ±1, MXU float MACs). "xnor" and "int8"
+quantize the activations and accumulate in the INTEGER domain directly
+against the packed tile words (kernels/tiled_xnor.py) — they engage at
+decode m (<= MATVEC_MAX_M, per shard under tensor parallelism) on the
+row-packed form; larger batches (prefill) fall back to the float path so
+the MXU-fed matmul blocking keeps serving chunked prefill.
 """
 from __future__ import annotations
 
@@ -58,6 +67,29 @@ from repro.kernels.tiled_matvec import (
     sublane_rounded,
     tiled_matvec_unique,
 )
+from repro.kernels.tiled_xnor import (
+    COMPUTE_PATHS,
+    INT8_BLOCK_K,
+    INT8_BLOCK_R,
+    XNOR_BLOCK_R,
+    XNOR_BLOCK_W,
+    int8_matvec_packed,
+    quantize_int8,
+    quantize_sign,
+    tiled_int8_matvec_unique,
+    tiled_xnor_matvec_unique,
+    xnor_matvec_words,
+)
+
+
+class FlatTileLayoutError(ValueError):
+    """Flat-form packed tile fed to a path that needs whole packed rows.
+
+    The flat (ceil(q/32),) layout packs the tile as ONE bit stream; the
+    row-packed Pallas kernels index it as (r, n_in/32) words, which is
+    only the same bits when 32 | n_in. Raised instead of letting
+    ``reshape`` fail with an opaque size mismatch (or worse, silently
+    mis-slice rows on a future refactor)."""
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -73,6 +105,60 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
 # --------------------------------------------------------------------------
 # Inference matmul
 # --------------------------------------------------------------------------
+def _dense_unique_int_local(
+    xm: jax.Array,
+    packed_rows: jax.Array,
+    *,
+    n_in: int,
+    use_pallas: bool,
+    compute_path: str,
+) -> jax.Array:
+    """Integer-domain u = Q(x) . T^T against a row-packed tile slice.
+
+    Quantizes the activation rows (sign-binarize for "xnor", per-row
+    symmetric int8 for "int8"), runs the integer kernel (Pallas) or its
+    packed-word structured twin (pure jnp — non-TPU backends stay in the
+    integer domain too), and rescales: ``u = scale * acc``. The int32
+    accumulator is bit-identical between the two backends and the ref.py
+    oracles, so dispatch parity is exact, not approximate. Runs
+    unchanged per shard under the tensor-parallel wrapper (rows shard on
+    r; every shard sees full activation rows, so per-row quantization is
+    shard-invariant).
+    """
+    m = xm.shape[0]
+    r_loc, words = packed_rows.shape
+    if compute_path == "xnor":
+        xq, scale = quantize_sign(xm, n_in)          # (m, words), (m, 1)
+        if not use_pallas:
+            acc = xnor_matvec_words(xq, packed_rows, n_in=n_in)
+        else:
+            bw = min(XNOR_BLOCK_W, words)
+            br = min(XNOR_BLOCK_R, r_loc)
+            xq_p = _pad_to(
+                _pad_to(xq, 0, sublane_rounded(m, jnp.int32)), 1, bw
+            )
+            tm_p = _pad_to(_pad_to(packed_rows, 0, br), 1, bw)
+            acc = tiled_xnor_matvec_unique(
+                xq_p, tm_p, n_in=n_in, block_r=br, block_w=bw,
+            )[:m, :r_loc]
+    else:  # int8
+        q, scale = quantize_int8(xm, n_in)           # (m, n_in), (m, 1)
+        if not use_pallas:
+            acc = int8_matvec_packed(q, packed_rows, n_in=n_in)
+        else:
+            bk = min(INT8_BLOCK_K, words * 32)
+            br = min(INT8_BLOCK_R, r_loc)
+            q_p = jnp.pad(q, ((0, 0), (0, words * 32 - n_in)))
+            q_p = _pad_to(
+                _pad_to(q_p, 0, sublane_rounded(m, jnp.int8)), 1, bk
+            )
+            tm_p = _pad_to(_pad_to(packed_rows, 0, br), 1, bk // 32)
+            acc = tiled_int8_matvec_unique(
+                q_p, tm_p, r=tm_p.shape[0], block_r=br, block_k=bk,
+            )[:m, :r_loc]
+    return scale * acc.astype(jnp.float32)
+
+
 def _dense_unique_local(
     xm: jax.Array,
     packed_rows: jax.Array,
@@ -82,6 +168,7 @@ def _dense_unique_local(
     block_m: int,
     block_r: int,
     block_k: int,
+    compute_path: str = "float",
 ) -> jax.Array:
     """u = x @ T^T against a row-packed tile slice.
 
@@ -89,9 +176,18 @@ def _dense_unique_local(
     (rows pad to whole words: pad bits unpack to -1 but only ever multiply
     zero-padded activation columns). Runs unchanged per shard under the
     tensor-parallel wrapper — r_loc is then r/TP.
+
+    ``compute_path`` "xnor"/"int8" routes decode-sized batches
+    (m <= MATVEC_MAX_M) to the integer-domain kernels; bigger batches
+    keep the float matmul blocking (prefill stays MXU-fed).
     """
     m = xm.shape[0]
     r_loc, words = packed_rows.shape
+    if compute_path != "float" and m <= MATVEC_MAX_M:
+        return _dense_unique_int_local(
+            xm, packed_rows, n_in=n_in, use_pallas=use_pallas,
+            compute_path=compute_path,
+        )
     if not use_pallas:
         tm = unpack_bits(packed_rows, n_in, dtype=xm.dtype)  # (r_loc, n_in)
         return jnp.einsum("mk,rk->mr", xm, tm)
@@ -141,6 +237,7 @@ def tiled_dense_infer(
     block_m: int = 128,
     block_r: int = 128,
     block_k: int = 512,
+    compute_path: str = "float",
 ) -> jax.Array:
     """y = x @ W_hat^T from the shipped representation.
 
@@ -152,7 +249,20 @@ def tiled_dense_infer(
     rows shard over the ``tile_rows`` axis, each shard runs the same
     kernel on r/TP rows, and the (m, p, r) output stays sharded on its
     unique-row axis until the caller's reshape (DESIGN.md §5).
+
+    ``compute_path`` (see module docstring): "float" (default, byte-
+    parity reference) | "int8" | "xnor". The integer paths quantize the
+    activations, so outputs are approximate w.r.t. the float path — the
+    exactness contract moves to the integer accumulator (bit-identical
+    to the ref.py oracles). They apply at decode m on row-packed (or
+    Pallas-reshaped flat) tiles; elsewhere the call silently keeps the
+    float path rather than failing mid-model.
     """
+    if compute_path not in COMPUTE_PATHS:
+        raise ValueError(
+            f"unknown compute_path {compute_path!r}: expected one of "
+            f"{COMPUTE_PATHS}"
+        )
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     n_out, n_in = spec.shape[0], spec.n // spec.shape[0]
@@ -167,11 +277,20 @@ def tiled_dense_infer(
             t = unpack_bits(packed, spec.q, dtype=x.dtype)
             y = tiled_matmul_reference(xm, t, alpha, spec)
             return y.reshape(*lead, n_out).astype(x.dtype)
-        packed = packed.reshape(r, n_in // 32)  # flat form: needs 32 | n_in
+        if n_in % 32:
+            raise FlatTileLayoutError(
+                f"flat-form packed tile cannot be viewed as packed rows: "
+                f"n_in={n_in} is not a multiple of 32 (spec.shape="
+                f"{spec.shape}), so row boundaries fall mid-word. Ship "
+                f"the row-packed (r, ceil(n_in/32)) serve form (each row "
+                f"padded to whole words) for the Pallas path."
+            )
+        packed = packed.reshape(r, n_in // 32)
 
     local = functools.partial(
         _dense_unique_local, n_in=n_in, use_pallas=use_pallas,
         block_m=block_m, block_r=block_r, block_k=block_k,
+        compute_path=compute_path,
     )
     tp = tile_sharding(r) if row_form else None
     if tp is not None:

@@ -84,6 +84,44 @@ def tiled_matvec_unique_ref(
     return x[:, :n_in].astype(jnp.float32) @ t.T
 
 
+def tiled_xnor_matvec_ref(
+    packed_x: jax.Array, packed_rows: jax.Array, *, n_in: int
+) -> jax.Array:
+    """Oracle for the XNOR decode matvec — INTEGER-exact ground truth.
+
+    packed_x (m, W) int32 sign-packed activation words (pad bits 0);
+    packed_rows (r, W) int32 row-packed tile words (pad bits 0). Returns
+    the (m, r) int32 ±1 dot over the first n_in bit positions:
+    ``n_in - 2 * popcount(x XOR w)`` — pad bits of both operands are 0,
+    so their XOR never contributes. Deliberately uses
+    ``jax.lax.population_count`` so the kernel's SWAR popcount is
+    validated against an independent implementation, bit for bit.
+    """
+    xo = jnp.bitwise_xor(
+        packed_x.astype(jnp.uint32)[:, None, :],
+        packed_rows.astype(jnp.uint32)[None, :, :],
+    )
+    pop = jax.lax.population_count(xo).astype(jnp.int32).sum(axis=-1)
+    return jnp.int32(n_in) - 2 * pop
+
+
+def tiled_int8_matvec_ref(
+    q: jax.Array, packed_rows: jax.Array, *, n_in: int
+) -> jax.Array:
+    """Oracle for the int8 x binary decode matvec — INTEGER-exact.
+
+    q (m, K >= n_in) int8; packed_rows (r, ceil(n_in/32)) int32. Unpacks
+    the rows to ±1 **int32** and contracts in the integer domain — the
+    (m, r) int32 result is the exact accumulator the kernel must hit
+    (the kernel's ``2*(q @ bits) - rowsum`` fold is the same integer).
+    """
+    t = unpack_bits(packed_rows, n_in, dtype=jnp.int32)  # (r, n_in) ±1
+    return jax.lax.dot_general(
+        q[:, :n_in].astype(jnp.int32), t,
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32,
+    )
+
+
 def tiled_conv_dense_weight(
     packed: jax.Array, alpha: jax.Array, spec: TileSpec, dtype=jnp.float32
 ) -> jax.Array:

@@ -28,7 +28,6 @@ LANE_BITS = 32
 
 def _construct_kernel(w_ref, a_ref, packed_ref, alpha_ref, *, bq: int):
     qi = pl.program_id(0)
-    p = w_ref.shape[0]
 
     w = w_ref[...]  # (p, bq)
     s = jnp.sum(w.astype(jnp.float32), axis=0)  # (bq,)

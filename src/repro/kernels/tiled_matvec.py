@@ -44,10 +44,33 @@ DECODE_BLOCK_R = 256
 DECODE_BLOCK_K = 1024
 
 
+# Smallest second-to-last dim a TPU tile supports, per dtype: 4-byte
+# dtypes tile at (8, 128), 2-byte at (16, 128), 1-byte at (32, 128).
+# An EXPLICIT table — the old `8 if f32 else 16` silently mis-rounded
+# int8 (which needs 32 sublanes) and any other non-f32 dtype.
+_SUBLANE_MULT = {
+    "float32": 8, "int32": 8, "uint32": 8,
+    "bfloat16": 16, "float16": 16, "int16": 16, "uint16": 16,
+    "int8": 32, "uint8": 32, "float8_e4m3fn": 32, "float8_e5m2": 32,
+}
+
+
 def sublane_rounded(m: int, dtype) -> int:
-    """Round a decode batch up to the dtype's sublane multiple — the
-    smallest second-to-last dim a TPU tile supports (f32: 8, bf16: 16)."""
-    mult = 8 if dtype == jnp.float32 else 16
+    """Round a decode batch up to the dtype's TPU sublane multiple.
+
+    Raises a loud ValueError for dtypes without an entry rather than
+    guessing — a wrong sublane multiple produces a mis-shaped m block
+    that Mosaic rejects (or worse, pads wastefully) far from here.
+    """
+    name = jnp.dtype(dtype).name
+    mult = _SUBLANE_MULT.get(name)
+    if mult is None:
+        raise ValueError(
+            f"no TPU sublane rule for dtype {name!r} — known dtypes: "
+            f"{sorted(_SUBLANE_MULT)}. Add an explicit entry to "
+            f"_SUBLANE_MULT (tiled_matvec.py) for the new dtype's tile "
+            f"shape instead of letting callers guess."
+        )
     return -(-m // mult) * mult
 
 

@@ -129,6 +129,14 @@ def main(argv=None):
                     help="distinct synthetic source clips cycled over "
                          "the batch (encdec family; >1 exercises "
                          "encoder-output reuse)")
+    ap.add_argument("--compute-path", default="float",
+                    choices=["float", "int8", "xnor"],
+                    help="dense serve compute: float (byte-parity "
+                         "reference), int8 (quantized activations, "
+                         "integer MACs) or xnor (sign-binarized "
+                         "activations, XNOR+popcount on the packed tile "
+                         "words) — the integer paths apply to decode "
+                         "ticks; outputs are approximate vs float")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=None,
                     help="engine-default top-k (per-request params override)")
@@ -191,7 +199,12 @@ def main(argv=None):
 
     t_model = build_model(cfg, ModelContext(policy=cfg.tbn, mode=TRAIN))
     s_model = build_model(cfg, ModelContext(policy=cfg.tbn, mode=SERVE,
-                                            use_pallas=False))
+                                            use_pallas=False,
+                                            compute_path=args.compute_path))
+    if args.compute_path != "float":
+        print(f"compute path: {args.compute_path} (decode ticks quantize "
+              f"activations and accumulate on the packed tile words; "
+              f"outputs are approximate vs --compute-path float)")
     params = mod.init_params(t_model.specs(), jax.random.PRNGKey(args.seed))
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         step, restored = restore_into(params, args.ckpt_dir)
@@ -220,7 +233,8 @@ def main(argv=None):
                     max_queued=args.max_queued if args.serve else None,
                     priorities=args.priorities or args.preempt,
                     preempt=args.preempt,
-                    default_priority=args.default_priority),
+                    default_priority=args.default_priority,
+                    compute_path=args.compute_path),
         mesh=mesh,
     )
     if args.serve:

@@ -211,7 +211,6 @@ class Block:
 
     def decode_step(self, params, x, cache, *, lengths,
                     page_table=None, active=None):
-        aux = None
         h = self.norm1(params["norm1"], x)
         if self.kind == "attn":
             window = self.cfg.window

@@ -22,11 +22,25 @@ class ModelContext:
     param_dtype: object = jnp.float32
     compute_dtype: object = jnp.bfloat16
     use_pallas: Optional[bool] = None      # None = auto (TPU only)
+    compute_path: str = "float"            # serve-mode dense compute:
+    # "float" (byte-parity reference) | "int8" | "xnor" — the integer
+    # paths quantize activations and accumulate against the packed tile
+    # words at decode m (kernels/tiled_xnor.py); per-layer knob read by
+    # each tiled Dense at apply time
     fused_train: bool = False              # use the fused construct kernel
     fsdp_weights: bool = False             # gather effective weights at use
     ledger: Optional[LayerLedger] = None
 
     def __post_init__(self):
+        # deferred import: kernels pulls in the Pallas modules, which the
+        # context (a build-time dataclass) shouldn't load at import time
+        from repro.kernels.tiled_xnor import COMPUTE_PATHS
+
+        if self.compute_path not in COMPUTE_PATHS:
+            raise ValueError(
+                f"unknown compute_path {self.compute_path!r}: expected "
+                f"one of {COMPUTE_PATHS}"
+            )
         if self.ledger is None:
             self.ledger = LayerLedger(self.policy)
 

@@ -180,6 +180,7 @@ class Dense:
                 params["alpha"],
                 self.spec,
                 use_pallas=self.ctx.use_pallas,
+                compute_path=self.ctx.compute_path,
             )
         elif self.spec is not None:  # unaligned: documented dense fallback
             t = unpack_bits(params["tile"], self.spec.q, dtype=cd)

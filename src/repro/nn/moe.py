@@ -309,7 +309,6 @@ class MoE:
         are n_slots * chunk at most), expert banks reconstructed from
         their packed (E, r, words) tiles."""
         b, s, d = x.shape
-        cd = self.ctx.compute_dtype
         tl = b * s
         xg = x.reshape(tl, d)
 
@@ -349,7 +348,6 @@ class MoE:
         if self.ctx.mode == SERVE:
             return self._serve_call(params, x)
         b, s, d = x.shape
-        cd = self.ctx.compute_dtype
         t_tokens = b * s
         # Token-parallel MoE: dispatch groups shard over EVERY mesh axis and
         # the whole layer (routing, dispatch, expert einsums, combine) runs

@@ -48,7 +48,6 @@ def _type_bytes(type_str: str) -> int:
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Per-op-kind transferred bytes (per device) from partitioned HLO."""
     out: Dict[str, float] = {}
-    done_skip = 0
     for line in hlo_text.splitlines():
         if "-done(" in line:
             continue  # async pair: count the -start only
@@ -64,14 +63,24 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
 
 @dataclasses.dataclass
 class RooflineTerms:
-    flops: float                  # per-device
+    flops: float                  # per-device float ops
     bytes_hbm: float              # per-device
     bytes_coll: float             # per-device
     coll_breakdown: Dict[str, float]
+    int_ops: float = 0.0          # per-device INTEGER-domain ops (int8
+    # MACs / XNOR-popcount bit positions) — HLO cost_analysis reports
+    # integer dots and bitwise work as zero FLOPs, so the integer
+    # compute paths would otherwise look free; callers attach the
+    # analytic count (``integer_dense_ops``) via ``analyze_compiled``'s
+    # int_ops argument or construct the terms directly
 
     @property
     def t_compute(self) -> float:
         return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_int(self) -> float:
+        return self.int_ops / hw.PEAK_OPS_INT8
 
     @property
     def t_memory(self) -> float:
@@ -85,6 +94,7 @@ class RooflineTerms:
     def dominant(self) -> str:
         terms = {
             "compute": self.t_compute,
+            "int": self.t_int,
             "memory": self.t_memory,
             "collective": self.t_collective,
         }
@@ -92,14 +102,17 @@ class RooflineTerms:
 
     @property
     def t_bound(self) -> float:
-        return max(self.t_compute, self.t_memory, self.t_collective)
+        return max(self.t_compute, self.t_int, self.t_memory,
+                   self.t_collective)
 
     def as_dict(self) -> dict:
         return dict(
             flops=self.flops,
+            int_ops=self.int_ops,
             bytes_hbm=self.bytes_hbm,
             bytes_coll=self.bytes_coll,
             t_compute=self.t_compute,
+            t_int=self.t_int,
             t_memory=self.t_memory,
             t_collective=self.t_collective,
             dominant=self.dominant,
@@ -107,7 +120,40 @@ class RooflineTerms:
         )
 
 
-def analyze_compiled(compiled) -> RooflineTerms:
+def integer_dense_ops(
+    m: int, n_in: int, r: int, compute_path: str = "xnor"
+) -> float:
+    """Analytic integer-op count for one tiled dense apply (u = x . T^T).
+
+    HLO cost_analysis counts these as zero FLOPs, so the dry-run/roofline
+    needs the analytic number:
+
+    * ``int8``: 2 * m * n_in * r — one int8 MAC per (row, bit) pair,
+      MAC = multiply + add.
+    * ``xnor``: each of the m*r outputs reads ceil(n_in/32) packed words
+      at ~2 word ops each (XOR + popcount); one 32-lane word op covers
+      32 bit positions, so the count is normalized to MAC-equivalents at
+      the int8 rate: 2 * m * r * ceil(n_in/32).
+
+    ``float`` contributes nothing here (its MACs already land in HLO
+    flops).
+    """
+    if compute_path == "int8":
+        return 2.0 * m * n_in * r
+    if compute_path == "xnor":
+        return 2.0 * m * r * ((n_in + 31) // 32)
+    if compute_path == "float":
+        return 0.0
+    raise ValueError(f"unknown compute_path {compute_path!r}")
+
+
+def analyze_compiled(compiled, int_ops: float = 0.0) -> RooflineTerms:
+    """Roofline terms from a compiled artifact.
+
+    ``int_ops`` attaches the analytic integer-op count (see
+    ``integer_dense_ops``) for programs using the integer compute paths
+    — cost_analysis reports those ops as zero FLOPs.
+    """
     from repro.compat import cost_analysis_dict
 
     cost = cost_analysis_dict(compiled)
@@ -123,6 +169,7 @@ def analyze_compiled(compiled) -> RooflineTerms:
         bytes_hbm=nbytes,
         bytes_coll=sum(coll.values()),
         coll_breakdown=coll,
+        int_ops=int_ops,
     )
 
 
@@ -139,6 +186,7 @@ def combine_extrapolated(
         bytes_hbm=add(base.bytes_hbm, delta.bytes_hbm),
         bytes_coll=add(base.bytes_coll, delta.bytes_coll),
         coll_breakdown=coll,
+        int_ops=add(base.int_ops, delta.int_ops),
     )
 
 
@@ -150,6 +198,7 @@ def subtract(a: RooflineTerms, b: RooflineTerms) -> RooflineTerms:
         bytes_hbm=max(0.0, a.bytes_hbm - b.bytes_hbm),
         bytes_coll=max(0.0, a.bytes_coll - b.bytes_coll),
         coll_breakdown=coll,
+        int_ops=max(0.0, a.int_ops - b.int_ops),
     )
 
 

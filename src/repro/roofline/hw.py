@@ -1,5 +1,9 @@
 """TPU v5e hardware constants (per assignment)."""
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+PEAK_OPS_INT8 = 394e12        # int8 MAC-op/s per chip (2x the bf16 MXU
+# rate — the integer compute paths' MACs; XNOR word ops are charged at
+# this rate too after the 32-bits-per-word conversion in
+# roofline.analysis.integer_dense_ops)
 HBM_BW = 819e9                # bytes/s per chip
 ICI_BW = 50e9                 # bytes/s per link
 HBM_BYTES = 16 * 2**30        # 16 GiB per chip

@@ -373,6 +373,12 @@ class ServeConfig:
     # default = (n_slots + 1) runs so one EncoderCache entry can stay
     # warm beside a full house of live slots
     enc_cache_entries: int = 128        # EncoderCache entry cap (LRU)
+    compute_path: str = "float"         # dense serve compute: "float"
+    # (byte-parity reference) | "int8" | "xnor" — the integer paths
+    # quantize decode-tick activations and accumulate on the packed tile
+    # words (kernels/tiled_xnor.py). The MODEL must be built with the
+    # matching ModelContext.compute_path (launch/serve.py --compute-path
+    # sets both); the engine records it here for validation and /stats.
 
     def __post_init__(self):
         """Fail fast on an impossible engine shape.
@@ -459,6 +465,13 @@ class ServeConfig:
         if self.enc_cache_entries < 1:
             raise ValueError(
                 f"enc_cache_entries must be >= 1: {self.enc_cache_entries}"
+            )
+        from repro.kernels.tiled_xnor import COMPUTE_PATHS
+
+        if self.compute_path not in COMPUTE_PATHS:
+            raise ValueError(
+                f"unknown compute_path {self.compute_path!r}: expected "
+                f"one of {COMPUTE_PATHS}"
             )
 
 
@@ -1532,6 +1545,7 @@ class BatchedEngine:
         s["trie_nodes"] = len(self.trie) if self.trie is not None else 0
         s["evictions"] = self.trie.evictions if self.trie is not None else 0
         s["queue_depth"] = self._queue.qsize()
+        s["compute_path"] = self.cfg.compute_path
         s["live_slots"] = len(self._live)
         s["free_slots"] = len(self._free)
         s["parked"] = len(self._parked)
