@@ -1,8 +1,11 @@
 """Shared benchmark utilities: ledgers, short synthetic training runs."""
 from __future__ import annotations
 
+import functools
 import json
 import pathlib
+import platform
+import subprocess
 import time
 from typing import Dict, List
 
@@ -117,9 +120,34 @@ def measure_serve_delta(
     return out
 
 
+@functools.lru_cache(maxsize=1)
+def provenance() -> dict:
+    """Where did these numbers come from — stamped into every saved bench
+    row so a JSON file found on disk six months later answers "which
+    commit, which backend, which host" by itself. Cached once per
+    process: the answer cannot change mid-run."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parents[1],
+            capture_output=True, text=True, timeout=5,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        commit = "unknown"
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "python": platform.python_version(),
+        "commit": commit,
+    }
+
+
 def save_rows(name: str, rows: List[dict]):
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    prov = provenance()
+    stamped = [{**r, "provenance": prov} for r in rows]
+    (RESULTS / f"{name}.json").write_text(json.dumps(stamped, indent=1))
 
 
 def fmt_table(rows: List[dict], cols: List[str]) -> str:

@@ -205,3 +205,125 @@ def summarize_by_class(results: Sequence[dict]) -> dict:
                         if (r.get("priority") or "default") == cls])
         for cls in classes
     }
+
+
+# ---------------------------------------------------------------------------
+# /metrics scraping: server-side telemetry beside the client-side numbers
+# ---------------------------------------------------------------------------
+
+# every telemetry-enabled server must expose these families; the load
+# harness asserts their presence so a silent registry regression fails
+# the bench, not a dashboard three weeks later
+REQUIRED_METRICS = (
+    "serve_requests_submitted_total",
+    "serve_requests_finished_total",
+    "serve_tokens_total",
+    "serve_request_ttft_seconds",
+    "serve_request_itl_seconds",
+    "serve_request_e2e_seconds",
+    "serve_tick_seconds",
+    "serve_tick_phase_seconds",
+    "serve_retraces_total",
+    "serve_queue_depth",
+    "serve_live_slots",
+    "serve_http_request_seconds",
+    "serve_streams_opened_total",
+)
+
+
+def parse_metrics(text: str) -> dict:
+    """Prometheus text exposition -> ``{name{labels}: float}`` plus the
+    family name set. Minimal by design (the serving registry emits a
+    known subset of the format); unparsable lines raise — a malformed
+    exposition is a bug, not noise."""
+    samples: dict = {}
+    families = set()
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            families.add(line.split()[2])
+            continue
+        if line.startswith("#"):
+            continue
+        key, _, val = line.rpartition(" ")
+        if not key:
+            raise ValueError(f"malformed exposition line: {line!r}")
+        samples[key] = float(val)
+    return {"samples": samples, "families": families}
+
+
+async def scrape_metrics(host: str, port: int) -> dict:
+    """GET /metrics from a live server, parsed."""
+    from repro.serve.client import request_text
+
+    status, text = await request_text(host, port, "GET", "/metrics")
+    if status != 200:
+        raise RuntimeError(f"/metrics returned {status}: {text[:200]}")
+    return parse_metrics(text)
+
+
+def check_metrics(before: dict, after: dict) -> dict:
+    """Assert the telemetry contract across a load run: every required
+    family exists, counters are monotonic, and the run actually moved
+    the token/tick counters. Returns the counter deltas."""
+    for name in REQUIRED_METRICS:
+        if name not in after["families"]:
+            raise AssertionError(
+                f"required metric family missing from /metrics: {name}")
+    deltas = {}
+    for key, v_after in after["samples"].items():
+        base = key.split("{")[0]
+        if not (base.endswith("_total") or base.endswith("_count")
+                or base.endswith("_bucket") or base.endswith("_sum")):
+            continue                     # gauges may move either way
+        v_before = before["samples"].get(key)
+        if v_before is not None and v_after < v_before - 1e-9:
+            raise AssertionError(
+                f"counter went backwards: {key} {v_before} -> {v_after}")
+        deltas[key] = v_after - (v_before or 0.0)
+    if deltas.get("serve_tokens_total", 0) <= 0:
+        raise AssertionError(
+            "load run emitted no tokens per server-side telemetry")
+    if deltas.get("serve_tick_seconds_count", 0) <= 0:
+        raise AssertionError(
+            "load run recorded no engine ticks per server-side telemetry")
+    return deltas
+
+
+def server_quantiles(metrics: dict) -> dict:
+    """Bucket-interpolated p50/p99 (ms) for the latency histograms in a
+    parsed /metrics scrape — the server-side column ``summarize`` rows
+    carry beside the client-measured numbers."""
+    out = {}
+    for family, key in (("serve_request_ttft_seconds", "server_ttft"),
+                        ("serve_request_itl_seconds", "server_itl"),
+                        ("serve_tick_seconds", "server_tick")):
+        buckets = []
+        for name, v in metrics["samples"].items():
+            if name.startswith(family + "_bucket{"):
+                le = name.split('le="')[1].split('"')[0]
+                buckets.append((float("inf") if le == "+Inf"
+                                else float(le), v))
+        buckets.sort()
+        total = buckets[-1][1] if buckets else 0
+        if not total:
+            out[f"{key}_p50_ms"] = out[f"{key}_p99_ms"] = None
+            continue
+        for q in (0.50, 0.99):
+            target = q * total
+            prev_edge, prev_cum = 0.0, 0.0
+            est = buckets[-2][0] if len(buckets) > 1 else 0.0
+            for edge, cum in buckets:
+                if cum >= target:
+                    if edge == float("inf"):
+                        est = prev_edge
+                    else:
+                        frac = ((target - prev_cum)
+                                / max(cum - prev_cum, 1e-12))
+                        est = prev_edge + frac * (edge - prev_edge)
+                    break
+                prev_edge, prev_cum = edge, cum
+            out[f"{key}_p{int(q * 100)}_ms"] = round(1e3 * est, 3)
+    return out

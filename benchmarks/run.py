@@ -16,7 +16,7 @@ import json
 import time
 import traceback
 
-from benchmarks.common import RESULTS
+from benchmarks.common import RESULTS, provenance
 
 BENCHES = [
     "table1_cnn",
@@ -28,6 +28,7 @@ BENCHES = [
     "table7_inference_memory",
     "table7_load_serving",
     "table7_model_families",
+    "table7_telemetry",
     "fig6_layer_size",
     "fig7_hparams",
 ]
@@ -48,7 +49,7 @@ def main() -> None:
     for name in names:
         print(f"\n=== {name} ===", flush=True)
         t0 = time.time()
-        rec = dict(name=name, quick=args.quick)
+        rec = dict(name=name, quick=args.quick, provenance=provenance())
         try:
             # import inside the try: a bench module that fails at import
             # is a recorded failure, not an orchestrator crash

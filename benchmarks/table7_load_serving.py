@@ -41,8 +41,11 @@ import jax.numpy as jnp
 from benchmarks.common import fmt_table, save_rows
 from benchmarks.loadgen import (
     LoadSpec,
+    check_metrics,
     generate,
     replay,
+    scrape_metrics,
+    server_quantiles,
     summarize,
     summarize_by_class,
 )
@@ -83,13 +86,21 @@ async def _run_variant(aot: bool, spec: LoadSpec, *, n_slots, max_len) -> dict:
     port = await srv.start(aot=aot)
     startup_s = time.perf_counter() - t0
     try:
+        # scrape /metrics around the replay: the telemetry contract
+        # (required families present, counters monotonic) is checked on
+        # every bench run, and the server-side histogram quantiles land
+        # beside the client-measured ones in the same row
+        before = await scrape_metrics("127.0.0.1", port)
         results = await replay("127.0.0.1", port, spec, schedule)
+        after = await scrape_metrics("127.0.0.1", port)
+        check_metrics(before, after)
         stats = srv.stats()
     finally:
         await srv.close()
     row = dict(variant=f"aot={'on' if aot else 'off'}",
                qps=spec.qps, startup_s=round(startup_s, 2))
     row.update(summarize(results))
+    row.update(server_quantiles(after))
     first = min((r for r in results if r["ttft_s"] is not None),
                 key=lambda r: r["index"], default=None)
     row["first_ttft_ms"] = (round(1e3 * first["ttft_s"], 2)
@@ -196,6 +207,7 @@ def run(quick: bool = False):
         "variant", "qps", "requests", "completed", "rejected",
         "first_ttft_ms", "ttft_p50_ms", "ttft_p99_ms",
         "itl_p50_ms", "itl_p99_ms", "sustained_tok_s",
+        "server_ttft_p99_ms", "server_tick_p50_ms",
         "peak_queue_depth", "page_utilization", "preempt_free_tick_rate",
     ]))
     print(fmt_table(rows[2:], [

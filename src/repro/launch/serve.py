@@ -169,7 +169,29 @@ def main(argv=None):
                     default=None,
                     help="AOT-compile the tick executables at startup "
                          "(default: on with --serve, off otherwise)")
+    ap.add_argument("--telemetry", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serving telemetry: metric registry, request "
+                         "spans, tick phase timing, retrace detector "
+                         "(--no-telemetry for overhead-sensitive runs; "
+                         "tokens are byte-identical either way)")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="print a one-line telemetry report every S "
+                         "seconds (--serve mode; 0 disables)")
+    ap.add_argument("--trace-log", default=None, metavar="FILE",
+                    help="drain the structured trace-event ring "
+                         "(submit/admit/preempt/resume/finish/retrace) "
+                         "to FILE as JSON lines at shutdown")
+    ap.add_argument("--trace-events", type=int, default=4096,
+                    help="trace-event ring capacity (with --trace-log; "
+                         "oldest events drop past it)")
     args = ap.parse_args(argv)
+    if args.stats_interval < 0:
+        raise SystemExit(
+            f"--stats-interval must be >= 0: {args.stats_interval}")
+    if args.trace_log and not args.telemetry:
+        raise SystemExit("--trace-log requires --telemetry (the ring is "
+                         "fed from the telemetry call sites)")
     mesh = parse_mesh_arg(args.mesh)
     if args.shared_prefix + 12 > args.max_len:
         # 12 = the max random tail length below; fail before minutes of
@@ -234,9 +256,22 @@ def main(argv=None):
                     priorities=args.priorities or args.preempt,
                     preempt=args.preempt,
                     default_priority=args.default_priority,
-                    compute_path=args.compute_path),
+                    compute_path=args.compute_path,
+                    telemetry=args.telemetry,
+                    trace_events=(args.trace_events if args.trace_log
+                                  else 0)),
         mesh=mesh,
     )
+
+    def _flush_trace_log():
+        if args.trace_log and eng.tel is not None and eng.tel.ring:
+            n = eng.tel.ring.write_jsonl(args.trace_log)
+            dropped = eng.tel.ring.dropped
+            print(f"trace log: {n} events -> {args.trace_log}"
+                  + (f" ({dropped} older events dropped by the "
+                     f"{eng.cfg.trace_events}-event ring)" if dropped
+                     else ""))
+
     if args.serve:
         import asyncio
 
@@ -250,9 +285,11 @@ def main(argv=None):
         try:
             asyncio.run(run_server(
                 eng, ServerConfig(host=args.host, port=args.port),
-                aot=aot, ready=_ready))
+                aot=aot, ready=_ready,
+                stats_interval=args.stats_interval))
         except KeyboardInterrupt:
             pass
+        _flush_trace_log()
         print("server closed")
         return []
     if aot:
@@ -345,6 +382,16 @@ def main(argv=None):
               f"{st['preempted_tokens']} context tokens parked, "
               f"preempt-free tick rate {st['preempt_free_tick_rate']:.2f}; "
               f"TTFT {per_cls or 'n/a'}")
+    if "latency" in st:
+        lat = st["latency"]
+        print("telemetry: "
+              + " ".join(f"{k} p50={v['p50']}ms p99={v['p99']}ms"
+                         for k, v in lat.items()
+                         if v["count"] and k in ("ttft_ms", "itl_ms",
+                                                 "tick_ms"))
+              + (f" | retraces={st['retraces']}" if st.get("retraces")
+                 else ""))
+    _flush_trace_log()
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
     return reqs

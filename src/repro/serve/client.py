@@ -80,6 +80,27 @@ async def request_json(host: str, port: int, method: str, path: str,
             pass
 
 
+async def request_text(host: str, port: int, method: str = "GET",
+                       path: str = "/metrics") -> Tuple[int, str]:
+    """One plain-text round-trip — the ``/metrics`` scrape (Prometheus
+    text exposition, not JSON). Returns ``(status, body_text)``; error
+    statuses return their JSON error body as raw text."""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(_request_bytes(method, path, None))
+        await writer.drain()
+        status, headers = await _read_head(reader)
+        n = int(headers.get("content-length", 0) or 0)
+        raw = await reader.readexactly(n) if n else await reader.read()
+        return status, raw.decode()
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except ConnectionError:
+            pass
+
+
 async def sse_generate(
     host: str, port: int, payload: dict, *,
     read_delay: float = 0.0,

@@ -112,6 +112,10 @@ class DetokenizeWorker:
         self.backlog: "queue.Queue[object]" = queue.Queue()
         self._streams: Dict[object, StreamDetok] = {}
         self._counts: Dict[object, int] = {}
+        # high-water mark of the backlog, tracked at push (the producer
+        # side): the worst tick-thread-to-text lag the process has seen —
+        # the telemetry gauge reads it alongside the live ``depth``
+        self.peak_depth = 0
         self._thread = threading.Thread(
             target=self._run, name="detokenize-backlog", daemon=True)
         self._closed = False
@@ -120,6 +124,9 @@ class DetokenizeWorker:
     # ---- producer side (engine tick thread) ---------------------------
     def push(self, stream_id, token: int):
         self.backlog.put((stream_id, int(token)))
+        d = self.backlog.qsize()
+        if d > self.peak_depth:
+            self.peak_depth = d
 
     def finish(self, stream_id, reason: str):
         self.backlog.put((stream_id, _SENTINEL, reason))

@@ -82,6 +82,8 @@ import dataclasses
 import hashlib
 import itertools
 import threading
+import time
+import warnings
 from typing import Callable, Dict, List, Optional, Union
 
 import jax
@@ -93,6 +95,7 @@ from repro.serve.kvpool import KVPool
 from repro.serve.prefix import EncoderCache, PrefixTrie
 from repro.serve.sampling import SamplingParams, sample_logits_batch
 from repro.serve.servable import ensure_servable
+from repro.serve.telemetry import PARKED, EngineTelemetry, RequestSpan
 
 PREFILL = "prefill"
 DECODE = "decode"
@@ -334,6 +337,8 @@ class Request:
     # EncoderCache key (two requests over the same source share pages)
     enc_reused: bool = False             # admission skipped ENCODE via a
     # warm EncoderCache hit (the encdec analogue of prefix_hit_tokens)
+    span: Optional[RequestSpan] = None   # wall-clock lifecycle span
+    # (telemetry on only; observation-only — never read by the scheduler)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -379,6 +384,14 @@ class ServeConfig:
     # words (kernels/tiled_xnor.py). The MODEL must be built with the
     # matching ModelContext.compute_path (launch/serve.py --compute-path
     # sets both); the engine records it here for validation and /stats.
+    telemetry: bool = True              # serving telemetry (DESIGN.md §6.6):
+    # metric registry + request spans + tick phase timing + the retrace
+    # detector. Observation-only — tokens are byte-identical on or off
+    # (the parity wall in tests/test_telemetry.py); off removes even the
+    # per-tick perf_counter reads for overhead-sensitive benchmarking.
+    trace_events: int = 0               # capacity of the structured
+    # trace-event ring (submit/admit/preempt/resume/finish/retrace);
+    # 0 disables the ring. Drained by the CLI's --trace-log sink.
 
     def __post_init__(self):
         """Fail fast on an impossible engine shape.
@@ -465,6 +478,16 @@ class ServeConfig:
         if self.enc_cache_entries < 1:
             raise ValueError(
                 f"enc_cache_entries must be >= 1: {self.enc_cache_entries}"
+            )
+        if self.trace_events < 0:
+            raise ValueError(
+                f"trace_events must be >= 0 (0 disables the ring): "
+                f"{self.trace_events}"
+            )
+        if self.trace_events and not self.telemetry:
+            raise ValueError(
+                "trace_events requires telemetry=True: the trace ring is "
+                "emitted from the telemetry call sites"
             )
         from repro.kernels.tiled_xnor import COMPUTE_PATHS
 
@@ -629,6 +652,23 @@ class BatchedEngine:
         self._aot: Dict[str, object] = {}
         self.steps = 0
 
+        # Serving telemetry (DESIGN.md §6.6). Strictly observation-only:
+        # every call site below is a counter bump, a span transition, or
+        # a perf_counter read — nothing feeds back into scheduling or
+        # sampling, so tokens are byte-identical with tel on or off.
+        self.tel: Optional[EngineTelemetry] = (
+            EngineTelemetry(trace_events=cfg.trace_events).bind_engine(self)
+            if cfg.telemetry else None
+        )
+        self._tick_phases: Dict[str, float] = {}
+        # Retrace detector: armed by warmup(). Compares the global
+        # TRACE_COUNTS sum across ONE tick (this thread runs the whole
+        # tick, so any delta is attributable to this engine's tick fns),
+        # not against a warmup-time snapshot — another engine warming up
+        # on this process must not trip a false positive here.
+        self._retrace_armed = False
+        self._retrace_warned = False
+
     def _mesh_ctx(self):
         """Sharding-rule context for traces/executions; no-op without mesh."""
         if self.mesh is None:
@@ -664,8 +704,6 @@ class BatchedEngine:
         naming the entry point and its scheduler-side shapes when a
         lower/compile fails — a warmup that silently half-succeeds would
         just move the first trace stall back into serving."""
-        import time
-
         cfg = self.cfg
         active = jnp.asarray(np.zeros((cfg.n_slots,), bool))
         counts = jnp.asarray(self._counts)
@@ -733,6 +771,10 @@ class BatchedEngine:
                         f"-leaf snapshot): {e}"
                     ) from e
                 timings["restore_slot"] = time.perf_counter() - t0
+        # arm the steady-state retrace detector: after AOT warmup every
+        # tick must execute compiled code only, so any TRACE_COUNTS bump
+        # inside a subsequent step() is a compile stall worth flagging
+        self._retrace_armed = True
         return timings
 
     @property
@@ -791,6 +833,8 @@ class BatchedEngine:
         if (self.cfg.max_queued is not None
                 and self._queue.qsize() >= self.cfg.max_queued):
             self._stats["rejected"] += 1
+            if self.tel is not None:
+                self.tel.rejected.inc()
             raise AdmissionQueueFull(self._queue.qsize(),
                                      self.cfg.max_queued)
         req = Request(
@@ -802,6 +846,13 @@ class BatchedEngine:
             frames=frames,
             enc_digest=enc_digest,
         )
+        if self.tel is not None:
+            req.span = RequestSpan(req.rid, time.monotonic())
+            self.tel.submitted.inc()
+            if self.tel.ring is not None:
+                self.tel.ring.emit(
+                    "submit", rid=req.rid, prompt_tokens=len(prompt),
+                    priority=cls)
         self._queue.put(req)
         return req
 
@@ -844,9 +895,26 @@ class BatchedEngine:
                     self._snaps[slot], now=self.steps,
                 )
         self._release_slot(slot)
+        self._finish_telemetry(req)
         if self.on_finish is not None:
             self.on_finish(req)
         return True
+
+    def _finish_telemetry(self, req: Request):
+        """Close a request's span and record its end-of-life metrics —
+        the shared telemetry tail of retirement and abort (idempotent:
+        an abort racing a natural finish observes once)."""
+        tel, span = self.tel, req.span
+        if tel is None or span is None or span.finish_t is not None:
+            return
+        span.finish(time.monotonic(), req.finish_reason)
+        tel.finished.labels(reason=req.finish_reason).inc()
+        tel.e2e.observe(span.wall)
+        if tel.ring is not None:
+            tel.ring.emit(
+                "finish", rid=req.rid, reason=req.finish_reason,
+                tokens=len(req.output), wall_s=round(span.wall, 6),
+                phases={k: round(v, 6) for k, v in span.phases.items()})
 
     def _release_slot(self, slot: int):
         """Return a slot (and every page it maps) to the free pools: the
@@ -905,6 +973,7 @@ class BatchedEngine:
                     break
         # a queued (never-admitted) request drops out of the waiting set
         # on the next prune (the done flag set above is the tombstone)
+        self._finish_telemetry(req)
         if self.on_finish is not None:
             self.on_finish(req)
         return True
@@ -1005,6 +1074,18 @@ class BatchedEngine:
             self._xn_mapped[slot] = 0
             self._phase[slot] = ENCODE
             self._try_enc_cache(slot, req)
+        if self.tel is not None and req.span is not None:
+            now = time.monotonic()
+            # phase strings are shared between the engine's phase machine
+            # and the span vocabulary, so the slot's resolved phase (an
+            # enc-cache hit lands straight in PREFILL) names the interval
+            req.span.mark_admit(now, self._phase[slot])
+            self.tel.queue_wait.observe(now - req.span.submit_t)
+            if self.tel.ring is not None:
+                self.tel.ring.emit(
+                    "admit", rid=req.rid, slot=slot,
+                    prefix_hit_tokens=boundary,
+                    phase=self._phase[slot])
 
     def _try_enc_cache(self, slot: int, req: Request) -> bool:
         """Warm-source admission: map a cached encoder output's page run
@@ -1021,6 +1102,11 @@ class BatchedEngine:
         self._phase[slot] = PREFILL
         req.enc_reused = True
         self._stats["enc_cache_hits"] += 1
+        # a LATE warm hit (resolved by step(), not at admission) ends the
+        # span's encode interval; at admission the span has not marked
+        # admit yet and _admit names the resolved phase itself
+        if req.span is not None and req.span.admit_t is not None:
+            req.span.to_phase(PREFILL, time.monotonic())
         return True
 
     # ---- scheduling under pressure -----------------------------------
@@ -1092,6 +1178,14 @@ class BatchedEngine:
             self._stats["preempts"] += 1
             self._stats["preempted_tokens"] += parked.length
             self._preempted_since_tick = True
+            if self.tel is not None:
+                self.tel.preempts.inc()
+                if req.span is not None:
+                    req.span.to_phase(PARKED, time.monotonic())
+                if self.tel.ring is not None:
+                    self.tel.ring.emit(
+                        "preempt", rid=req.rid, slot=slot,
+                        phase=parked.phase, tokens_kept=parked.length)
         return True
 
     def _resume(self, slot: int, parked: PreemptedState):
@@ -1136,6 +1230,13 @@ class BatchedEngine:
         self._counts[slot] = parked.count
         self.tokens = self.tokens.at[slot, 0].set(parked.last_token)
         self._stats["resumes"] += 1
+        if self.tel is not None:
+            self.tel.resumes.inc()
+            if req.span is not None:
+                req.span.to_phase(parked.phase, time.monotonic())
+            if self.tel.ring is not None:
+                self.tel.ring.emit("resume", rid=req.rid, slot=slot,
+                                   phase=parked.phase)
 
     def _rank(self, req: Request) -> int:
         return PRIORITY_RANKS[req.priority]
@@ -1324,6 +1425,10 @@ class BatchedEngine:
         )
         self._phase[slot] = PREFILL
         self._stats["encode_ticks"] += 1
+        if self.tel is not None:
+            self.tel.encode_ticks.inc()
+            if req.span is not None:
+                req.span.to_phase(PREFILL, time.monotonic())
         if self.enc_cache is not None:
             pages = [int(self._xptab[slot, i]) for i in range(need)]
             self.enc_cache.put(req.enc_digest, pages, enc_len,
@@ -1390,6 +1495,7 @@ class BatchedEngine:
 
     def _run_extend(self, takes: Dict[int, int]):
         cfg = self.cfg
+        tel = self.tel
         block = np.zeros((cfg.n_slots, cfg.chunk_tokens), np.int32)
         n_new = np.zeros((cfg.n_slots,), np.int32)
         for slot, take in takes.items():
@@ -1397,6 +1503,7 @@ class BatchedEngine:
             block[slot, :take] = self._live[slot].prompt[off:off + take]
             n_new[slot] = take
             self._ensure_pages(slot, off + take - 1)
+        t0 = time.perf_counter() if tel is not None else 0.0
         toks, self.caches, self.lengths = self._aot.get(
             "extend_tick", self._extend)(
             self.params, jnp.asarray(block), self.caches, self.lengths,
@@ -1404,6 +1511,16 @@ class BatchedEngine:
             self._slot_keys, jnp.asarray(self._counts),
             jnp.asarray(self._ptab), *self._cross_extra(),
         )
+        if tel is not None:
+            # bound the device phase: async dispatch means the call above
+            # returned before the computation finished; waiting on the
+            # sampled tokens (needed on host immediately below anyway)
+            # splits device compute from host bookkeeping without
+            # changing any value
+            jax.block_until_ready(toks)
+            t1 = time.perf_counter()
+            self._tick_phases["prefill_device"] = t1 - t0
+            tel.prefill_tokens.inc(sum(takes.values()))
         toks_host = np.asarray(toks)
         for slot, take in takes.items():
             req = self._live[slot]
@@ -1431,12 +1548,22 @@ class BatchedEngine:
                     acc[1] += 1
                 self._counts[slot] += 1
                 self._stats["tokens_out"] += 1
+                if tel is not None:
+                    tel.tokens.inc()
+                    if req.span is not None:
+                        now = time.monotonic()
+                        req.span.to_phase(DECODE, now)
+                        if req.span.token(now):
+                            tel.ttft.observe(now - req.span.submit_t)
                 self.tokens = self.tokens.at[slot, 0].set(tok)
                 if self.on_token is not None:
                     self.on_token(req, tok)
                 self._maybe_retire(slot, req, tok)
+        if tel is not None:
+            self._tick_phases["prefill_host"] = time.perf_counter() - t1
 
     def _run_decode(self, decoding: List[int]):
+        tel = self.tel
         active = np.zeros((self.cfg.n_slots,), bool)
         active[decoding] = True
         for slot in decoding:
@@ -1444,6 +1571,7 @@ class BatchedEngine:
             pos = len(req.prompt) + len(req.output) - 1  # row this step writes
             if pos < self.cfg.max_len:
                 self._ensure_pages(slot, pos)
+        t0 = time.perf_counter() if tel is not None else 0.0
         nxt, self.caches, self.lengths = self._aot.get(
             "decode_tick", self._decode)(
             self.params, self.tokens, self.caches, self.lengths,
@@ -1451,6 +1579,10 @@ class BatchedEngine:
             self._slot_keys, jnp.asarray(self._counts),
             jnp.asarray(self._ptab), *self._cross_extra(),
         )
+        if tel is not None:
+            jax.block_until_ready(nxt)
+            t1 = time.perf_counter()
+            self._tick_phases["decode_device"] = t1 - t0
         nxt_host = np.asarray(nxt)
         self.tokens = nxt[:, None]
         for slot in decoding:
@@ -1460,9 +1592,20 @@ class BatchedEngine:
             req.token_steps.append(self.steps)
             self._counts[slot] += 1
             self._stats["tokens_out"] += 1
+            if tel is not None:
+                tel.tokens.inc()
+                if req.span is not None:
+                    now = time.monotonic()
+                    prev = req.span.last_token_t
+                    if req.span.token(now):
+                        tel.ttft.observe(now - req.span.submit_t)
+                    else:
+                        tel.itl.observe(now - prev)
             if self.on_token is not None:
                 self.on_token(req, tok)
             self._maybe_retire(slot, req, tok)
+        if tel is not None:
+            self._tick_phases["decode_host"] = time.perf_counter() - t1
 
     def step(self):
         """One engine tick: preemption pass + admissions/resumes +
@@ -1472,20 +1615,35 @@ class BatchedEngine:
         emits its first token on the tick its final chunk lands. A slot
         preempted this tick emits nothing — exactly the cost the
         preempt-free tick rate reports."""
+        tel = self.tel
         with self._mesh_ctx():
+            if tel is not None:
+                t_tick = time.perf_counter()
+                trace_pre = (sum(TRACE_COUNTS.values())
+                             if self._retrace_armed else 0)
             if self.cfg.preempt:
                 self._preempt_pass()
+            if tel is not None:
+                t_adm = time.perf_counter()
+                self._tick_phases["preempt"] = t_adm - t_tick
             self._admissions()
             depth = self._queue.qsize()
             if depth > self._stats["peak_queue_depth"]:
                 self._stats["peak_queue_depth"] = depth
+            if tel is not None:
+                self._tick_phases["admission"] = time.perf_counter() - t_adm
             if not self._live:
+                # idle tick: no jitted call ran, nothing to observe (an
+                # empty-engine poll loop must not drown the tick
+                # histograms in zero-work samples)
+                self._tick_phases.clear()
                 return
             # ENCODE pass (cross models): warm-cache late hits resolve in
             # O(1); at most ONE padded encoder call actually runs per tick
             # and its cost is billed against the prefill budget below.
             enc_charge = 0
             if self._cross:
+                t_enc = time.perf_counter() if tel is not None else 0.0
                 for s in list(self._admit_order):
                     if self._phase[s] != ENCODE:
                         continue
@@ -1493,6 +1651,9 @@ class BatchedEngine:
                         continue
                     enc_charge = self._run_encode(s)
                     break
+                if tel is not None and enc_charge:
+                    self._tick_phases["encode"] = (
+                        time.perf_counter() - t_enc)
             decoding = [s for s in range(self.cfg.n_slots)
                         if self._phase[s] == DECODE]
             dec_reqs = [(self._live[s], len(self._live[s].output))
@@ -1513,7 +1674,40 @@ class BatchedEngine:
                     and all(len(r.output) == n + 1 for r, n in dec_reqs)):
                 self._stats["preempt_free_ticks"] += 1
             self._preempted_since_tick = False
+            if tel is not None:
+                self._observe_tick(t_tick, trace_pre)
         self.steps += 1
+
+    def _observe_tick(self, t_tick: float, trace_pre: int):
+        """End-of-tick telemetry: the tick + per-phase histograms, then
+        the steady-state retrace check. Runs only with telemetry on."""
+        tel = self.tel
+        tel.tick.observe(time.perf_counter() - t_tick)
+        for phase, dt in self._tick_phases.items():
+            tel.tick_phase[phase].observe(dt)
+        self._tick_phases.clear()
+        if not self._retrace_armed:
+            return
+        delta = sum(TRACE_COUNTS.values()) - trace_pre
+        if delta <= 0:
+            return
+        # a tick function's Python body ran DURING this tick — after AOT
+        # warmup that means jax compiled something mid-serving (shape
+        # drift, a cache miss, an un-warmed entry point): exactly the
+        # stall class warmup() exists to prevent. Count every retrace,
+        # warn once per engine.
+        tel.retraces.inc(delta)
+        if tel.ring is not None:
+            tel.ring.emit("retrace", tick=self.steps, n_traces=delta)
+        if not self._retrace_warned:
+            self._retrace_warned = True
+            warnings.warn(
+                f"serve engine re-traced {delta} tick function(s) at tick "
+                f"{self.steps} after AOT warmup — a compile stall is "
+                f"hiding in the serving path (see serve_retraces_total)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
 
     def stats(self) -> Dict[str, object]:
         """Engine health counters for the serve CLI / HTTP ``/stats``
@@ -1565,6 +1759,12 @@ class BatchedEngine:
             cls: n for cls, (_, n) in sorted(self._class_ttft.items())
         }
         s["aot_warm"] = self.aot_warm
+        if self.tel is not None:
+            # wall-clock latency quantiles from the telemetry histograms
+            # (bucket-interpolated, ms): the /stats mirror of what
+            # /metrics exposes raw — absent entirely with telemetry off
+            s["latency"] = self.tel.latency_summary()
+            s["retraces"] = self.tel.retraces.get()
         return s
 
     def run_until_drained(self, max_steps: int = 10_000, on_tick=None) -> int:

@@ -85,6 +85,13 @@ class KVPool:
     def used_pages(self) -> int:
         return self.n_pages - len(self._free)
 
+    @property
+    def utilization(self) -> float:
+        """Referenced fraction of the pool in [0, 1] — the pressure
+        number the telemetry gauge (serve_pool_utilization) samples at
+        scrape time."""
+        return (self.n_pages - len(self._free)) / self.n_pages
+
     def check(self) -> None:
         """Invariants the property tests pin: refcounts never negative,
         free list and referenced pages exactly partition the pool."""

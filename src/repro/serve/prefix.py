@@ -68,6 +68,13 @@ class PrefixTrie:
         self.root = PrefixNode(key=(), parent=None, depth=0)
         self._nodes: List[PrefixNode] = []     # every non-root node
         self.evictions = 0
+        # admission-lookup outcome counters: a ``match`` that pinned at
+        # least one page is a hit. Monotonic — the telemetry registry
+        # exposes them as fn-backed counters (serve_prefix_lookups_total)
+        # rather than double-counting engine-side. ``probe`` is advisory
+        # and deliberately uncounted (it runs per-candidate per-tick).
+        self.hits = 0
+        self.misses = 0
 
     def __len__(self) -> int:
         return len(self._nodes)
@@ -97,6 +104,10 @@ class PrefixTrie:
         while best >= 0 and require_snapshot and path[best].snapshot is None:
             best -= 1
         path = path[: best + 1]
+        if path:
+            self.hits += 1
+        else:
+            self.misses += 1
         for n in path:
             n.last_used = now
         return path

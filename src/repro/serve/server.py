@@ -14,9 +14,13 @@ Dataflow (DESIGN.md §6.3):
     SSE writer ◀── bounded per-stream buffer
 
 * The HTTP layer is plain asyncio streams — no framework dependency; the
-  protocol surface is three routes: ``POST /generate`` (JSON body →
+  protocol surface is four routes: ``POST /generate`` (JSON body →
   SSE stream of token events, or one JSON reply with ``stream: false``),
-  ``GET /stats`` (engine + server counters), ``GET /healthz``.
+  ``GET /stats`` (engine + server counters, plus histogram quantiles
+  when telemetry is on), ``GET /metrics`` (the engine's telemetry
+  registry in Prometheus text exposition format, plus the HTTP-side
+  families this module registers into the same registry), and
+  ``GET /healthz``.
   The body's optional ``"priority"`` field ("interactive" | "batch")
   rides through ``SamplingParams.from_json`` into the engine's
   admission queue: under ``ServeConfig.priorities``/``preempt`` an
@@ -55,11 +59,16 @@ import json
 import queue
 import socket
 import threading
+import time
 from typing import Callable, Dict, Optional
 
 from repro.serve.detok import DetokenizeWorker, PieceCodec
 from repro.serve.engine import AdmissionQueueFull, BatchedEngine, Request
 from repro.serve.sampling import SamplingParams
+
+# the /metrics histogram's route label vocabulary — anything else maps to
+# "other" so a path-scanning client cannot mint unbounded label children
+_ROUTES = ("/generate", "/stats", "/metrics", "/healthz")
 
 SLOW_DISCONNECT = "disconnect"
 SLOW_DROP = "drop"
@@ -141,7 +150,45 @@ class EngineServer:
         self._streams: Dict[int, TokenStream] = {}
         self._closed = False
         self.counters = {"streams_opened": 0, "slow_disconnects": 0,
-                         "http_rejects": 0, "client_aborts": 0}
+                         "http_rejects": 0, "client_aborts": 0,
+                         "sse_dropped_events": 0}
+        # HTTP-side metric families, registered into the ENGINE's
+        # registry so one /metrics scrape covers the whole process.
+        # fn-backed counters read the dict above — the loop thread keeps
+        # its single-writer bookkeeping, the registry just exposes it.
+        self._http_hist = None
+        tel = engine.tel
+        if tel is not None:
+            r = tel.registry
+            self._http_hist = r.histogram(
+                "serve_http_request_seconds",
+                "HTTP request handling, accept to close, by route",
+                labels=("route",))
+            for key, name, help_ in (
+                ("streams_opened", "serve_streams_opened_total",
+                 "Token streams opened by POST /generate"),
+                ("slow_disconnects", "serve_slow_disconnects_total",
+                 "Streams ended by the slow-consumer policy"),
+                ("http_rejects", "serve_http_rejects_total",
+                 "HTTP 429 responses from admission backpressure"),
+                ("client_aborts", "serve_client_aborts_total",
+                 "Requests aborted because the client disconnected"),
+                ("sse_dropped_events", "serve_sse_dropped_events_total",
+                 "Token events shed by bounded stream buffers"),
+            ):
+                r.counter(name, help_,
+                          fn=lambda k=key: self.counters[k])
+            r.gauge("serve_open_streams", "Live token streams",
+                    fn=lambda: len(self._streams))
+            r.gauge("serve_detok_backlog",
+                    "Tokens queued for detokenization",
+                    fn=lambda: self.detok.depth)
+            r.gauge("serve_detok_backlog_peak",
+                    "High-water mark of the detokenize backlog",
+                    fn=lambda: self.detok.peak_depth)
+        # throughput state for the periodic stats line (tokens at the
+        # previous stats_line() call -> tok/s over the interval)
+        self._last_stats = (time.monotonic(), 0)
 
         # engine thread machinery
         self._stop = False
@@ -240,12 +287,15 @@ class EngineServer:
 
     def _deliver(self, sid, event: dict):
         stream = self._streams.get(sid)
-        if stream is not None:
-            stream.push(event)
+        if stream is not None and not stream.push(event):
+            # bounded-buffer shed (push keeps the final event always)
+            self.counters["sse_dropped_events"] += 1
 
     # ---- HTTP ---------------------------------------------------------
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter):
+        t0 = time.perf_counter()
+        route = "other"
         try:
             if self.cfg.write_high_water is not None:
                 writer.transport.set_write_buffer_limits(
@@ -275,10 +325,13 @@ class EngineServer:
             if n:
                 body = await reader.readexactly(n)
 
+            route = path if path in _ROUTES else "other"
             if method == "GET" and path == "/healthz":
                 await self._respond(writer, 200, {"ok": True})
             elif method == "GET" and path == "/stats":
                 await self._respond(writer, 200, self.stats())
+            elif method == "GET" and path == "/metrics":
+                await self._metrics(writer)
             elif method == "POST" and path == "/generate":
                 await self._generate(writer, body)
             else:
@@ -287,11 +340,37 @@ class EngineServer:
         except (asyncio.IncompleteReadError, ConnectionError):
             pass
         finally:
+            if self._http_hist is not None:
+                # for SSE this spans the whole stream, not just the
+                # headers — /generate's histogram child reads as
+                # "connection lifetime", the GET routes as true latency
+                self._http_hist.labels(route=route).observe(
+                    time.perf_counter() - t0)
             try:
                 writer.close()
                 await writer.wait_closed()
             except (ConnectionError, RuntimeError):
                 pass
+
+    async def _metrics(self, writer):
+        """Prometheus text exposition of the shared registry. A typed
+        404 with telemetry off: scraping a deliberately dark engine is a
+        config error worth a loud answer, not an empty page."""
+        tel = self.engine.tel
+        if tel is None:
+            await self._respond(writer, 404, {
+                "error": "telemetry_disabled",
+                "detail": "engine built with ServeConfig(telemetry=False)"})
+            return
+        data = tel.registry.render().encode()
+        with _suppress_conn():
+            writer.write(
+                f"HTTP/1.1 200 OK\r\n"
+                f"Content-Type: text/plain; version=0.0.4; "
+                f"charset=utf-8\r\n"
+                f"Content-Length: {len(data)}\r\n"
+                f"Connection: close\r\n\r\n".encode() + data)
+            await writer.drain()
 
     async def _generate(self, writer, body: bytes):
         try:
@@ -407,8 +486,63 @@ class EngineServer:
         s = self.engine.stats()
         s.update(self.counters)
         s["detok_backlog"] = self.detok.depth
+        s["detok_backlog_peak"] = self.detok.peak_depth
         s["open_streams"] = len(self._streams)
+        tel = self.engine.tel
+        if tel is not None and self._http_hist is not None:
+            # the engine already contributed s["latency"]; fold the HTTP
+            # route histograms in beside it (ms, bucket-interpolated)
+            s["latency"]["http_ms"] = {
+                "/".join(lv for _, lv in child.labels) or "all": {
+                    "p50": _ms(child.quantile(0.50)),
+                    "p99": _ms(child.quantile(0.99)),
+                    "count": child.count,
+                }
+                for child in self._http_hist.children.values()
+            }
         return s
+
+    def stats_line(self) -> str:
+        """One-line steady-state report for the CLI's ``--stats-interval``
+        loop, sourced from the telemetry registry (value_of reads the
+        same children /metrics renders). Throughput is measured over the
+        window since the previous call."""
+        tel = self.engine.tel
+        now = time.monotonic()
+        t_prev, tok_prev = self._last_stats
+        if tel is not None:
+            tokens = tel.registry.value_of("serve_tokens_total") or 0
+        else:                            # registry off: engine counters
+            tokens = self.engine.stats()["tokens_out"]
+        self._last_stats = (now, tokens)
+        rate = (tokens - tok_prev) / max(now - t_prev, 1e-9)
+        s = self.engine.stats()
+        pools = " ".join(
+            f"{fam}={f['utilization']:.0%}"
+            for fam, f in sorted(s.get("cache_families", {}).items())
+        ) or "n/a"
+        line = (
+            f"tok/s={rate:7.1f} tokens={tokens} "
+            f"live={s['live_slots']}/{self.engine.cfg.n_slots} "
+            f"parked={s['parked']} queued={s['queue_depth']} "
+            f"streams={len(self._streams)} pool[{pools}] "
+            f"prefix_hit={s['hit_rate']:.0%} "
+            f"detok_backlog={self.detok.depth}"
+        )
+        if tel is not None:
+            lat = s["latency"]
+            p50 = lat["ttft_ms"]["p50"]
+            itl = lat["itl_ms"]["p50"]
+            line += (f" ttft_p50={p50 if p50 is not None else '-'}ms"
+                     f" itl_p50={itl if itl is not None else '-'}ms")
+            retr = s.get("retraces", 0)
+            if retr:
+                line += f" RETRACES={retr}"
+        return line
+
+
+def _ms(v: Optional[float]) -> Optional[float]:
+    return None if v is None else round(1e3 * v, 3)
 
 
 def _sse(event: dict) -> bytes:
@@ -432,13 +566,16 @@ class _suppress_conn:
 
 async def run_server(engine: BatchedEngine, cfg: ServerConfig = None,
                      *, aot: bool = True, codec=None,
-                     ready: Optional[Callable] = None):
+                     ready: Optional[Callable] = None,
+                     stats_interval: float = 0.0):
     """Boot and serve until cancelled or signalled (the CLI entry point).
 
     SIGINT/SIGTERM are turned into a graceful stop via the loop's signal
     handler — a raw KeyboardInterrupt would otherwise be raised into
     whatever handler task happens to be running and leak a traceback
-    mid-``writer.write``."""
+    mid-``writer.write``. ``stats_interval > 0`` prints the one-line
+    telemetry report (``EngineServer.stats_line``) every that many
+    seconds for the CLI's ``--stats-interval``."""
     import signal
 
     srv = EngineServer(engine, cfg, codec=codec)
@@ -456,15 +593,23 @@ async def run_server(engine: BatchedEngine, cfg: ServerConfig = None,
             pass  # non-main thread / platform without signal support
     serving = asyncio.ensure_future(srv.serve_forever())
     waiter = asyncio.ensure_future(stop.wait())
+    tasks = [serving, waiter]
+    if stats_interval > 0:
+        async def _stats_loop():
+            while True:
+                await asyncio.sleep(stats_interval)
+                print(f"[stats] {srv.stats_line()}", flush=True)
+
+        tasks.append(asyncio.ensure_future(_stats_loop()))
     try:
         await asyncio.wait({serving, waiter},
                            return_when=asyncio.FIRST_COMPLETED)
     except asyncio.CancelledError:
         pass
     finally:
-        for task in (serving, waiter):
+        for task in tasks:
             task.cancel()
-        await asyncio.gather(serving, waiter, return_exceptions=True)
+        await asyncio.gather(*tasks, return_exceptions=True)
         for sig in hooked:
             loop.remove_signal_handler(sig)
         await srv.close()

@@ -33,7 +33,13 @@ import pytest
 from repro.configs import build_model, get_config
 from repro.nn import module as mod
 from repro.nn.context import SERVE, TRAIN, ModelContext
-from repro.serve.client import _read_head, _request_bytes, request_json, sse_generate
+from repro.serve.client import (
+    _read_head,
+    _request_bytes,
+    request_json,
+    request_text,
+    sse_generate,
+)
 from repro.serve.detok import PieceCodec, decode_all
 from repro.serve.engine import BatchedEngine, ServeConfig
 from repro.serve.sampling import SamplingParams
@@ -398,11 +404,13 @@ class TestServeCLI:
         env.update({k: v for k, v in os.environ.items()
                     if k.startswith(("JAX_", "XLA_"))})
         env.setdefault("JAX_PLATFORMS", "cpu")
+        trace_log = tmp_path / "trace.jsonl"
         proc = subprocess.Popen(
             [sys.executable, "-m", "repro.launch.serve", "--arch",
              "granite-8b", "--reduced", "--serve", "--port", "0",
              "--slots", "2", "--max-len", "48", "--chunk-tokens", "16",
-             "--page-tokens", "8"],
+             "--page-tokens", "8", "--stats-interval", "0.5",
+             "--trace-log", str(trace_log)],
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
             cwd="/root/repo", env=env, text=True)
         try:
@@ -424,12 +432,33 @@ class TestServeCLI:
                 st, ev, _ = await sse_generate(HOST, port, {
                     "prompt": [1, 2, 3], "max_tokens": 4})
                 stats = await request_json(HOST, port, "GET", "/stats")
-                return st, ev, stats
-            st, ev, (_, stats) = asyncio.run(go())
+                metrics = await request_text(HOST, port, "GET", "/metrics")
+                return st, ev, stats, metrics
+            st, ev, (_, stats), (mst, mtext) = asyncio.run(go())
             assert st == 200
             assert len([e for e in ev if "token" in e]) == 4
             assert ev[-1].get("done")
             assert stats["aot_warm"] is True
+            # mid-run /metrics scrape: the exposition is live and the tick
+            # histogram actually observed the work we just streamed
+            assert mst == 200
+            for name in ("serve_requests_submitted_total 1",
+                         "serve_tokens_total 4",
+                         "# TYPE serve_tick_seconds histogram",
+                         "serve_http_request_seconds_count"):
+                assert name in mtext, f"missing from /metrics: {name!r}"
+            tick_count = int([l for l in mtext.splitlines()
+                              if l.startswith("serve_tick_seconds_count")
+                              ][0].split()[-1])
+            assert tick_count > 0
+            # --stats-interval: the periodic one-line report is printing
+            t0 = time.time()
+            stats_line = None
+            while time.time() - t0 < 30 and stats_line is None:
+                line = proc.stdout.readline()
+                if line.startswith("[stats]"):
+                    stats_line = line
+            assert stats_line and "tok/s" in stats_line, stats_line
             proc.send_signal(signal.SIGINT)
             out, _ = proc.communicate(timeout=60)
         finally:
@@ -439,3 +468,9 @@ class TestServeCLI:
         assert proc.returncode == 0
         assert "server closed" in out
         assert "Traceback" not in out and "KeyboardInterrupt" not in out
+        # --trace-log flushed the ring on shutdown: lifecycle events for
+        # the one request we streamed
+        events = [json.loads(l)["event"]
+                  for l in trace_log.read_text().splitlines()]
+        assert events.count("submit") == events.count("finish") == 1
+        assert "retrace" not in events
